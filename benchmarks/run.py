@@ -1,0 +1,229 @@
+"""Benchmark harness — one function per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the table's headline
+metric). Heavy artifacts (the CNN HQP experiment, the dry-run roofline cells)
+are read from experiments/ when present; otherwise a reduced inline version
+runs so this module is always executable on a bare CPU container.
+
+  Table I   (MobileNetV3 HQP vs Q8 vs P50)  -> bench_table1_mobilenetv3
+  Table II  (ResNet-18 HQP vs Q8)           -> bench_table2_resnet18
+  SIII-C    (C_HQP vs C_QAT complexity)     -> bench_complexity_analysis
+  SV-C      (layer-wise non-uniform theta)  -> bench_layerwise_sparsity
+  SV-E      (energy ratio == speedup)       -> bench_energy
+  Fig. 2/3 analogue (LM fleet)              -> bench_lm_hqp_serving
+  kernels                                   -> bench_kernels
+  SRoofline                                 -> bench_roofline_table
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+REPRO_DIR = ROOT / "experiments" / "repro"
+DRYRUN_DIR = ROOT / "experiments" / "dryrun"
+
+Row = Tuple[str, float, str]
+
+
+def _load_or_run_cnn(arch: str) -> dict:
+    f = REPRO_DIR / f"{arch}.json"
+    if f.exists():
+        return json.loads(f.read_text())
+    from repro.repro_exp.cnn_experiment import run_experiment
+    table = run_experiment(arch, train_steps=150, n_train=2000, n_val=800,
+                           n_calib=400, log=lambda s: None)
+    REPRO_DIR.mkdir(parents=True, exist_ok=True)
+    f.write_text(json.dumps(table, indent=1))
+    return table
+
+
+def _cnn_rows(table: dict, tag: str) -> List[Row]:
+    rows = []
+    for r in table["rows"]:
+        sp_model = table["speedups_modeled"][r["method"]]
+        name = r["method"].replace(" ", "_").replace("(", "").replace(")", "")
+        rows.append((
+            f"{tag}/{name}",
+            r["measured_ms"] * 1000,
+            f"speedup={sp_model:.2f}x size_red={r['size_reduction']:.0%} "
+            f"drop={r['drop']*100:.2f}pct theta={r['theta']:.0%} "
+            f"compliant={r['compliant']}"))
+    return rows
+
+
+def bench_table1_mobilenetv3() -> List[Row]:
+    return _cnn_rows(_load_or_run_cnn("mobilenetv3s"), "table1_mbv3")
+
+
+def bench_table2_resnet18() -> List[Row]:
+    return _cnn_rows(_load_or_run_cnn("resnet18"), "table2_resnet18")
+
+
+def bench_complexity_analysis() -> List[Row]:
+    """C_HQP = N_calib*C_grad + T_prune*N_val*C_inf  vs  C_QAT (SIII-C)."""
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_cnn_config
+    from repro.models import cnn
+    from repro.repro_exp.cnn_experiment import ce_loss
+    cfg = dataclasses.replace(get_cnn_config("mobilenetv3s"), width_mult=0.5)
+    v = cnn.cnn_init(jax.random.PRNGKey(0), cfg)
+    x = {"image": jnp.zeros((100, 32, 32, 3)),
+         "label": jnp.zeros((100,), jnp.int32)}
+    grad = jax.jit(jax.grad(lambda p, b: ce_loss(
+        cfg, {"params": p, "stats": v["stats"]}, b)[0]))
+    inf = jax.jit(lambda vv, b: cnn.cnn_apply(cfg, vv, b["image"])[0])
+    grad(v["params"], x)
+    inf(v, x)
+
+    def t(f, *a):
+        ts = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(*a))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    c_grad, c_inf = t(grad, v["params"], x), t(inf, v, x)
+    n_calib, n_val, n_train, t_prune, epochs = 5000, 5000, 1_281_167, 45, 5
+    c_hqp = n_calib / 100 * c_grad + t_prune * (n_val / 100) * c_inf
+    c_qat = epochs * n_train / 100 * c_grad
+    return [
+        ("complexity/C_grad_per_100", c_grad * 1e6, "forward-backward"),
+        ("complexity/C_inf_per_100", c_inf * 1e6, "inference"),
+        ("complexity/C_HQP", c_hqp * 1e6, f"{c_hqp:.0f}s-equivalent"),
+        ("complexity/C_QAT", c_qat * 1e6,
+         f"QAT/HQP={c_qat / c_hqp:.0f}x (paper: orders of magnitude)"),
+    ]
+
+
+def bench_layerwise_sparsity() -> List[Row]:
+    """SV-C: non-uniform theta across depth."""
+    table = _load_or_run_cnn("mobilenetv3s")
+    fam = table["hqp_sparsity_by_family"]
+    thetas = {k: v["theta"] for k, v in fam.items()}
+    if not thetas:
+        return [("layerwise/none", 0.0, "no families")]
+    mx = max(thetas, key=thetas.get)
+    mn = min(thetas, key=thetas.get)
+    return [
+        ("layerwise/max_theta", 0.0, f"{mx}={thetas[mx]:.0%}"),
+        ("layerwise/min_theta", 0.0, f"{mn}={thetas[mn]:.0%}"),
+        ("layerwise/spread", 0.0,
+         f"nonuniform={thetas[mx] - thetas[mn]:.0%}"),
+    ]
+
+
+def bench_energy() -> List[Row]:
+    """SV-E: E = P*L  =>  energy ratio == speedup (identity check)."""
+    table = _load_or_run_cnn("mobilenetv3s")
+    sp = table["speedups_modeled"]["Proposed HQP"]
+    return [("energy/ratio_equals_speedup", 0.0,
+             f"E_FP32/E_HQP={sp:.2f}x==speedup")]
+
+
+def bench_lm_hqp_serving() -> List[Row]:
+    """LM-fleet analogue of Tables I/II: decode us/token + size reduction."""
+    import dataclasses as dc
+    import jax
+    import jax.numpy as jnp
+    from repro import configs
+    from repro.core.pruning import param_bytes
+    from repro.core.quantization import quantize_lm_params
+    from repro.models import lm
+    from repro.sharding.ctx import default_ctx
+    cfg = configs.get_smoke_config("granite-3-8b")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rows = []
+    for name, p, qkv in [("bf16", params, False),
+                         ("hqp_int8", quantize_lm_params(params), True)]:
+        ctx = dc.replace(default_ctx(), quantized_kv=qkv)
+        state = lm.init_decode_state(cfg, 4, 64, ctx)
+        tok = jnp.zeros((4, 1), jnp.int32)
+        step = jax.jit(lambda pp, s, t: lm.decode_step(pp, cfg, s, t, ctx))
+        logits, state = step(p, state, tok)
+        jax.block_until_ready(logits)
+        ts = []
+        for _ in range(10):
+            t0 = time.perf_counter()
+            logits, state = step(p, state, tok)
+            jax.block_until_ready(logits)
+            ts.append(time.perf_counter() - t0)
+        rows.append((f"lm_serving/{name}", float(np.median(ts)) * 1e6,
+                     f"size={param_bytes(p)/1e6:.1f}MB"))
+    return rows
+
+
+def bench_kernels() -> List[Row]:
+    """Kernel micro-bench: bf16 vs W8A8 matmul on the XLA path."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    rows = []
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256, 1024), jnp.bfloat16)
+    w = jax.random.normal(key, (1024, 1024), jnp.bfloat16)
+    w_q, w_s = ref.quantize_ref(w, axis=0)
+
+    f_bf16 = jax.jit(lambda a, b: a @ b)
+    f_int8 = jax.jit(lambda a, bq, bs: ref.int8_matmul_ref(a, bq, bs))
+    for name, f, args in [("matmul_bf16", f_bf16, (x, w)),
+                          ("matmul_w8a8", f_int8, (x, w_q, w_s))]:
+        jax.block_until_ready(f(*args))
+        ts = []
+        for _ in range(20):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(*args))
+            ts.append(time.perf_counter() - t0)
+        rows.append((f"kernels/{name}", float(np.median(ts)) * 1e6,
+                     "cpu-xla"))
+    return rows
+
+
+def bench_roofline_table() -> List[Row]:
+    """SRoofline: one row per dry-run cell (from experiments/dryrun)."""
+    rows = []
+    if not DRYRUN_DIR.exists():
+        return [("roofline/missing", 0.0, "run repro.launch.dryrun first")]
+    for f in sorted(DRYRUN_DIR.glob("*__baseline.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            continue
+        rl = r["roofline"]
+        step = rl["step_time_lower_bound_s"]
+        rows.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                     step * 1e6,
+                     f"dom={rl['dominant'][2:]} useful={rl['useful_flops_ratio']:.2f}"))
+    return rows
+
+
+BENCHES = [
+    bench_table1_mobilenetv3,
+    bench_table2_resnet18,
+    bench_complexity_analysis,
+    bench_layerwise_sparsity,
+    bench_energy,
+    bench_lm_hqp_serving,
+    bench_kernels,
+    bench_roofline_table,
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for bench in BENCHES:
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.2f},{derived}")
+        except Exception as e:  # keep the harness running
+            print(f"{bench.__name__},nan,ERROR:{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""The paper's own experiment, reduced: HQP vs Q8-only vs P50-only on
+MobileNetV3-Small (Table I analogue), ~3-5 minutes on CPU.
+
+  PYTHONPATH=src python examples/hqp_cnn.py [resnet18|mobilenetv3s]
+"""
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.repro_exp.cnn_experiment import run_experiment
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "mobilenetv3s"
+    table = run_experiment(arch, train_steps=200, n_train=3000, n_val=1000,
+                           n_calib=500)
+    print("\n=== Table ===")
+    for r in table["rows"]:
+        print(f"{r['method']:24s} acc={r['accuracy']:.4f} "
+              f"drop={r['drop']*100:+.2f}% size-{r['size_reduction']:.0%} "
+              f"θ={r['theta']:.0%} compliant={r['compliant']}")
+    print("modeled speedups:", {k: round(v, 2)
+                                for k, v in table["speedups_modeled"].items()})

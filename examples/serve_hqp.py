@@ -1,0 +1,19 @@
+"""Batched serving example with the HQP-compressed model (INT8 weights +
+INT8 KV cache) vs the bf16 baseline.
+
+  PYTHONPATH=src python examples/serve_hqp.py [--arch stablelm-1.6b]
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    extra = sys.argv[1:] or []
+    print("--- bf16 baseline ---")
+    main(["--smoke", "--batch", "4", "--prompt-len", "16",
+          "--tokens", "16"] + extra)
+    print("--- HQP INT8 ---")
+    main(["--smoke", "--batch", "4", "--prompt-len", "16",
+          "--tokens", "16", "--hqp"] + extra)

@@ -1,0 +1,17 @@
+"""End-to-end training driver example: trains a reduced model for a few
+hundred steps with checkpointing + resume (kill it mid-run and rerun: it
+resumes from the last committed checkpoint).
+
+  PYTHONPATH=src python examples/train_lm.py [--arch granite-3-8b]
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:] or []
+    main(["--smoke", "--steps", "200", "--batch", "8", "--seq", "64",
+          "--ckpt-dir", "/tmp/repro_ckpt", "--ckpt-every", "50",
+          "--eval-every", "100"] + args)

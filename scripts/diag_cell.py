@@ -1,0 +1,128 @@
+"""Rebuild one dry-run cell, save its HLO, and print the top byte/collective
+contributors (loop-aware). The hillclimb profiler.
+
+  PYTHONPATH=src python scripts/diag_cell.py <arch> <shape> [variant]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.sharding as jsh
+
+from repro.launch import dryrun
+from repro.roofline import hlo_cost
+from repro.roofline.hlo_cost import _shape_bytes
+
+
+def build(arch, shape_name, variant="baseline"):
+    from repro.configs import get_config, get_shape
+    from repro.launch.mesh import make_production_mesh
+    from repro.sharding.ctx import make_ctx
+    from repro.sharding import rules
+    from repro.models import lm
+    from repro.train.optimizer import AdamWConfig, adamw_init
+    from repro.train.train_step import make_train_step
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh()
+    quantized_kv = variant.startswith(("hqp", "int8kv"))
+    pure_dp = "puredp" in variant and shape.global_batch % 256 == 0
+    ctx = make_ctx(mesh, batch_sharded=shape.global_batch >= 16,
+                   quantized_kv=quantized_kv, remat=(shape.kind == "train"),
+                   pure_dp=pure_dp)
+    params_abs = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    if variant.startswith(("hqp", "int8w")):
+        params_abs = jax.eval_shape(dryrun.quantize_lm_params_abstract, params_abs)
+    p_sh = rules.param_shardings(params_abs, ctx)
+    mk = lambda specs: jax.tree.map(
+        lambda s: jsh.NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, jsh.PartitionSpec))
+    with mesh:
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig(
+                state_dtype="int8" if cfg.param_count() > 5e10 else "f32")
+            opt_abs = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_abs)
+            o_sh = mk(rules.opt_state_specs(params_abs, opt_abs, ctx))
+            b_sh = mk(rules.batch_specs(cfg, ctx))
+            step = make_train_step(cfg, ctx, opt_cfg)
+            ins = dryrun.input_specs(cfg, shape)
+            lowered = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                              donate_argnums=(0, 1)).lower(
+                params_abs, opt_abs, ins["batch"])
+        else:
+            ins = dryrun.input_specs(cfg, shape, quantized_kv)
+            s_sh = mk(rules.decode_state_specs(cfg, ins["state"], ctx))
+            t_sh = jsh.NamedSharding(mesh, jsh.PartitionSpec(
+                ctx.batch_spec()[0], None))
+
+            def step(params, state, tokens):
+                return lm.decode_step(params, cfg, state, tokens, ctx)
+            lowered = jax.jit(step, in_shardings=(p_sh, s_sh, t_sh),
+                              donate_argnums=(1,)).lower(
+                params_abs, ins["state"], ins["tokens"])
+        return lowered.compile()
+
+
+def op_bytes(hc, op):
+    if op.opcode in hlo_cost._FREE_OPS or op.opcode == "while":
+        return 0
+    if op.opcode == "fusion":
+        m = re.search(r"(?:calls|to_apply)=\{?%?([\w.\-]+)", op.attrs)
+        return hc._fusion_bytes(op, m.group(1)) if m else 0
+    if op.opcode == "dynamic-update-slice":
+        return (2 * _shape_bytes(hc.shape.get(op.operands[1], ""))
+                if len(op.operands) > 1 else 0)
+    if op.opcode == "dynamic-slice":
+        return 2 * _shape_bytes(op.result_text)
+    return _shape_bytes(op.result_text) + hc._operand_bytes(op)
+
+
+def main():
+    arch, shape_name = sys.argv[1], sys.argv[2]
+    variant = sys.argv[3] if len(sys.argv) > 3 else "baseline"
+    compiled = build(arch, shape_name, variant)
+    txt = compiled.as_text()
+    tag = f"{arch}_{shape_name}_{variant}".replace("/", "_")
+    path = f"/tmp/{tag}.hlo"
+    open(path, "w").write(txt)
+    print("HLO saved:", path)
+    hc = hlo_cost.HloCost(txt)
+    rows = []
+    colls = []
+
+    def walk(comp_name, mult, prefix):
+        comp = hc.comps[comp_name]
+        for op in comp.ops:
+            if op.opcode == "while":
+                body = hc._attr_comp(op, "body")
+                walk(body, mult * hc._trip_count(op),
+                     prefix + f">{hc._trip_count(op)}x")
+            else:
+                b = op_bytes(hc, op)
+                if b * mult > 1e9:
+                    rows.append((b * mult, mult, op.opcode, op.name, prefix,
+                                 op.result_text[:60]))
+                if any(op.opcode.startswith(c) for c in hlo_cost.COLLECTIVES):
+                    cb = _shape_bytes(op.result_text)
+                    if cb * mult > 1e8:
+                        colls.append((cb * mult, mult, op.opcode,
+                                      op.result_text[:70]))
+    walk(hc.entry, 1, "")
+    res = hc.cost()
+    print(f"TOTAL bytes/dev {res.bytes/1e9:.1f}GB  coll/dev "
+          f"{res.collective_bytes/1e9:.1f}GB  flops/dev {res.flops:.3e}")
+    print("\n--- top HBM-byte ops (xTrips) ---")
+    for b, m, oc, n, pre, rt in sorted(rows, reverse=True)[:14]:
+        print(f"{b/1e9:9.2f}GB x{m:5d} {oc:22s} {pre:8s} {n[:34]:34s} {rt}")
+    print("\n--- top collectives ---")
+    for b, m, oc, rt in sorted(colls, reverse=True)[:12]:
+        print(f"{b/1e9:9.2f}GB x{m:5d} {oc:20s} {rt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Ten assigned architectures + the paper's own CNNs (resnet18, mobilenetv3s).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401 (public re-exports)
+    CNNConfig,
+    FrontendConfig,
+    LM_SHAPES,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    XLSTMConfig,
+    get_shape,
+    shape_applicable,
+)
+
+# arch id -> module under repro.configs
+ARCH_MODULES: Dict[str, str] = {
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+    "arctic-480b": "arctic_480b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b",
+    "musicgen-medium": "musicgen_medium",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "command-r-35b": "command_r_35b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "granite-3-8b": "granite_3_8b",
+    "jamba-1.5-large-398b": "jamba_1_5_large",
+}
+
+CNN_ARCHS = ("resnet18", "mobilenetv3s")
+
+
+def list_archs() -> List[str]:
+    return list(ARCH_MODULES)
+
+
+def _module(arch: str):
+    if arch not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{ARCH_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).smoke_config()
+
+
+def get_cnn_config(arch: str) -> CNNConfig:
+    from repro.configs import cnn as _cnn
+    return _cnn.config(arch)

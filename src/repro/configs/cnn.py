@@ -1,0 +1,18 @@
+"""Paper-faithful CNN configs: ResNet-18 and MobileNetV3-Small.
+
+These drive the faithful HQP reproduction (Tables I/II). Full ImageNet-scale
+configs are impractical offline; the repro track uses 32px synthetic images
+with the published block structure (depths/strides/expansions preserved,
+widths scaled) — the HQP *algorithm* under test is size-agnostic.
+"""
+from repro.configs.base import CNNConfig
+
+
+def config(arch: str) -> CNNConfig:
+    if arch == "resnet18":
+        return CNNConfig(name="resnet18", arch="resnet18", n_classes=10,
+                         image_size=32, stem_channels=32)
+    if arch == "mobilenetv3s":
+        return CNNConfig(name="mobilenetv3s", arch="mobilenetv3s", n_classes=10,
+                         image_size=32, stem_channels=16)
+    raise KeyError(arch)

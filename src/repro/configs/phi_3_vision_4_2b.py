@@ -1,0 +1,41 @@
+"""phi-3-vision-4.2b [vlm] — phi3-mini backbone + CLIP frontend (stubbed).
+
+[hf:microsoft/Phi-3-vision-128k-instruct; hf]
+32L d_model=3072 32H (GQA kv=32) d_ff=8192 vocab=32064.
+The CLIP image tower is a STUB: input_specs() provides precomputed patch
+embeddings (576 patches for a 336px ViT-L/14 crop) already projected to d_model.
+"""
+from repro.configs.base import FrontendConfig, ModelConfig
+
+ARCH_ID = "phi-3-vision-4.2b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="vlm",
+        n_layers=32,
+        d_model=3072,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=8192,
+        vocab_size=32064,
+        rope_theta=10_000.0,
+        frontend=FrontendConfig(kind="clip_patches", n_embeds=576, embed_dim=3072),
+        max_seq_len=131_072,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        family="vlm",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab_size=256,
+        frontend=FrontendConfig(kind="clip_patches", n_embeds=8, embed_dim=64),
+        max_seq_len=128,
+    )

@@ -1,0 +1,13 @@
+"""HQP core: the paper's contribution as composable JAX transforms.
+
+  sensitivity   — diagonal-FIM structural saliency S (§II-B)
+  pruning       — global ascending-S ranking, mask / compact surgery
+  calibration   — absmax / percentile / KL (TensorRT-style) range search
+  quantization  — paper-faithful per-tensor PTQ sim + production INT8 storage
+  pipeline      — Algorithm 1 conditional loop + Q∘P composition
+  mixed_precision — §VI-A S-guided INT4/INT8/BF16 allocation (beyond-paper)
+"""
+from repro.core import (calibration, mixed_precision, pipeline, pruning,  # noqa: F401
+                        quantization, sensitivity)
+from repro.core.pipeline import (HQPConfig, HQPResult, conditional_prune,  # noqa: F401
+                                 hqp_compress_lm)

@@ -1,0 +1,115 @@
+"""HQP end-to-end pipeline:  M_o = Q(P(M_train, τ, Δ_ax), b)   (§III).
+
+Algorithm 1 (conditional iterative pruning) + robust PTQ, with the exact
+accept/reject semantics of the paper: pruning proceeds in δ-sized steps down
+the ascending-S ranked list R and TERMINATES the moment the validation
+accuracy drop exceeds Δ_ax; the last *accepted* model is M_sparse, which then
+enters PTQ. The returned history is the audit trail used by the repro
+benchmarks (accuracy-vs-θ curve, Tables I/II).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core import pruning as pr
+from repro.core import sensitivity as sens
+
+
+@dataclasses.dataclass
+class HQPConfig:
+    delta_ax: float = 0.015          # max permissible accuracy drop (1.5%)
+    step_frac: float = 0.01          # δ: 1% of total structural units / step
+    bits: int = 8
+    weight_granularity: str = "tensor"   # paper-faithful; "channel" for LM
+    act_method: str = "kl"           # absmax | percentile | kl
+    max_steps: int = 200
+    protect_frac: float = 0.0
+
+
+@dataclasses.dataclass
+class PruneStep:
+    step: int
+    n_drop: int
+    theta: float
+    accuracy: float
+    drop: float
+    accepted: bool
+    seconds: float
+
+
+@dataclasses.dataclass
+class HQPResult:
+    params_sparse: Any               # masked, maximal compliant (M_sparse)
+    params_compact: Any              # physically compacted
+    ranked: pr.RankedUnits
+    n_drop: int
+    theta: float
+    a_baseline: float
+    a_final: float
+    history: List[PruneStep]
+
+    @property
+    def sparsity_by_family(self):
+        return pr.sparsity_report(self.ranked, self.n_drop)
+
+
+def conditional_prune(params: Any,
+                      specs: List[sens.GroupSpec],
+                      sq_grads: Any,
+                      eval_fn: Callable[[Any], float],
+                      hqp: HQPConfig,
+                      a_baseline: Optional[float] = None,
+                      log: Callable[[str], None] = print) -> HQPResult:
+    """Algorithm 1. eval_fn: masked params -> accuracy in [0, 1]."""
+    ranked = pr.rank_units(specs, sq_grads, hqp.protect_frac)
+    if a_baseline is None:
+        a_baseline = eval_fn(params)
+    delta = max(1, int(hqp.step_frac * ranked.total))
+    log(f"[hqp] baseline acc={a_baseline:.4f}  units={ranked.total}  "
+        f"δ={delta}  Δ_ax={hqp.delta_ax}")
+
+    history: List[PruneStep] = []
+    best_n, best_acc = 0, a_baseline
+    n_drop = 0
+    for t in range(1, hqp.max_steps + 1):
+        n_drop = min(n_drop + delta, ranked.total)
+        t0 = time.time()
+        candidate = pr.apply_prune_masks(params, ranked, n_drop)
+        acc = float(eval_fn(candidate))
+        dt = time.time() - t0
+        drop = a_baseline - acc
+        accepted = drop <= hqp.delta_ax
+        theta = n_drop / ranked.total
+        history.append(PruneStep(t, n_drop, theta, acc, drop, accepted, dt))
+        log(f"[hqp] step {t:3d} θ={theta:5.1%} acc={acc:.4f} "
+            f"drop={drop:+.4f} {'ACCEPT' if accepted else 'REJECT -> stop'}")
+        if not accepted:
+            break
+        best_n, best_acc = n_drop, acc
+        if n_drop >= ranked.total:
+            break
+
+    params_sparse = pr.apply_prune_masks(params, ranked, best_n)
+    # compact from the MASKED params: stacked-family padding units must carry
+    # zeros so the compacted artifact == the validated masked model
+    params_compact = pr.compact_params(params_sparse, ranked, best_n)
+    return HQPResult(params_sparse, params_compact, ranked, best_n,
+                     best_n / ranked.total, a_baseline, best_acc, history)
+
+
+def hqp_compress_lm(params: Any, cfg, sq_grads: Any,
+                    eval_fn: Callable[[Any], float],
+                    hqp: Optional[HQPConfig] = None,
+                    log: Callable[[str], None] = print):
+    """Full HQP for the unified LM: conditional prune -> per-channel INT8."""
+    from repro.core import quantization as q
+    hqp = hqp or HQPConfig(weight_granularity="channel")
+    specs = sens.lm_prune_groups(cfg)
+    res = conditional_prune(params, specs, sq_grads, eval_fn, hqp, log=log)
+    params_int8 = q.quantize_lm_params(res.params_sparse, hqp.bits)
+    return res, params_int8

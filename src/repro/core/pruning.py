@@ -1,0 +1,160 @@
+"""Global sensitivity ranking + mask/compact application (Algorithm 1 support).
+
+The ranked list R (ascending S, paper line 8) is materialized once from the
+single Fisher pass; the conditional loop then asks for "the masked model at
+cumulative drop count n" — recomputed from R each iteration (masks are cheap
+parameter transforms; the model code never changes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sensitivity as sens
+
+
+@dataclasses.dataclass
+class RankedUnits:
+    """Global ascending-S ranking over all structural units."""
+    specs: List[sens.GroupSpec]
+    spec_idx: np.ndarray        # (total,) which family
+    unit_idx: np.ndarray        # (total,) unit within family
+    s_values: np.ndarray        # (total,) ascending
+
+    @property
+    def total(self) -> int:
+        return len(self.s_values)
+
+    def drops_per_spec(self, n_drop: int) -> List[np.ndarray]:
+        """Unit indices dropped in each family for cumulative count n_drop."""
+        sel_spec = self.spec_idx[:n_drop]
+        sel_unit = self.unit_idx[:n_drop]
+        return [sel_unit[sel_spec == i] for i in range(len(self.specs))]
+
+
+def rank_units(specs: Sequence[sens.GroupSpec], sq_grads: Any,
+               protect_frac: float = 0.0) -> RankedUnits:
+    """Build R. ``protect_frac``: never rank the top-S fraction of each family
+    (guards against emptying a whole layer; 0 = paper-faithful pure ranking)."""
+    all_s, all_spec, all_unit = [], [], []
+    for i, sp in enumerate(specs):
+        s = np.asarray(sens.group_sensitivity(sq_grads, sp))
+        n_rankable = sp.size - int(np.ceil(protect_frac * sp.size))
+        order = np.argsort(s)[:n_rankable]
+        all_s.append(s[order])
+        all_spec.append(np.full(len(order), i))
+        all_unit.append(order)
+    s_cat = np.concatenate(all_s)
+    spec_cat = np.concatenate(all_spec)
+    unit_cat = np.concatenate(all_unit)
+    g_order = np.argsort(s_cat, kind="stable")
+    return RankedUnits(list(specs), spec_cat[g_order], unit_cat[g_order],
+                       s_cat[g_order])
+
+
+def apply_prune_masks(params: Any, ranked: RankedUnits, n_drop: int) -> Any:
+    """Masked (shape-preserving) model with the first n_drop units of R zeroed."""
+    for spec, drops in zip(ranked.specs, ranked.drops_per_spec(n_drop)):
+        if len(drops) == 0:
+            continue
+        dvec = np.zeros((spec.size,), bool)
+        dvec[drops] = True
+        params = sens.mask_group(params, spec, jnp.asarray(dvec))
+        if spec.kind == "expert":
+            params = _disable_router_cols(params, spec, dvec)
+    return params
+
+
+def _disable_router_cols(params, spec, dvec):
+    """Masked experts must also be unroutable: router bias -> -inf."""
+    router_member = [mm for mm in spec.members_all
+                     if "router" in mm[0]]
+    if not router_member:
+        return params
+    path = router_member[0][0][:-1] + ("b",)
+    b = sens._get(params, path)
+    b = jnp.where(jnp.asarray(dvec), -1e9, b)
+    return sens._set(params, path, b)
+
+
+def compact_params(params: Any, ranked: RankedUnits, n_drop: int) -> Any:
+    """Physically remove the first n_drop units of R (deployment artifact).
+
+    CNN (unstacked) families compact exactly per-family. LM stacked families
+    (scan-over-layers leaves, one family per layer) must stay SHAPE-UNIFORM
+    across the stack: the family group keeps ``size - min_g(dropped_g)``
+    units per layer; more-pruned layers pad with their own *masked* (zeroed)
+    units, so the compacted model computes exactly what the masked model
+    computed (tests/test_hqp.py::test_lm_mask_equals_compact). Call with the
+    MASKED params for stacked trees."""
+    drops_all = ranked.drops_per_spec(n_drop)
+
+    # ---- unstacked families: exact per-family compaction ----
+    stacked = {}
+    for spec, drops in zip(ranked.specs, drops_all):
+        if spec.members_all and spec.members_all[0][0][0] == "__stack__":
+            key = (spec.kind, tuple(
+                (m[0][2:], m[1], m[2], m[3]) for m in spec.members_all),
+                spec.size)
+            stacked.setdefault(key, []).append((spec, drops))
+            continue
+        keep = np.setdiff1d(np.arange(spec.size), drops)
+        if len(keep) == spec.size:
+            continue
+        params = sens.compact_group(params, spec, keep)
+
+    # ---- stacked families: uniform keep count per layer group ----
+    for (kind, members, size), entries in stacked.items():
+        n_keep = size - min(len(d) for _, d in entries)
+        if n_keep == size:
+            continue
+        keep_per_g = {}
+        for spec, drops in entries:
+            g = spec.members_all[0][0][1]
+            kept = np.setdiff1d(np.arange(size), drops)
+            pad = np.asarray(drops, int)[: n_keep - len(kept)]
+            keep_per_g[g] = np.sort(np.concatenate([kept, pad]))
+        # one gather per (leaf, axis), merging same-leaf members
+        by_leaf = {}
+        for path, axis, block, offset in members:
+            by_leaf.setdefault((path, axis), []).append((block, offset))
+        for (path, axis), mems in by_leaf.items():
+            full = sens._get(params, path)          # stacked (G, ...)
+            gathered = []
+            for g in range(full.shape[0]):
+                ku = keep_per_g.get(g, np.arange(size))
+                length = full.shape[axis + 1]
+                mask = np.ones(length, bool)
+                for block, offset in mems:
+                    du = np.setdiff1d(np.arange(size), ku)
+                    idx = (offset + du[:, None] * block
+                           + np.arange(block)[None, :]).reshape(-1)
+                    mask[idx] = False
+                gathered.append(jnp.take(full[g],
+                                         jnp.asarray(np.nonzero(mask)[0]),
+                                         axis=axis))
+            params = sens._set(params, path, jnp.stack(gathered))
+    return params
+
+
+def sparsity_report(ranked: RankedUnits, n_drop: int) -> dict:
+    """Per-family sparsity θ (the paper's §V-C non-uniform layer analysis)."""
+    rep = {}
+    for spec, drops in zip(ranked.specs, ranked.drops_per_spec(n_drop)):
+        rep[spec.name] = {"kind": spec.kind, "size": spec.size,
+                          "dropped": int(len(drops)),
+                          "theta": len(drops) / spec.size}
+    return rep
+
+
+def param_count(params: Any) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+
+
+def param_bytes(params: Any) -> int:
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(params))

@@ -1,0 +1,255 @@
+"""Filter/structure sensitivity via the diagonal Fisher approximation (§II-B).
+
+    S_g = (1/|D_calib|) Σ_i || ∂L(W, x_i, y_i)/∂W_g ||²
+
+One backward pass over the calibration set accumulates squared gradients
+(the diagonal FIM estimate); structural group sensitivities are produced by
+summing the diagonal over each group's parameter slices. The same machinery
+drives conv filters (CNN repro track) and attention-KV-head / FFN-column /
+expert / Mamba-channel / mLSTM-head units (LM fleet).
+
+Member encoding
+---------------
+A *member* is (path, axis, block, offset): the leaf at ``path`` holds
+``size`` units along ``axis``, unit ``u`` occupying rows/cols
+``[offset + u*block, offset + (u+1)*block)``. Stacked-layer leaves (the LM's
+scan-over-layers layout, leading dim = layer group) are addressed with a
+``("__stack__", g)`` path prefix selecting layer ``g``; axes are then in
+unstacked coordinates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Member = Tuple[Tuple, int, int, int]     # (path, axis, block, offset)
+
+
+# ------------------------------------------------------------------ FIM diag
+def fisher_diag(grad_fn: Callable[[Any, Any], Any], params: Any,
+                calib_batches: Iterable[Any]) -> Tuple[Any, int]:
+    """E[g²] over the calibration set. grad_fn(params, batch) -> grad pytree."""
+    acc = None
+    n = 0
+    for batch in calib_batches:
+        g = grad_fn(params, batch)
+        sq = jax.tree.map(lambda t: jnp.square(t.astype(jnp.float32)), g)
+        acc = sq if acc is None else jax.tree.map(jnp.add, acc, sq)
+        n += 1
+    if n == 0:
+        raise ValueError("empty calibration set")
+    return jax.tree.map(lambda t: t / n, acc), n
+
+
+# ------------------------------------------------------------------ groups
+@dataclasses.dataclass
+class GroupSpec:
+    name: str
+    members_grad: List[Member]   # leaves contributing to S
+    members_all: List[Member]    # every leaf to zero/remove on pruning
+    size: int                    # number of units (channels/heads/experts)
+    kind: str = "channel"
+
+
+def m(path, axis, block=1, offset=0) -> Member:
+    return (tuple(path), axis, block, offset)
+
+
+def _get(tree, path):
+    if path and path[0] == "__stack__":
+        return _get(tree, path[2:])[path[1]]
+    for p in path:
+        tree = tree[p]
+    return tree
+
+
+def _set(tree, path, value):
+    if path and path[0] == "__stack__":
+        g = path[1]
+        full = _get(tree, path[2:])
+        return _set(tree, path[2:], full.at[g].set(value))
+    key = path[0]
+    sub = value if len(path) == 1 else _set(tree[key], path[1:], value)
+    if isinstance(tree, (tuple, list)):
+        out = list(tree)
+        out[key] = sub
+        return type(tree)(out)
+    return {**tree, key: sub}
+
+
+def group_sensitivity(sq_grads: Any, spec: GroupSpec) -> jax.Array:
+    """S per unit: sum of E[g²] over each unit's slices across members."""
+    s = jnp.zeros((spec.size,), jnp.float32)
+    for path, axis, block, offset in spec.members_grad:
+        leaf = jnp.moveaxis(_get(sq_grads, path), axis, 0)
+        sl = leaf[offset:offset + spec.size * block]
+        sl = sl.reshape(spec.size, block, -1)
+        s = s + jnp.sum(sl, axis=(1, 2))
+    return s
+
+
+def _axis_mask(keep: jax.Array, length: int, block: int, offset: int):
+    vec = jnp.ones((length,), jnp.float32)
+    unit = jnp.repeat(keep.astype(jnp.float32), block)
+    return jax.lax.dynamic_update_slice(vec, unit, (offset,))
+
+
+def mask_group(params: Any, spec: GroupSpec, drop: jax.Array) -> Any:
+    """Zero the units selected by boolean ``drop`` (size,). Shape-preserving."""
+    keep = ~drop
+    for path, axis, block, offset in spec.members_all:
+        leaf = _get(params, path)
+        vec = _axis_mask(keep, leaf.shape[axis], block, offset)
+        shape = [1] * leaf.ndim
+        shape[axis] = leaf.shape[axis]
+        params = _set(params, path, leaf * vec.reshape(shape).astype(leaf.dtype))
+    return params
+
+
+def compact_group(params: Any, spec: GroupSpec, keep_units: np.ndarray) -> Any:
+    """Physically remove pruned units (deployment artifact).
+
+    Members sharing a (leaf, axis) — e.g. the two halves of a gated
+    up-projection — are compacted in ONE gather, since removing the first
+    member's slices would shift the second member's offsets."""
+    by_leaf = {}
+    for path, axis, block, offset in spec.members_all:
+        by_leaf.setdefault((tuple(path), axis), []).append((block, offset))
+    for (path, axis), members in by_leaf.items():
+        leaf = _get(params, path)
+        length = leaf.shape[axis]
+        keep_mask = np.ones(length, bool)
+        for block, offset in members:
+            drop_units = np.setdiff1d(np.arange(spec.size), keep_units)
+            idx = (offset + drop_units[:, None] * block
+                   + np.arange(block)[None, :]).reshape(-1)
+            keep_mask[idx] = False
+        full = np.nonzero(keep_mask)[0]
+        params = _set(params, path, jnp.take(leaf, jnp.asarray(full), axis=axis))
+    return params
+
+
+# ------------------------------------------------------------------ CNN specs
+def cnn_prune_groups(cfg, variables: dict) -> List[GroupSpec]:
+    """Prunable channel families for the paper's two architectures.
+
+    ResNet-18: the conv1 (intra-block) channels of every basic block — the
+    residual-identity path is never pruned (§V-D alignment discussion).
+    MobileNetV3-S: the expansion channels of every inverted bottleneck (the
+    family the paper found highest-sparsity, §V-C).
+    """
+    p = variables["params"]
+    groups: List[GroupSpec] = []
+    import re as _re
+    if cfg.arch == "resnet18":
+        for name in sorted(k for k in p if _re.match(r"^s\d+b\d+$", k)):
+            c = p[name]["conv1"].shape[3]
+            mg = [m(("params", name, "conv1"), 3),
+                  m(("params", name, "conv2"), 2),
+                  m(("params", name, "bn1", "scale"), 0)]
+            ma = mg + [m(("params", name, "bn1", "bias"), 0),
+                       m(("stats", name, "bn1", "mean"), 0),
+                       m(("stats", name, "bn1", "var"), 0)]
+            groups.append(GroupSpec(f"{name}/conv1", mg, ma, c))
+    else:  # mobilenetv3s
+        for name in sorted((k for k in p if _re.match(r"^b\d+$", k)
+                            and isinstance(p[k], dict) and "expand" in p[k]),
+                           key=lambda s: int(s[1:])):
+            blk = p[name]
+            c = blk["expand"].shape[3]
+            mg = [m(("params", name, "expand"), 3),
+                  m(("params", name, "dw"), 3),
+                  m(("params", name, "project"), 2),
+                  m(("params", name, "bn_e", "scale"), 0),
+                  m(("params", name, "bn_d", "scale"), 0)]
+            ma = list(mg) + [m(("params", name, "bn_e", "bias"), 0),
+                             m(("params", name, "bn_d", "bias"), 0),
+                             m(("stats", name, "bn_e", "mean"), 0),
+                             m(("stats", name, "bn_e", "var"), 0),
+                             m(("stats", name, "bn_d", "mean"), 0),
+                             m(("stats", name, "bn_d", "var"), 0)]
+            if "se_down" in blk:
+                ma += [m(("params", name, "se_down", "w"), 2),
+                       m(("params", name, "se_up", "w"), 3),
+                       m(("params", name, "se_up", "b"), 0)]
+            groups.append(GroupSpec(f"{name}/expand", mg, ma, c))
+    return groups
+
+
+# ------------------------------------------------------------------ LM specs
+def lm_prune_groups(cfg) -> List[GroupSpec]:
+    """Structural families for the unified LM (stacked-layer layout).
+
+    One family per (period-position, layer) pair — masks are per-layer, so the
+    conditional loop can produce the paper's non-uniform layer-wise sparsity.
+    sLSTM blocks are left unpruned (nonlinear recurrent alignment; DESIGN.md
+    §Arch-applicability).
+    """
+    from repro.models.lm import layer_specs, pattern_period
+    period = pattern_period(cfg)
+    n_groups = cfg.n_layers // period
+    spec = layer_specs(cfg)[:period]
+    hd = cfg.resolved_head_dim
+    g_ratio = cfg.n_heads // cfg.n_kv_heads
+    out: List[GroupSpec] = []
+    for j, (kind, is_moe) in enumerate(spec):
+        for g in range(n_groups):
+            st = ("__stack__", g, "blocks", j)
+            tag = f"L{g * period + j}"
+            if kind == "attn":
+                mm = [m(st + ("attn", "wq", "w"), 1, g_ratio * hd),
+                      m(st + ("attn", "wk", "w"), 1, hd),
+                      m(st + ("attn", "wv", "w"), 1, hd),
+                      m(st + ("attn", "wo", "w"), 0, g_ratio * hd)]
+                out.append(GroupSpec(f"{tag}/kv_heads", mm, list(mm),
+                                     cfg.n_kv_heads, kind="kv_head"))
+            if kind in ("attn", "mamba") and cfg.d_ff > 0 and not is_moe:
+                mm = [m(st + ("mlp", "gate", "w"), 1),
+                      m(st + ("mlp", "up", "w"), 1),
+                      m(st + ("mlp", "down", "w"), 0)]
+                out.append(GroupSpec(f"{tag}/ffn", mm, list(mm),
+                                     cfg.d_ff, kind="ffn_col"))
+            if is_moe:
+                mm = [m(st + ("moe", "gate", "w"), 0),
+                      m(st + ("moe", "up", "w"), 0),
+                      m(st + ("moe", "down", "w"), 0)]
+                out.append(GroupSpec(
+                    f"{tag}/experts", mm,
+                    mm + [m(st + ("moe", "router", "w"), 1)],
+                    cfg.moe.n_experts, kind="expert"))
+            if kind == "mamba":
+                d_in = cfg.ssm.expand * cfg.d_model
+                mm = [m(st + ("mamba", "x_proj", "w"), 0),
+                      m(st + ("mamba", "out_proj", "w"), 0),
+                      m(st + ("mamba", "dt_proj", "w"), 1)]
+                ma = mm + [m(st + ("mamba", "dt_proj", "b"), 0),
+                           m(st + ("mamba", "conv_w"), 1),
+                           m(st + ("mamba", "a_log"), 0),
+                           m(st + ("mamba", "d_skip"), 0),
+                           m(st + ("mamba", "in_proj", "w"), 1, 1, 0),
+                           m(st + ("mamba", "in_proj", "w"), 1, 1, d_in)]
+                out.append(GroupSpec(f"{tag}/mamba_cols", mm, ma,
+                                     d_in, kind="mamba_col"))
+            if kind == "mlstm":
+                d_in = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
+                head_d = d_in // cfg.n_heads
+                mm = [m(st + ("mlstm", "wq"), 0),
+                      m(st + ("mlstm", "wk"), 0),
+                      m(st + ("mlstm", "wv"), 0)]
+                ma = mm + [m(st + ("mlstm", "w_i", "w"), 1),
+                           m(st + ("mlstm", "w_i", "b"), 0),
+                           m(st + ("mlstm", "w_f", "w"), 1),
+                           m(st + ("mlstm", "w_f", "b"), 0),
+                           m(st + ("mlstm", "w_i", "w"), 0, head_d),
+                           m(st + ("mlstm", "w_f", "w"), 0, head_d),
+                           m(st + ("mlstm", "in_proj", "w"), 1, head_d, 0),
+                           m(st + ("mlstm", "in_proj", "w"), 1, head_d, d_in),
+                           m(st + ("mlstm", "norm", "g"), 0, head_d),
+                           m(st + ("mlstm", "out_proj", "w"), 0, head_d)]
+                out.append(GroupSpec(f"{tag}/mlstm_heads", mm, ma,
+                                     cfg.n_heads, kind="mlstm_head"))
+    return out

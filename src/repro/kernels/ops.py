@@ -1,0 +1,61 @@
+"""jit'd public wrappers: dispatch Pallas on TPU, portable jnp elsewhere.
+
+Every op here has a pure-jnp oracle in ``ref.py``; tests sweep shapes/dtypes
+with the kernels in interpret mode and assert allclose against the oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+@functools.lru_cache(maxsize=1)
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def quantize_rowwise(x: jax.Array):
+    """(..., K) float -> ((..., K) int8, (...,) f32 scale)."""
+    if _on_tpu():
+        from repro.kernels.quantize import quantize_rowwise_pallas
+        shp = x.shape
+        q, s = quantize_rowwise_pallas(x.reshape(-1, shp[-1]))
+        return q.reshape(shp), s.reshape(shp[:-1])
+    return ref.quantize_ref(x, axis=-1)
+
+
+def int8_matmul(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
+                x_scale: Optional[jax.Array] = None) -> jax.Array:
+    """W8A8 matmul: x (..., K) float (or int8 + x_scale), w_q (K, N) int8.
+
+    Dynamic per-row activation quantization unless x_scale is supplied
+    (static calibrated scales from HQP PTQ come through x_scale)."""
+    shp = x.shape
+    x2 = x.reshape(-1, shp[-1])
+    if x2.dtype != jnp.int8:
+        x_q, x_scale = quantize_rowwise(x2)
+    else:
+        x_q = x2
+        x_scale = x_scale.reshape(-1)
+    if _on_tpu():
+        from repro.kernels.int8_matmul import int8_matmul_pallas
+        out = int8_matmul_pallas(x_q, w_q, x_scale, w_scale)
+    else:
+        out = ref.int8_matmul_ref(x_q, w_q, w_scale, x_scale)
+    return out.reshape(*shp[:-1], w_q.shape[1])
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """(B, S, H, hd) causal MHA (equal q/kv heads; GQA folded by caller)."""
+    if _on_tpu():
+        from repro.kernels.flash_attention import flash_attention_pallas
+        b, s, h, hd = q.shape
+        fold = lambda t: jnp.moveaxis(t, 2, 1).reshape(b * h, s, hd)
+        o = flash_attention_pallas(fold(q), fold(k), fold(v))
+        return jnp.moveaxis(o.reshape(b, h, s, hd), 1, 2)
+    return ref.flash_attention_ref(q, k, v, causal=True)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jax.Array, axis: int = -1) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-channel INT8: returns (q, scale) with x ≈ q * scale.
+
+    ``scale`` has ``axis`` reduced away (one scale per remaining index)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, jnp.squeeze(scale, axis=axis)
+
+
+def int8_matmul_ref(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
+                    x_scale: Optional[jax.Array] = None) -> jax.Array:
+    """W8A8 matmul oracle. x: (M, K) float (dynamically quantized if no
+    x_scale) or int8; w_q: (K, N) int8; w_scale: (N,)."""
+    if x.dtype != jnp.int8:
+        x_q, x_scale = quantize_ref(x, axis=-1)
+    else:
+        x_q = x
+        assert x_scale is not None
+    acc = jax.lax.dot_general(
+        x_q, w_q, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32).astype(jnp.float32)
+    return (acc * x_scale[:, None] * w_scale[None, :]).astype(jnp.bfloat16)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """Naive (materialized-scores) MHA oracle. q,k,v: (B, S, H, hd)."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def int8_decode_attention_ref(q: jax.Array, k_q: jax.Array, v_q: jax.Array,
+                              k_s: jax.Array, v_s: jax.Array,
+                              cur_len: jax.Array) -> jax.Array:
+    """Decode vs int8 KV cache. q: (B, H, hd); k_q/v_q: (B, S, H, hd) int8;
+    k_s/v_s: (B, S, H) f32 scales."""
+    kf = k_q.astype(jnp.float32) * k_s[..., None]
+    vf = v_q.astype(jnp.float32) * v_s[..., None]
+    hd = q.shape[-1]
+    s = jnp.einsum("bhd,bchd->bhc", q.astype(jnp.float32), kf) * hd ** -0.5
+    mask = jnp.arange(kf.shape[1])[None, None, :] < cur_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhc,bchd->bhd", p, vf).astype(jnp.bfloat16)

@@ -1,0 +1,295 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without hardware:
+``jax.jit(step, in_shardings=...).lower(**input_specs(...)).compile()`` must
+succeed on the 16x16 single-pod AND 2x16x16 multi-pod meshes, and the
+compiled artifact yields the roofline terms (repro.roofline.hlo_cost — the
+loop-aware analyzer; XLA's cost_analysis undercounts scan bodies).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --multi-pod
+Writes one JSON per cell to experiments/dryrun/.
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs import LM_SHAPES, get_config, get_shape, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.roofline import hlo_cost
+from repro.roofline.hardware import TPU_V5E
+from repro.sharding import rules
+from repro.sharding.ctx import make_ctx
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_step import make_serve_step, make_train_step
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+# ------------------------------------------------------------------ inputs
+def input_specs(cfg, shape, quantized_kv: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train  -> {"batch": {...}}
+    prefill-> {"state": ..., "tokens": ..., ["embeds"]}
+    decode -> {"state": ..., "tokens": (B, 1)}
+    """
+    b, s = shape.global_batch, shape.seq_len
+    n_fr = cfg.frontend.n_embeds if cfg.frontend.kind != "none" else 0
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch = {"tokens": sds((b, s - n_fr), jnp.int32)}
+        if n_fr:
+            batch["embeds"] = sds((b, n_fr, cfg.d_model), jnp.bfloat16)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        state = jax.eval_shape(
+            lambda: lm.init_decode_state(cfg, b, s, _abstract_ctx(cfg, quantized_kv)))
+        out = {"state": state, "tokens": sds((b, s - n_fr), jnp.int32)}
+        if n_fr:
+            out["embeds"] = sds((b, n_fr, cfg.d_model), jnp.bfloat16)
+        return out
+    # decode: one new token against a cache of seq_len
+    state = jax.eval_shape(
+        lambda: lm.init_decode_state(cfg, b, s, _abstract_ctx(cfg, quantized_kv)))
+    return {"state": state, "tokens": sds((b, 1), jnp.int32)}
+
+
+def _abstract_ctx(cfg, quantized_kv):
+    import dataclasses as dc
+    from repro.sharding.ctx import default_ctx
+    return dc.replace(default_ctx(), quantized_kv=quantized_kv)
+
+
+# ------------------------------------------------------------------ one cell
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: str = "baseline", ce_chunk: int = 512,
+             save: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}__{variant}"
+    ok, why = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "variant": variant, "cell": cell_id}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return _finish(rec, save)
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        quantized_kv = variant.startswith(("hqp", "int8kv"))
+        n_chips = 512 if multi_pod else 256
+        pure_dp = ("puredp" in variant
+                   and shape.global_batch % n_chips == 0)
+        ctx = make_ctx(mesh, batch_sharded=shape.global_batch >= 16,
+                       quantized_kv=quantized_kv,
+                       remat=(shape.kind == "train"),
+                       pure_dp=pure_dp)
+        params_abs = jax.eval_shape(
+            lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+        if variant.startswith(("hqp", "int8w")):
+            from repro.core.quantization import quantize_lm_params
+            params_abs = jax.eval_shape(
+                lambda p: quantize_lm_params_abstract(p), params_abs)
+        p_sh = rules.param_shardings(params_abs, ctx)
+
+        with mesh:
+            if shape.kind == "train":
+                n_params = cfg.param_count()
+                opt_cfg = AdamWConfig(
+                    state_dtype="int8" if n_params > 5e10 else "f32")
+                opt_abs = jax.eval_shape(
+                    lambda p: adamw_init(p, opt_cfg), params_abs)
+                o_specs = rules.opt_state_specs(params_abs, opt_abs, ctx)
+                o_sh = jax.tree.map(
+                    lambda s: jax.sharding.NamedSharding(mesh, s), o_specs,
+                    is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+                b_specs = rules.batch_specs(cfg, ctx)
+                b_sh = jax.tree.map(
+                    lambda s: jax.sharding.NamedSharding(mesh, s), b_specs,
+                    is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+                step = make_train_step(cfg, ctx, opt_cfg)
+                jf = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                             donate_argnums=(0, 1))
+                ins = input_specs(cfg, shape)
+                lowered = jf.lower(params_abs, opt_abs, ins["batch"])
+            else:
+                ins = input_specs(cfg, shape, quantized_kv)
+                s_specs = rules.decode_state_specs(cfg, ins["state"], ctx)
+                s_sh = jax.tree.map(
+                    lambda s: jax.sharding.NamedSharding(mesh, s), s_specs,
+                    is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+                t_sh = jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec(
+                        ctx.batch_spec()[0], None))
+                if "embeds" in ins:
+                    e_sh = jax.sharding.NamedSharding(
+                        mesh, jax.sharding.PartitionSpec(
+                            ctx.batch_spec()[0], None, None))
+
+                    def step(params, state, tokens, embeds):
+                        return lm.decode_step(params, cfg, state, tokens,
+                                              ctx, embeds)
+                    jf = jax.jit(step, in_shardings=(p_sh, s_sh, t_sh, e_sh),
+                                 donate_argnums=(1,))
+                    lowered = jf.lower(params_abs, ins["state"],
+                                       ins["tokens"], ins["embeds"])
+                else:
+                    def step(params, state, tokens):
+                        return lm.decode_step(params, cfg, state, tokens, ctx)
+                    jf = jax.jit(step, in_shardings=(p_sh, s_sh, t_sh),
+                                 donate_argnums=(1,))
+                    lowered = jf.lower(params_abs, ins["state"], ins["tokens"])
+
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        # ---------------- analyses ----------------
+        rec["status"] = "ok"
+        rec["lower_s"] = round(t_lower, 1)
+        rec["compile_s"] = round(t_compile, 1)
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+                "output_bytes": getattr(ma, "output_size_in_bytes", None),
+                "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(ma, "generated_code_size_in_bytes", None),
+            }
+        except Exception as e:  # pragma: no cover
+            rec["memory"] = {"error": str(e)}
+        try:
+            ca = compiled.cost_analysis()
+            ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+            rec["xla_cost_analysis"] = {
+                "flops": float(ca.get("flops", -1)),
+                "bytes_accessed": float(ca.get("bytes accessed", -1)),
+            }
+        except Exception as e:  # pragma: no cover
+            rec["xla_cost_analysis"] = {"error": str(e)}
+
+        res = hlo_cost.analyze(compiled.as_text())
+        chips = int(np.prod(list(mesh.shape.values())))
+        chip = TPU_V5E
+        bf16_flops = res.flops - res.int8_dot_flops
+        t_comp = (bf16_flops / chip.peak_bf16
+                  + res.int8_dot_flops / chip.peak_int8)
+        t_mem = res.bytes / chip.hbm_bw
+        t_coll = res.collective_bytes / chip.ici_bw
+        terms = {"t_compute": t_comp, "t_memory": t_mem,
+                 "t_collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        # useful-model-flops ratio
+        n_active = cfg.param_count(active_only=True)
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                       else 1)
+        factor = 6 if shape.kind == "train" else 2
+        model_flops = factor * n_active * tokens
+        hlo_total = res.flops * chips
+        rec["roofline"] = {
+            "chips": chips,
+            "hlo_flops_per_device": res.flops,
+            "hlo_int8_flops_per_device": res.int8_dot_flops,
+            "hlo_bytes_per_device": res.bytes,
+            "collective_bytes_per_device": res.collective_bytes,
+            "collective_breakdown": res.coll_bytes,
+            "collective_counts": res.coll_counts,
+            **{k: v for k, v in terms.items()},
+            "dominant": dominant,
+            "step_time_lower_bound_s": max(terms.values()),
+            "model_flops": model_flops,
+            "useful_flops_ratio": model_flops / hlo_total if hlo_total else 0,
+            "roofline_fraction": (
+                t_comp / max(max(terms.values()), 1e-30)
+                * (model_flops / hlo_total) if hlo_total else 0.0),
+        }
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["elapsed_s"] = round(time.time() - t0, 1)
+    return _finish(rec, save)
+
+
+def quantize_lm_params_abstract(params):
+    """Abstract version of INT8 PTQ for eval_shape (same shapes/dtypes)."""
+    import jax.numpy as jnp
+    from repro.core.quantization import QUANT_LINEAR_KEYS
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            if ("w" in tree and hasattr(tree["w"], "ndim")
+                    and tree["w"].ndim >= 2
+                    and path and path[-1] in QUANT_LINEAR_KEYS
+                    and not any(s in path for s in ("router", "dt_proj",
+                                                    "x_proj"))):
+                w = tree["w"]
+                return {"w_q": jnp.zeros(w.shape, jnp.int8),
+                        "scale": jnp.zeros(w.shape[:-2] + w.shape[-1:],
+                                           jnp.float32)}
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            return type(tree)(walk(v, path + (i,))
+                              for i, v in enumerate(tree))
+        return tree
+    return walk(params)
+
+
+def _finish(rec: dict, save: bool) -> dict:
+    if save:
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        path = OUT_DIR / (rec["cell"].replace("/", "_") + ".json")
+        path.write_text(json.dumps(rec, indent=1, default=str))
+    status = rec.get("status")
+    extra = ""
+    if status == "ok":
+        r = rec["roofline"]
+        extra = (f" dom={r['dominant']} comp={r['t_compute']:.3e}s "
+                 f"mem={r['t_memory']:.3e}s coll={r['t_collective']:.3e}s")
+    elif status == "error":
+        extra = " " + rec.get("error", "")[:200]
+    print(f"[dryrun] {rec['cell']}: {status}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    archs = configs.list_archs() if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in LM_SHAPES] if args.shape == "all" else [args.shape]
+    for arch in archs:
+        for shape in shapes:
+            mesh_name = "2x16x16" if args.multi_pod else "16x16"
+            cell = f"{arch}__{shape}__{mesh_name}__{args.variant}"
+            path = OUT_DIR / (cell.replace("/", "_") + ".json")
+            if args.skip_existing and path.exists():
+                rec = json.loads(path.read_text())
+                if rec.get("status") in ("ok", "skipped"):
+                    print(f"[dryrun] {cell}: cached ({rec['status']})",
+                          flush=True)
+                    continue
+            run_cell(arch, shape, args.multi_pod, args.variant)
+
+
+if __name__ == "__main__":
+    main()

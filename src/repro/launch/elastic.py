@@ -1,0 +1,98 @@
+"""Elastic re-meshing + straggler mitigation policies (1000+ node posture).
+
+``replan(...)`` is the core primitive: given the current device inventory
+(after failures / preemptions / capacity changes) choose a new mesh shape,
+re-derive shardings, and restore the latest committed checkpoint onto it —
+keeping the GLOBAL batch constant by adjusting the microbatch count, so the
+optimizer trajectory is unchanged across re-meshes.
+
+Straggler mitigation at this layer is *topology-aware exclusion*: a chronic
+straggler (slow HBM / thermally throttled chip) is dropped from the healthy
+set and the mesh re-planned around it; within-step mitigation on real fleets
+(bitwise-deterministic redundant dispatch) is out of scope for a dry-run
+container and documented in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.launch import checkpoint as ckpt
+from repro.sharding import rules
+from repro.sharding.ctx import RunContext, make_ctx
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    num_microbatches: int
+    dropped_devices: List[int]
+
+
+def choose_mesh_shape(n_devices: int, model_parallel: int,
+                      global_batch: int) -> Tuple[int, int]:
+    """Largest (data, model) grid fitting the healthy device count, keeping
+    the model axis fixed (TP width is a property of the model, not the fleet)
+    and data divisible into the global batch."""
+    data = n_devices // model_parallel
+    while data > 1 and (global_batch % data != 0):
+        data -= 1
+    if data < 1:
+        raise ValueError(
+            f"cannot fit model_parallel={model_parallel} in {n_devices}")
+    return data, model_parallel
+
+
+def replan(healthy_devices: Sequence, model_parallel: int,
+           global_batch: int, target_microbatch_tokens: int,
+           seq_len: int) -> ElasticPlan:
+    n = len(healthy_devices)
+    data, model = choose_mesh_shape(n, model_parallel, global_batch)
+    per_device_batch = global_batch // data
+    micro = max(1, int(np.ceil(
+        per_device_batch * seq_len / max(target_microbatch_tokens, 1))))
+    while global_batch % (micro) or (global_batch // data) % micro:
+        micro -= 1
+    return ElasticPlan((data, model), ("data", "model"), max(micro, 1), [])
+
+
+def rebuild(plan: ElasticPlan, devices: Sequence, params_like,
+            opt_like, ckpt_dir: str):
+    """Construct the new mesh and restore the latest checkpoint onto it."""
+    devs = np.array(devices[: int(np.prod(plan.mesh_shape))]).reshape(
+        plan.mesh_shape)
+    mesh = Mesh(devs, plan.axis_names)
+    ctx = make_ctx(mesh)
+    p_sh = rules.param_shardings(params_like, ctx)
+    (params, opt_state), meta = ckpt.restore(
+        ckpt_dir, (params_like, opt_like), shardings=(p_sh, None))
+    return mesh, ctx, params, opt_state, meta
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Exclude devices whose step time is persistently above the fleet
+    median by `threshold` (e.g. 1.5x) for `patience` consecutive steps."""
+    threshold: float = 1.5
+    patience: int = 20
+
+    def __post_init__(self):
+        self._strikes = {}
+
+    def observe(self, step_times_by_device: dict) -> List:
+        med = float(np.median(list(step_times_by_device.values())))
+        to_drop = []
+        for dev, t in step_times_by_device.items():
+            if t > self.threshold * med:
+                self._strikes[dev] = self._strikes.get(dev, 0) + 1
+                if self._strikes[dev] >= self.patience:
+                    to_drop.append(dev)
+            else:
+                self._strikes[dev] = 0
+        return to_drop

@@ -1,0 +1,245 @@
+"""GQA attention: chunked (flash-style) training/prefill path + decode path.
+
+Training/prefill uses an online-softmax KV-chunked scan (pure jnp, XLA path —
+its FLOPs/bytes are visible to ``cost_analysis`` for the roofline). The Pallas
+TPU kernel in ``repro.kernels.flash_attention`` is the deployment hot path and
+is validated against this implementation.
+
+Decode attends a single new token against a (possibly INT8-quantized) KV cache
+laid out (B, S, Hkv, hd) so the sequence axis can be sharded across the
+``model`` mesh axis (flash-decoding style sequence parallelism: local partial
+softmax stats + tiny cross-shard reductions, inserted automatically by GSPMD).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ params
+def attention_init(key, cfg) -> dict:
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": L.linear_init(k1, cfg.d_model, cfg.n_heads * hd),
+        "wk": L.linear_init(k2, cfg.d_model, cfg.n_kv_heads * hd),
+        "wv": L.linear_init(k3, cfg.d_model, cfg.n_kv_heads * hd),
+        "wo": L.linear_init(k4, cfg.n_heads * hd, cfg.d_model),
+    }
+
+
+def _split_heads(x, n_heads, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, hd)
+
+
+# ------------------------------------------------------------------ flash
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, chunk_kv: int = 1024,
+                    q_offset: int = 0) -> jax.Array:
+    """Online-softmax attention, KV-chunked.
+
+    q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd), Hq = G * Hkv.
+    Returns (B, Sq, Hq, hd). Scores and stats in f32.
+    """
+    b, sq, hq, hd = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = hd ** -0.5
+    chunk_kv = min(chunk_kv, skv)
+    assert skv % chunk_kv == 0, (skv, chunk_kv)
+    n_chunks = skv // chunk_kv
+
+    # bf16 operands, f32 accumulation (MXU native mode).
+    qs = (q.astype(jnp.float32) * scale).astype(L.COMPUTE_DTYPE)
+    qs = qs.reshape(b, sq, hkv, g, hd)
+    kc = k.reshape(b, n_chunks, chunk_kv, hkv, hd)
+    vc = v.reshape(b, n_chunks, chunk_kv, hkv, hd)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        k_j, v_j, j = xs
+        kv_pos = j * chunk_kv + jnp.arange(chunk_kv)
+        # scores: (B, Sq, Hkv, G, Ckv)
+        s = jnp.einsum("bqhgd,bchd->bqhgc", qs, k_j,
+                       preferred_element_type=jnp.float32)
+        if causal:
+            mask = kv_pos[None, :] <= q_pos[:, None]           # (Sq, Ckv)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgc,bchd->bqhgd", p.astype(L.COMPUTE_DTYPE), v_j,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, hkv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, hkv, g), jnp.float32)
+    acc0 = jnp.zeros((b, sq, hkv, g, hd), jnp.float32)
+    ks = jnp.moveaxis(kc, 1, 0)
+    vs = jnp.moveaxis(vc, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0),
+                                  (ks, vs, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, hq, hd).astype(L.COMPUTE_DTYPE)
+
+
+# ------------------------------------------------------------------ KV cache
+@dataclasses.dataclass
+class CacheSpec:
+    quantized: bool = False     # INT8 KV cache (beyond-paper: HQP applied to KV)
+
+
+def init_kv_cache(batch: int, max_seq: int, n_kv_heads: int, hd: int,
+                  quantized: bool = False) -> dict:
+    if quantized:
+        return {
+            "k_q": jnp.zeros((batch, max_seq, n_kv_heads, hd), jnp.int8),
+            "v_q": jnp.zeros((batch, max_seq, n_kv_heads, hd), jnp.int8),
+            "k_s": jnp.zeros((batch, max_seq, n_kv_heads), jnp.float32),
+            "v_s": jnp.zeros((batch, max_seq, n_kv_heads), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((batch, max_seq, n_kv_heads, hd), L.COMPUTE_DTYPE),
+        "v": jnp.zeros((batch, max_seq, n_kv_heads, hd), L.COMPUTE_DTYPE),
+    }
+
+
+def _quant_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per (batch, pos, head) symmetric int8. x: (B, S, Hkv, hd)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    s = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+def update_kv_cache(cache: dict, k_new: jax.Array, v_new: jax.Array,
+                    pos: jax.Array) -> dict:
+    """Insert (B, Sn, Hkv, hd) at position ``pos`` (scalar int32)."""
+    idx = (0, pos, 0, 0)
+    if "k_q" in cache:
+        kq, ks = _quant_kv(k_new)
+        vq, vs = _quant_kv(v_new)
+        return {
+            "k_q": jax.lax.dynamic_update_slice(cache["k_q"], kq, idx),
+            "v_q": jax.lax.dynamic_update_slice(cache["v_q"], vq, idx),
+            "k_s": jax.lax.dynamic_update_slice(cache["k_s"], ks, idx[:3]),
+            "v_s": jax.lax.dynamic_update_slice(cache["v_s"], vs, idx[:3]),
+        }
+    return {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), idx),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), idx),
+    }
+
+
+def decode_attention(q: jax.Array, cache: dict, cur_len: jax.Array) -> jax.Array:
+    """q: (B, 1, Hq, hd) new-token queries; attends cache[:cur_len].
+
+    Masked full-cache einsum: O(S) memory traffic (the decode bottleneck the
+    INT8 cache halves). Softmax reductions over the (possibly model-sharded)
+    S axis lower to small cross-shard all-reduces.
+    """
+    b, _, hq, hd = q.shape
+    quantized = "k_q" in cache
+    if quantized:
+        kf, vf = cache["k_q"], cache["v_q"]              # int8, dequant via scores
+    else:
+        kf, vf = cache["k"], cache["v"]
+    skv, hkv = kf.shape[1], kf.shape[2]
+    g = hq // hkv
+    qg = (q.reshape(b, hkv, g, hd).astype(jnp.float32) * hd ** -0.5
+          ).astype(L.COMPUTE_DTYPE)
+    # scores: (B, Hkv, G, S). For the int8 cache the per-(pos,head) scale is
+    # applied to the score/probability matrices (size B·H·S) instead of the
+    # cache (size B·H·S·hd): the cache itself is only ever read as int8.
+    s = jnp.einsum("bhgd,bchd->bhgc", qg, kf.astype(L.COMPUTE_DTYPE),
+                   preferred_element_type=jnp.float32)
+    if quantized:
+        s = s * jnp.transpose(cache["k_s"], (0, 2, 1))[:, :, None, :]
+    mask = jnp.arange(skv)[None, None, None, :] < cur_len
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if quantized:
+        p = p * jnp.transpose(cache["v_s"], (0, 2, 1))[:, :, None, :]
+    out = jnp.einsum("bhgc,bchd->bhgd", p.astype(L.COMPUTE_DTYPE),
+                     vf.astype(L.COMPUTE_DTYPE),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq, hd).astype(L.COMPUTE_DTYPE)
+
+
+# ------------------------------------------------------------------ block fwd
+def _context_parallel(q, k, v, ctx):
+    """Re-shard attention over the SEQUENCE instead of heads.
+
+    When n_kv_heads doesn't divide the TP width (GQA-8 on a 16-wide model
+    axis — six of the ten assigned archs), GSPMD splits the head_dim across
+    ranks and must all-reduce full f32 score tensors every KV chunk
+    (arctic-480b: 1.9 GB x 140 per step — EXPERIMENTS.md §Perf iteration 3).
+    Sharding queries over (model=sequence) keeps every score tile local; the
+    price is one KV broadcast per layer (B·S·Hkv·hd bf16, ≪ the scores)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    bspec = ctx.batch_spec()[0]
+    mdl = ctx.model_axis
+    sh = lambda t, spec: jax.lax.with_sharding_constraint(
+        t, NamedSharding(ctx.mesh, spec))
+    q = sh(q, P(bspec, mdl, None, None))
+    k = sh(k, P(bspec, None, None, None))
+    v = sh(v, P(bspec, None, None, None))
+    return q, k, v
+
+
+def attention_forward(p: dict, cfg, x: jax.Array, positions: jax.Array,
+                      cache: Optional[dict] = None,
+                      cur_len: Optional[jax.Array] = None,
+                      ctx=None) -> Tuple[jax.Array, Optional[dict]]:
+    """Full attention sub-block (no norm/residual — block owns those).
+
+    Train/prefill: cache is None -> flash path (optionally returns nothing).
+    Decode: cache given, x is (B, 1, d), cur_len = tokens already in cache.
+    """
+    hd = cfg.resolved_head_dim
+    b, s, _ = x.shape
+    # head counts derive from (possibly HQP-compacted) param shapes
+    wq = p["wq"].get("w", p["wq"].get("w_q"))
+    wk = p["wk"].get("w", p["wk"].get("w_q"))
+    n_heads = wq.shape[-1] // hd
+    n_kv = wk.shape[-1] // hd
+    q = _split_heads(L.dense(x, p["wq"]), n_heads, hd)
+    k = _split_heads(L.dense(x, p["wk"]), n_kv, hd)
+    v = _split_heads(L.dense(x, p["wv"]), n_kv, hd)
+    if cfg.qk_norm:
+        q, k = L.l2norm(q), L.l2norm(k)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    use_cp = (s > 1 and ctx is not None and not ctx.pure_dp
+              and ctx.mesh.size > 1 and ctx.tp_size > 1
+              and n_kv % ctx.tp_size != 0 and s % ctx.tp_size == 0)
+    if use_cp:
+        q, k, v = _context_parallel(q, k, v, ctx)
+
+    if cache is None:
+        o = flash_attention(q, k, v, causal=True, chunk_kv=cfg.attn_chunk_kv)
+        new_cache = None
+    elif s > 1:
+        # cache-filling prefill: write K/V, attend locally (starts at pos 0)
+        new_cache = update_kv_cache(cache, k, v, cur_len)
+        o = flash_attention(q, k, v, causal=True, chunk_kv=cfg.attn_chunk_kv)
+    else:
+        new_cache = update_kv_cache(cache, k, v, cur_len)
+        o = decode_attention(q, new_cache, cur_len + s)
+    out = L.dense(o.reshape(b, s, n_heads * hd), p["wo"])
+    return out, new_cache

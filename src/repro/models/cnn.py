@@ -1,0 +1,247 @@
+"""ResNet-18 and MobileNetV3-Small in pure JAX (the paper's two test archs).
+
+Functional params-as-pytrees; all shapes are read from params (not config) so
+HQP structural pruning is pure *parameter surgery*: masking zeroes channels
+(for the conditional-loop evaluation) and compaction physically removes them
+(the deploy artifact) without touching model code.
+
+Layout NHWC, weights HWIO. BatchNorm carries running stats in a separate
+"stats" subtree (functionally updated during training, EMA for eval).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BN_MOM = 0.9
+
+
+# ------------------------------------------------------------------ prims
+def conv_init(key, k: int, c_in: int, c_out: int, depthwise: bool = False):
+    fan = k * k * (1 if depthwise else c_in)
+    shape = (k, k, 1 if depthwise else c_in, c_out)
+    return (jax.random.normal(key, shape) * (2.0 / fan) ** 0.5).astype(jnp.float32)
+
+
+def conv(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def bn_init(c: int):
+    return ({"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))},
+            {"mean": jnp.zeros((c,)), "var": jnp.ones((c,))})
+
+
+def bn_apply(p, stats, x, train: bool):
+    if train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new_stats = {"mean": BN_MOM * stats["mean"] + (1 - BN_MOM) * mean,
+                     "var": BN_MOM * stats["var"] + (1 - BN_MOM) * var}
+    else:
+        mean, var = stats["mean"], stats["var"]
+        new_stats = stats
+    y = (x - mean) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    return y, new_stats
+
+
+def hswish(x):
+    return x * jax.nn.relu6(x + 3.0) / 6.0
+
+
+def hsigmoid(x):
+    return jax.nn.relu6(x + 3.0) / 6.0
+
+
+# ====================================================================
+# ResNet-18
+# ====================================================================
+RESNET_STAGES = ((2, 64, 1), (2, 128, 2), (2, 256, 2), (2, 512, 2))
+
+
+def _basic_block_init(key, c_in, c_out, stride):
+    ks = jax.random.split(key, 3)
+    p: Dict[str, Any] = {}
+    st: Dict[str, Any] = {}
+    p["conv1"] = conv_init(ks[0], 3, c_in, c_out)
+    p["bn1"], st["bn1"] = bn_init(c_out)
+    p["conv2"] = conv_init(ks[1], 3, c_out, c_out)
+    p["bn2"], st["bn2"] = bn_init(c_out)
+    if stride != 1 or c_in != c_out:
+        p["down"] = conv_init(ks[2], 1, c_in, c_out)
+        p["bn_down"], st["bn_down"] = bn_init(c_out)
+    return p, st
+
+
+def resnet18_init(key, cfg) -> dict:
+    wm = cfg.width_mult
+    ks = jax.random.split(key, 2 + sum(s[0] for s in RESNET_STAGES))
+    params: Dict[str, Any] = {}
+    stats: Dict[str, Any] = {}
+    c = int(64 * wm)
+    params["stem"] = conv_init(ks[0], 3, 3, c)
+    params["bn_stem"], stats["bn_stem"] = bn_init(c)
+    ki = 1
+    for si, (n_blocks, width, stride) in enumerate(RESNET_STAGES):
+        c_out = int(width * wm)
+        for bi in range(n_blocks):
+            p, st = _basic_block_init(ks[ki], c, c_out, stride if bi == 0 else 1)
+            params[f"s{si}b{bi}"] = p
+            stats[f"s{si}b{bi}"] = st
+            c = c_out
+            ki += 1
+    params["fc"] = {"w": (jax.random.normal(ks[ki], (c, cfg.n_classes))
+                          * c ** -0.5).astype(jnp.float32),
+                    "b": jnp.zeros((cfg.n_classes,))}
+    return {"params": params, "stats": stats}
+
+
+def _basic_block_apply(p, st, x, stride, train, actq=None, name=""):
+    tap = actq.tap if actq is not None else (lambda n, v: v)
+    new_st = {}
+    h = conv(x, p["conv1"], stride)
+    h, new_st["bn1"] = bn_apply(p["bn1"], st["bn1"], h, train)
+    h = tap(f"{name}/act1", jax.nn.relu(h))
+    h = conv(h, p["conv2"], 1)
+    h, new_st["bn2"] = bn_apply(p["bn2"], st["bn2"], h, train)
+    if "down" in p:
+        x = conv(x, p["down"], stride)
+        x, new_st["bn_down"] = bn_apply(p["bn_down"], st["bn_down"], x, train)
+    return tap(f"{name}/out", jax.nn.relu(h + x)), new_st
+
+
+def resnet18_apply(variables: dict, x: jax.Array, train: bool = False,
+                   actq=None):
+    tap = actq.tap if actq is not None else (lambda n, v: v)
+    p, st = variables["params"], variables["stats"]
+    new_st: Dict[str, Any] = {}
+    h = conv(tap("input", x), p["stem"], 1)
+    h, new_st["bn_stem"] = bn_apply(p["bn_stem"], st["bn_stem"], h, train)
+    h = tap("stem", jax.nn.relu(h))
+    for si, (n_blocks, _, stride) in enumerate(RESNET_STAGES):
+        for bi in range(n_blocks):
+            name = f"s{si}b{bi}"
+            h, new_st[name] = _basic_block_apply(
+                p[name], st[name], h, stride if bi == 0 else 1, train,
+                actq, name)
+    h = jnp.mean(h, axis=(1, 2))
+    logits = h @ p["fc"]["w"] + p["fc"]["b"]
+    return logits, new_st
+
+
+# ====================================================================
+# MobileNetV3-Small (strides adapted to 32px input)
+# ====================================================================
+# (kernel, expansion, out, SE, hswish?, stride)
+MBV3S_BLOCKS: List[Tuple[int, int, int, bool, bool, int]] = [
+    (3, 16, 16, True, False, 1),
+    (3, 72, 24, False, False, 2),
+    (3, 88, 24, False, False, 1),
+    (5, 96, 40, True, True, 2),
+    (5, 240, 40, True, True, 1),
+    (5, 240, 40, True, True, 1),
+    (5, 120, 48, True, True, 1),
+    (5, 144, 48, True, True, 1),
+    (5, 288, 96, True, True, 2),
+    (5, 576, 96, True, True, 1),
+    (5, 576, 96, True, True, 1),
+]
+
+
+def _bneck_init(key, c_in, k, exp, out, se):
+    ks = jax.random.split(key, 5)
+    p: Dict[str, Any] = {}
+    st: Dict[str, Any] = {}
+    p["expand"] = conv_init(ks[0], 1, c_in, exp)
+    p["bn_e"], st["bn_e"] = bn_init(exp)
+    p["dw"] = conv_init(ks[1], k, exp, exp, depthwise=True)
+    p["bn_d"], st["bn_d"] = bn_init(exp)
+    if se:
+        c_se = max(8, exp // 4)
+        p["se_down"] = {"w": conv_init(ks[2], 1, exp, c_se),
+                        "b": jnp.zeros((c_se,))}
+        p["se_up"] = {"w": conv_init(ks[3], 1, c_se, exp),
+                      "b": jnp.zeros((exp,))}
+    p["project"] = conv_init(ks[4], 1, exp, out)
+    p["bn_p"], st["bn_p"] = bn_init(out)
+    return p, st
+
+
+def mobilenetv3s_init(key, cfg) -> dict:
+    wm = cfg.width_mult
+    ks = jax.random.split(key, len(MBV3S_BLOCKS) + 3)
+    params: Dict[str, Any] = {}
+    stats: Dict[str, Any] = {}
+    c = int(16 * wm)
+    params["stem"] = conv_init(ks[0], 3, 3, c)
+    params["bn_stem"], stats["bn_stem"] = bn_init(c)
+    for i, (k, exp, out, se, hs, stride) in enumerate(MBV3S_BLOCKS):
+        p, st = _bneck_init(ks[i + 1], c, k, int(exp * wm), int(out * wm), se)
+        params[f"b{i}"] = p
+        stats[f"b{i}"] = st
+        c = int(out * wm)
+    c_head = int(576 * wm)
+    params["head"] = conv_init(ks[-2], 1, c, c_head)
+    params["bn_head"], stats["bn_head"] = bn_init(c_head)
+    params["fc"] = {"w": (jax.random.normal(ks[-1], (c_head, cfg.n_classes))
+                          * c_head ** -0.5).astype(jnp.float32),
+                    "b": jnp.zeros((cfg.n_classes,))}
+    return {"params": params, "stats": stats}
+
+
+def _bneck_apply(p, st, x, k, se, hs, stride, train, actq=None, name=""):
+    tap = actq.tap if actq is not None else (lambda n, v: v)
+    act = hswish if hs else jax.nn.relu
+    new_st = {}
+    exp = p["expand"].shape[-1]
+    h = conv(x, p["expand"], 1)
+    h, new_st["bn_e"] = bn_apply(p["bn_e"], st["bn_e"], h, train)
+    h = tap(f"{name}/e", act(h))
+    h = conv(h, p["dw"], stride, groups=exp)
+    h, new_st["bn_d"] = bn_apply(p["bn_d"], st["bn_d"], h, train)
+    h = tap(f"{name}/d", act(h))
+    if se:
+        pooled = jnp.mean(h, axis=(1, 2), keepdims=True)
+        a = jax.nn.relu(conv(pooled, p["se_down"]["w"]) + p["se_down"]["b"])
+        a = hsigmoid(conv(a, p["se_up"]["w"]) + p["se_up"]["b"])
+        h = h * a
+    h = conv(h, p["project"], 1)
+    h, new_st["bn_p"] = bn_apply(p["bn_p"], st["bn_p"], h, train)
+    if stride == 1 and x.shape[-1] == h.shape[-1]:
+        h = h + x
+    return tap(f"{name}/out", h), new_st
+
+
+def mobilenetv3s_apply(variables: dict, x: jax.Array, train: bool = False,
+                       actq=None):
+    tap = actq.tap if actq is not None else (lambda n, v: v)
+    p, st = variables["params"], variables["stats"]
+    new_st: Dict[str, Any] = {}
+    h = conv(tap("input", x), p["stem"], 1)
+    h, new_st["bn_stem"] = bn_apply(p["bn_stem"], st["bn_stem"], h, train)
+    h = tap("stem", hswish(h))
+    for i, (k, exp, out, se, hs, stride) in enumerate(MBV3S_BLOCKS):
+        name = f"b{i}"
+        h, new_st[name] = _bneck_apply(p[name], st[name], h, k, se, hs,
+                                       stride, train, actq, name)
+    h = conv(h, p["head"], 1)
+    h, new_st["bn_head"] = bn_apply(p["bn_head"], st["bn_head"], h, train)
+    h = tap("head", hswish(h))
+    h = jnp.mean(h, axis=(1, 2))
+    logits = h @ p["fc"]["w"] + p["fc"]["b"]
+    return logits, new_st
+
+
+# ------------------------------------------------------------------ facade
+def cnn_init(key, cfg) -> dict:
+    return (resnet18_init if cfg.arch == "resnet18" else mobilenetv3s_init)(key, cfg)
+
+
+def cnn_apply(cfg, variables, x, train: bool = False, actq=None):
+    fn = resnet18_apply if cfg.arch == "resnet18" else mobilenetv3s_apply
+    return fn(variables, x, train, actq)

@@ -1,0 +1,315 @@
+"""Unified decoder LM over heterogeneous block patterns.
+
+One model definition covers all ten assigned architectures: dense GQA
+transformers, MoE, Mamba-hybrid (jamba), and xLSTM stacks. The layer pattern
+(cfg.pattern x MoE placement) is reduced to its minimal period ``p``; params
+are stacked over the ``n_layers/p`` repetitions and the stack is driven by
+``lax.scan`` (HLO stays O(p) regardless of depth — compile-time and HLO-size
+are depth-independent, which matters at 72 layers x 512 devices).
+
+Decode state is a per-period-position pytree stacked over groups, scanned
+jointly with the params.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as SSM
+from repro.models import xlstm as X
+from repro.sharding.ctx import RunContext, default_ctx
+
+
+# ------------------------------------------------------------------ pattern
+def layer_specs(cfg) -> Tuple[Tuple[str, bool], ...]:
+    return tuple((kind, cfg.is_moe_layer(i)) for i, kind in enumerate(cfg.pattern))
+
+
+def pattern_period(cfg) -> int:
+    spec = layer_specs(cfg)
+    n = len(spec)
+    for p in range(1, n + 1):
+        if n % p == 0 and all(spec[i] == spec[i % p] for i in range(n)):
+            return p
+    return n
+
+
+VOCAB_PAD = 256
+
+
+def padded_vocab(cfg) -> int:
+    """Vocab rounded up so the embedding/unembedding tables shard evenly on
+    any mesh axis (granite's 49155 is odd: unpadded it falls back to a fully
+    replicated table — an 806 MB f32 read per decode step on the 16x16 mesh;
+    EXPERIMENTS.md §Perf granite iteration 2). Padding logits are masked to
+    -inf, so the distribution over real tokens is unchanged."""
+    return -(-cfg.vocab_size // VOCAB_PAD) * VOCAB_PAD
+
+
+# ------------------------------------------------------------------ init
+def _block_init(key, cfg, kind: str, is_moe: bool) -> dict:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": L.rmsnorm_init(cfg.d_model)}
+    if kind == "attn":
+        p["attn"] = A.attention_init(ks[0], cfg)
+    elif kind == "mamba":
+        p["mamba"] = SSM.mamba_init(ks[0], cfg)
+    elif kind == "mlstm":
+        p["mlstm"] = X.mlstm_init(ks[0], cfg)
+        return p
+    elif kind == "slstm":
+        p["slstm"] = X.slstm_init(ks[0], cfg)
+        return p
+    else:
+        raise ValueError(kind)
+    if cfg.d_ff > 0:
+        p["norm2"] = L.rmsnorm_init(cfg.d_model)
+        if is_moe:
+            p["moe"] = M.moe_init(ks[1], cfg)
+            if cfg.moe.dense_residual:
+                p["mlp"] = L.mlp_init(ks[2], cfg.d_model, cfg.d_ff)
+        else:
+            p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init_params(key, cfg) -> dict:
+    period = pattern_period(cfg)
+    groups = cfg.n_layers // period
+    spec = layer_specs(cfg)
+    k_emb, k_fr, k_blocks = jax.random.split(key, 3)
+    v_pad = padded_vocab(cfg)
+    params: Dict[str, Any] = {"embed": L.embed_init(k_emb, v_pad,
+                                                    cfg.d_model)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.embed_init(
+            jax.random.fold_in(k_emb, 1), v_pad, cfg.d_model)
+    if cfg.frontend.kind != "none":
+        params["frontend"] = L.linear_init(k_fr, cfg.d_model, cfg.d_model)
+    layer_keys = jax.random.split(k_blocks, cfg.n_layers)
+    per_layer = [_block_init(layer_keys[i], cfg, *spec[i])
+                 for i in range(cfg.n_layers)]
+    blocks = []
+    for j in range(period):
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[per_layer[g * period + j] for g in range(groups)])
+        blocks.append(stacked)
+    params["blocks"] = tuple(blocks)
+    params["final_norm"] = L.rmsnorm_init(cfg.d_model)
+    return params
+
+
+# ------------------------------------------------------------------ blocks
+def _ffn_part(p: dict, cfg, x, is_moe: bool, ctx, with_aux: bool):
+    if cfg.d_ff <= 0:
+        return x, {}
+    h = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+    aux = {}
+    if is_moe:
+        out, aux = M.moe_forward(p["moe"], cfg, h, ctx, with_aux)
+        if cfg.moe.dense_residual:
+            out = out + L.mlp(h, p["mlp"])
+    else:
+        out = L.mlp(h, p["mlp"])
+    return x + out, aux
+
+
+def _block_forward(kind: str, is_moe: bool, p: dict, cfg, x, positions, ctx,
+                   cache=None, cur_len=None, with_aux: bool = False):
+    h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+    new_cache = cache
+    if kind == "attn":
+        a, new_cache = A.attention_forward(p["attn"], cfg, h, positions,
+                                           cache, cur_len, ctx)
+        x = x + a
+        x, aux = _ffn_part(p, cfg, x, is_moe, ctx, with_aux)
+    elif kind == "mamba":
+        m_out, new_cache = SSM.mamba_forward(p["mamba"], cfg, h, cache)
+        x = x + m_out
+        x, aux = _ffn_part(p, cfg, x, is_moe, ctx, with_aux)
+    elif kind == "mlstm":
+        y, new_cache = X.mlstm_forward(p["mlstm"], cfg, h, cache)
+        x, aux = x + y, {}
+    elif kind == "slstm":
+        y, new_cache = X.slstm_forward(p["slstm"], cfg, h, cache)
+        x, aux = x + y, {}
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+def _shard_x(x, ctx: RunContext):
+    if ctx.mesh.size > 1:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(
+                ctx.mesh, P(ctx.batch_spec()[0], None, None)))
+    return x
+
+
+# ------------------------------------------------------------------ forward
+def forward(params: dict, cfg, batch: dict, ctx: Optional[RunContext] = None,
+            with_aux: bool = False) -> Tuple[jax.Array, dict]:
+    """Returns (final hidden states (B, S, d), aux losses)."""
+    ctx = ctx or default_ctx()
+    x = L.embed_lookup(params["embed"], batch["tokens"])
+    if cfg.frontend.kind != "none":
+        fr = L.dense(batch["embeds"].astype(L.COMPUTE_DTYPE),
+                     params["frontend"])
+        x = jnp.concatenate([fr, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    period = pattern_period(cfg)
+    spec = layer_specs(cfg)[:period]
+    has_moe = any(m for _, m in spec) and with_aux
+    aux0 = ({"load_balance": jnp.zeros((), jnp.float32),
+             "router_z": jnp.zeros((), jnp.float32)} if has_moe else {})
+
+    def group(carry, block_params):
+        x, aux = carry
+        x = _shard_x(x, ctx)
+        for j, (kind, is_moe) in enumerate(spec):
+            x, _, aux_j = _block_forward(kind, is_moe, block_params[j], cfg,
+                                         x, positions, ctx,
+                                         with_aux=with_aux)
+            if has_moe and aux_j:
+                aux = {k: aux[k] + aux_j[k] for k in aux}
+        return (x, aux), None
+
+    body = group
+    if ctx.remat:
+        body = jax.checkpoint(
+            group, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), _ = jax.lax.scan(body, (x, aux0), params["blocks"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def unembed_params(params, cfg):
+    return params["embed"] if cfg.tie_embeddings else params["unembed"]
+
+
+def logits_fn(params, cfg, hidden) -> jax.Array:
+    logits = L.unembed(unembed_params(params, cfg), hidden)
+    return _mask_pad(logits, cfg)
+
+
+def _mask_pad(logits, cfg):
+    v_pad = logits.shape[-1]
+    if v_pad == cfg.vocab_size:
+        return logits
+    mask = jnp.arange(v_pad) < cfg.vocab_size
+    return jnp.where(mask, logits, -1e30)
+
+
+def loss_fn(params: dict, cfg, batch: dict,
+            ctx: Optional[RunContext] = None, with_aux: bool = True,
+            ce_chunk: int = 512) -> Tuple[jax.Array, dict]:
+    """Next-token CE over text positions, sequence-chunked so the (B,S,V)
+    logits tensor is never materialized (peak is (B, ce_chunk, V))."""
+    ctx = ctx or default_ctx()
+    hidden, aux = forward(params, cfg, batch, ctx, with_aux)
+    n_fr = cfg.frontend.n_embeds if cfg.frontend.kind != "none" else 0
+    tokens = batch["tokens"]
+    b, st = tokens.shape
+    # hidden positions n_fr..n_fr+st-2 predict tokens 1..st-1
+    h = hidden[:, n_fr:n_fr + st - 1]
+    targets = tokens[:, 1:]
+    n_tok = h.shape[1]
+    ce_chunk = min(ce_chunk, n_tok)
+    n_chunks = n_tok // ce_chunk
+    rem = n_tok - n_chunks * ce_chunk
+    ue = unembed_params(params, cfg)
+
+    def ce(hc, tc):
+        lg = _mask_pad(L.unembed(ue, hc), cfg)           # (B, c, V) f32
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tc[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    def step(acc, xs):
+        hc, tc = xs
+        return acc + ce(hc, tc), None
+
+    hs = jnp.moveaxis(
+        h[:, :n_chunks * ce_chunk].reshape(b, n_chunks, ce_chunk, -1), 1, 0)
+    ts = jnp.moveaxis(
+        targets[:, :n_chunks * ce_chunk].reshape(b, n_chunks, ce_chunk), 1, 0)
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (hs, ts))
+    if rem:
+        total = total + ce(h[:, n_chunks * ce_chunk:],
+                           targets[:, n_chunks * ce_chunk:])
+    loss = total / (b * n_tok)
+    for v in aux.values():
+        loss = loss + v
+    return loss, aux
+
+
+# ------------------------------------------------------------------ decode
+def init_decode_state(cfg, batch: int, max_seq: int,
+                      ctx: Optional[RunContext] = None) -> dict:
+    """Stacked per-period-position caches + current length."""
+    ctx = ctx or default_ctx()
+    period = pattern_period(cfg)
+    groups = cfg.n_layers // period
+    spec = layer_specs(cfg)[:period]
+    hd = cfg.resolved_head_dim
+
+    def stack(make):
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[make() for _ in range(groups)])
+
+    caches = []
+    for kind, _ in spec:
+        if kind == "attn":
+            caches.append(stack(lambda: A.init_kv_cache(
+                batch, max_seq, cfg.n_kv_heads, hd, ctx.quantized_kv)))
+        elif kind == "mamba":
+            caches.append(stack(lambda: SSM.init_mamba_state(batch, cfg)))
+        elif kind == "mlstm":
+            caches.append(stack(lambda: X.init_mlstm_state(batch, cfg)))
+        elif kind == "slstm":
+            caches.append(stack(lambda: X.init_slstm_state(batch, cfg)))
+    return {"caches": tuple(caches), "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params: dict, cfg, state: dict, tokens: jax.Array,
+                ctx: Optional[RunContext] = None,
+                embeds: Optional[jax.Array] = None) -> Tuple[jax.Array, dict]:
+    """tokens: (B, S_new) (S_new=1 for decode, >1 for cache-filling prefill).
+
+    ``embeds``: optional precomputed frontend embeddings, prepended during
+    prefill (VLM patches / audio frames). Returns (logits, new state)."""
+    ctx = ctx or default_ctx()
+    x = L.embed_lookup(params["embed"], tokens)
+    if embeds is not None and cfg.frontend.kind != "none":
+        fr = L.dense(embeds.astype(L.COMPUTE_DTYPE), params["frontend"])
+        x = jnp.concatenate([fr, x], axis=1)
+    b, s, _ = x.shape
+    cur = state["pos"]
+    positions = cur + jnp.arange(s)
+    period = pattern_period(cfg)
+    spec = layer_specs(cfg)[:period]
+
+    def group(x, xs):
+        block_params, caches = xs
+        x = _shard_x(x, ctx)
+        new_caches = []
+        for j, (kind, is_moe) in enumerate(spec):
+            x, nc, _ = _block_forward(kind, is_moe, block_params[j], cfg, x,
+                                      positions, ctx, caches[j], cur)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(group, x,
+                                 (params["blocks"], state["caches"]))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(params, cfg, x)
+    return logits, {"caches": new_caches, "pos": cur + s}

@@ -1,0 +1,177 @@
+"""Mixture-of-Experts with expert parallelism via shard_map.
+
+Design (see DESIGN.md §5): activations entering a MoE layer are replicated
+across the ``model`` axis and sharded over the data axes, while experts are
+sharded over ``model`` (EP). Each device therefore:
+
+  1. computes the router for its *local* tokens (router weights replicated),
+  2. gathers the tokens assigned to its *own* experts into a fixed-capacity
+     (E_local, C, d) buffer (sort-based dispatch — no dense one-hot einsum,
+     whose dispatch matmul would cost O(N·d·E·C) fake FLOPs),
+  3. runs the expert FFNs as one batched matmul (MXU-friendly),
+  4. scatter-adds weighted outputs back to token slots, and
+  5. psums over ``model`` — which doubles as the tensor-parallel reduction.
+
+No token ever leaves its data shard: EP costs one (N_local, d) all-reduce per
+MoE layer instead of two all-to-alls, and composes with FSDP on the data axes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.models import layers as L
+
+
+def moe_init(key, cfg) -> dict:
+    m = cfg.moe
+    d, ff, e = cfg.d_model, cfg.d_ff, m.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": {"w": L.he_init(k1, (d, e), jnp.float32),
+                   "b": jnp.zeros((e,), jnp.float32)},
+        "gate": {"w": L.he_init(k2, (e, d, ff), L.COMPUTE_DTYPE, fan_in=d)},
+        "up": {"w": L.he_init(k3, (e, d, ff), L.COMPUTE_DTYPE, fan_in=d)},
+        "down": {"w": L.he_init(k4, (e, ff, d), L.COMPUTE_DTYPE, fan_in=ff)},
+    }
+
+
+def _capacity(n_tokens: int, cfg) -> int:
+    m = cfg.moe
+    c = int(m.experts_per_token * n_tokens * m.capacity_factor / m.n_experts) + 1
+    return max(4, min(c, n_tokens))
+
+
+def _expert_ffn(xb: jax.Array, p: dict) -> jax.Array:
+    """xb: (E_loc, C, d); expert weights (E_loc, d, ff)/(E_loc, ff, d)."""
+    def one(x, g, u, dn):
+        h = jax.nn.silu(jnp.dot(x, g)) * jnp.dot(x, u)
+        return jnp.dot(h.astype(L.COMPUTE_DTYPE), dn)
+    gw = p["gate"].get("w_q", p["gate"].get("w"))
+    # quantized experts: dequant per expert inside the vmap (scale per out-col)
+    if "w_q" in p["gate"]:
+        def one_q(x, pg, pu, pd):
+            h = jax.nn.silu(_qdot(x, pg)) * _qdot(x, pu)
+            return _qdot(h.astype(L.COMPUTE_DTYPE), pd)
+        return jax.vmap(one_q)(xb,
+                               {k: p["gate"][k] for k in ("w_q", "scale")},
+                               {k: p["up"][k] for k in ("w_q", "scale")},
+                               {k: p["down"][k] for k in ("w_q", "scale")})
+    return jax.vmap(one)(xb, p["gate"]["w"], p["up"]["w"], p["down"]["w"])
+
+
+def _qdot(x: jax.Array, p: dict) -> jax.Array:
+    from repro.kernels import ops as kops
+    return kops.int8_matmul(x, p["w_q"], p["scale"])
+
+
+def _moe_local(x: jax.Array, params: dict, cfg, e_start: jax.Array,
+               e_local: int, capacity: int, data_axes: Tuple[str, ...],
+               model_axis: str, with_aux: bool):
+    """Per-shard MoE body. x: (N_loc, d) local tokens, model-replicated."""
+    m = cfg.moe
+    n, d = x.shape
+    k = m.experts_per_token
+    e = params["router"]["w"].shape[-1]
+
+    logits = (jnp.dot(x.astype(jnp.float32), params["router"]["w"])
+              + params["router"]["b"])                               # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)                  # (N, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # flat (token, expert) pairs, sorted by expert for capacity ranking
+    flat_e = expert_idx.reshape(-1)                                  # (N*k,)
+    flat_g = gate_vals.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(n), k)
+    order = jnp.argsort(flat_e)                                      # stable
+    se, sg, st = flat_e[order], flat_g[order], flat_t[order]
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(n * k) - starts[se]                            # pos in expert
+
+    local = (se >= e_start) & (se < e_start + e_local) & (rank < capacity)
+    slot = jnp.where(local, (se - e_start) * capacity + rank, e_local * capacity)
+
+    # dispatch: gather tokens -> (E_loc*C, d) buffer (extra row = drop bin)
+    xb = jnp.zeros((e_local * capacity + 1, d), x.dtype).at[slot].set(
+        x[st], mode="drop")
+    yb = _expert_ffn(xb[:-1].reshape(e_local, capacity, d), params)
+    yb = yb.reshape(e_local * capacity, d)
+
+    # combine: weighted scatter-add back to token slots. Keep the combine and
+    # the cross-shard reduction in bf16: the psum'd (N_loc, d) tensor is the
+    # single largest MoE collective (f32 here doubled arctic-480b's per-layer
+    # all-reduce to 1.9 GB x 140 — EXPERIMENTS.md §Perf iteration 2).
+    contrib = yb[jnp.minimum(slot, e_local * capacity - 1)]
+    contrib = (contrib.astype(jnp.float32)
+               * (sg * local)[:, None]).astype(L.COMPUTE_DTYPE)
+    out = jnp.zeros((n, d), L.COMPUTE_DTYPE).at[st].add(contrib, mode="drop")
+    out = jax.lax.psum(out, model_axis)
+
+    aux = {}
+    if with_aux:
+        # Switch-style load-balance + router z-loss, averaged globally.
+        frac = counts.astype(jnp.float32) / (n * k)                  # f_e
+        mean_prob = jnp.mean(probs, axis=0)                          # P_e
+        lb = e * jnp.sum(frac * mean_prob)
+        z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+        if data_axes:
+            nd = 1
+            for a in data_axes:
+                lb = jax.lax.pmean(lb, a)
+                z = jax.lax.pmean(z, a)
+        aux = {"load_balance": lb * m.load_balance_loss,
+               "router_z": z * m.router_z_loss}
+    return out, aux
+
+
+def moe_forward(params: dict, cfg, x: jax.Array, ctx,
+                with_aux: bool = False) -> Tuple[jax.Array, dict]:
+    """x: (B, S, d) -> (B, S, d). Requires ctx.mesh active-compatible specs."""
+    m = cfg.moe
+    b, s, d = x.shape
+    mesh = ctx.mesh
+    tp = ctx.tp_size
+    n_experts = params["router"]["w"].shape[-1]   # shape-derived (pruning)
+    assert n_experts % tp == 0, (n_experts, tp)
+    e_local = n_experts // tp
+
+    dp = ctx.dp_size if ctx.batch_sharded else 1
+    n_local = (b // dp) * s
+    capacity = _capacity(n_local, cfg)
+
+    bspec = ctx.batch_spec()[0]
+    x_spec = P(bspec, None, None)
+    # per-expert specs (expert axis prepended, sharded over the model axis)
+    if "w" in params["gate"]:
+        ew = {"w": P(ctx.model_axis, None, None)}
+    else:
+        ew = {"w_q": P(ctx.model_axis, None, None),
+              "scale": P(ctx.model_axis, None)}
+    param_specs = {"router": {"w": P(None, None), "b": P(None)},
+                   "gate": dict(ew), "up": dict(ew), "down": dict(ew)}
+
+    def body(xl, pl):
+        xf = xl.reshape(-1, d)
+        idx = jax.lax.axis_index(ctx.model_axis)
+        out, aux = _moe_local(
+            xf, pl, cfg, idx * e_local, e_local, capacity,
+            ctx.data_axes if ctx.batch_sharded else (), ctx.model_axis,
+            with_aux)
+        return out.reshape(xl.shape).astype(L.COMPUTE_DTYPE), aux
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, param_specs),
+        out_specs=(x_spec, {"load_balance": P(), "router_z": P()} if with_aux
+                   else {}),
+        check_rep=False,
+    )
+    out, aux = fn(x, params)
+    return out, aux

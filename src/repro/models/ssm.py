@@ -1,0 +1,147 @@
+"""Mamba (selective SSM) block: chunked parallel scan + single-step decode.
+
+Recurrence: h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t ;  y_t = C_t h_t + D x_t
+
+Training/prefill materializes per-chunk (B, chunk, d_in, d_state) scan elements
+only (lax.scan over chunks, associative_scan within a chunk), keeping the
+transient footprint ~chunk/S of the naive parallel scan. The d_in axis is the
+TP-sharded axis (states stay local; x_proj/out_proj contractions reduce over it).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def _dt_rank(cfg) -> int:
+    s = cfg.ssm
+    return s.dt_rank or -(-cfg.d_model // 16)
+
+
+def mamba_init(key, cfg) -> dict:
+    s = cfg.ssm
+    d, d_in = cfg.d_model, cfg.ssm.expand * cfg.d_model
+    r = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32), (d_in, 1))
+    return {
+        "in_proj": L.linear_init(ks[0], d, 2 * d_in),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, d_in)) * 0.1
+                   ).astype(jnp.float32),
+        "x_proj": L.linear_init(ks[2], d_in, r + 2 * s.d_state),
+        "dt_proj": {"w": L.he_init(ks[3], (r, d_in), jnp.float32),
+                    "b": jnp.full((d_in,), -4.6, jnp.float32)},  # softplus≈0.01
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "out_proj": L.linear_init(ks[5], d_in, d),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, S, C), w: (K, C) -> causal depthwise conv, (B, S, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):                       # K is 4: unrolled, fuses to adds
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i]
+    return out.astype(x.dtype)
+
+
+def _ssm_params(p: dict, xc: jax.Array, cfg):
+    """xc: (..., d_in) conv'd input -> (dt, B, C) selective params."""
+    s = cfg.ssm
+    r = _dt_rank(cfg)
+    proj = L.dense(xc, p["x_proj"]).astype(jnp.float32)
+    dt_in, b, c = jnp.split(proj, [r, r + s.d_state], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("...r,rd->...d", dt_in, p["dt_proj"]["w"])
+                         + p["dt_proj"]["b"])            # (..., d_in)
+    return dt, b, c
+
+
+def _scan_chunk(h0: jax.Array, a_bar: jax.Array, bx: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Linear recurrence h_t = a_t h_{t-1} + bx_t within a chunk.
+
+    a_bar, bx: (B, c, d_in, n). Returns (all h, final h)."""
+    bx = bx.at[:, 0].add(a_bar[:, 0] * h0)
+
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    a_c, h = jax.lax.associative_scan(op, (a_bar, bx), axis=1)
+    return h, h[:, -1]
+
+
+def mamba_forward(p: dict, cfg, x: jax.Array,
+                  state: Optional[dict] = None) -> Tuple[jax.Array, Optional[dict]]:
+    """x: (B, S, d). state (decode): {"h": (B,d_in,n) f32, "conv": (B,K-1,d_in)}."""
+    s = cfg.ssm
+    d_in = p["conv_w"].shape[-1]                  # shape-derived (pruning)
+    b_sz, seq, _ = x.shape
+    xz = L.dense(x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)                   # (B, S, d_in)
+    a = -jnp.exp(p["a_log"])                             # (d_in, n)
+
+    if state is not None and seq == 1:
+        # -------- single-token decode --------
+        conv_buf = jnp.concatenate([state["conv"], xin.astype(jnp.float32)], 1)
+        xc = jnp.einsum("bkc,kc->bc", conv_buf, p["conv_w"])[:, None, :]
+        xc = jax.nn.silu(xc)
+        dt, bb, cc = _ssm_params(p, xc, cfg)             # (B,1,d_in),(B,1,n)
+        a_bar = jnp.exp(dt[:, 0, :, None] * a)           # (B, d_in, n)
+        h = a_bar * state["h"] + (dt[:, 0, :, None] * bb[:, 0, None, :]
+                                  * xc[:, 0, :, None].astype(jnp.float32))
+        y = jnp.einsum("bdn,bn->bd", h, cc[:, 0])[:, None, :]
+        y = y + p["d_skip"] * xc.astype(jnp.float32)
+        new_state = {"h": h, "conv": conv_buf[:, 1:]}
+    else:
+        # -------- chunked parallel prefill/train --------
+        # (optionally seeded with a decode state, for cache-filling prefill)
+        if state is not None:
+            xpad = jnp.concatenate([state["conv"], xin.astype(jnp.float32)], 1)
+            xc = jax.nn.silu(_causal_depthwise_conv(
+                xpad, p["conv_w"])[:, s.d_conv - 1:, :]).astype(xin.dtype)
+            new_conv = xpad[:, -(s.d_conv - 1):, :]
+            h0 = state["h"]
+        else:
+            xc = jax.nn.silu(_causal_depthwise_conv(xin, p["conv_w"]))
+            new_conv = None
+            h0 = jnp.zeros((b_sz, d_in, s.d_state), jnp.float32)
+        dt, bb, cc = _ssm_params(p, xc, cfg)             # (B,S,d_in),(B,S,n)
+        chunk = min(s.chunk, seq)
+        assert seq % chunk == 0
+        n_chunks = seq // chunk
+
+        def step(h0, xs):
+            dt_c, b_c, c_c, x_c = xs                     # (B, c, ...)
+            a_bar = jnp.exp(dt_c[..., None] * a)         # (B,c,d_in,n)
+            bx = (dt_c[..., None] * b_c[:, :, None, :]
+                  * x_c[..., None].astype(jnp.float32))
+            hs, h_last = _scan_chunk(h0, a_bar, bx)
+            y = jnp.einsum("bcdn,bcn->bcd", hs, c_c)
+            return h_last, y
+
+        def r(t):                                        # (B,S,...)->(nc,B,c,...)
+            return jnp.moveaxis(
+                t.reshape(b_sz, n_chunks, chunk, *t.shape[2:]), 1, 0)
+
+        h_last, ys = jax.lax.scan(step, h0, (r(dt), r(bb), r(cc), r(xc)))
+        y = jnp.moveaxis(ys, 0, 1).reshape(b_sz, seq, d_in)
+        y = y + p["d_skip"] * xc.astype(jnp.float32)
+        new_state = (None if state is None
+                     else {"h": h_last, "conv": new_conv})
+
+    out = y.astype(L.COMPUTE_DTYPE) * jax.nn.silu(z)
+    return L.dense(out, p["out_proj"]), new_state
+
+
+def init_mamba_state(batch: int, cfg) -> dict:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    return {"h": jnp.zeros((batch, d_in, s.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, s.d_conv - 1, d_in), jnp.float32)}

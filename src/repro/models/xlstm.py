@@ -1,0 +1,231 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM (scalar
+memory, strictly sequential recurrence), after arXiv:2405.04517.
+
+mLSTM uses the stabilized chunkwise form (log-space gate cumulants, running
+max stabilizer `m`, carried (C, n, m) inter-chunk state) — the TPU-friendly
+adaptation: intra-chunk work is dense (c x c) MXU matmuls, inter-chunk work is
+a short lax.scan. sLSTM keeps its nonlinear h->gate recurrence, so it is a
+per-step lax.scan (no parallel form exists); its block-diagonal recurrent
+matrices keep the per-step matmuls head-local.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+NEG = -1e30
+
+
+# ===================================================================== mLSTM
+def mlstm_init(key, cfg) -> dict:
+    x = cfg.xlstm
+    d = cfg.d_model
+    d_in = int(x.proj_factor_mlstm * d)
+    h = cfg.n_heads
+    hd = d_in // h
+    ks = jax.random.split(key, 7)
+    blk = lambda k: (jax.random.normal(k, (h, hd, hd)) * hd ** -0.5
+                     ).astype(L.COMPUTE_DTYPE)
+    return {
+        "in_proj": L.linear_init(ks[0], d, 2 * d_in),
+        "wq": blk(ks[1]), "wk": blk(ks[2]), "wv": blk(ks[3]),
+        "w_i": {"w": L.he_init(ks[4], (d_in, h), jnp.float32),
+                "b": jnp.zeros((h,), jnp.float32)},
+        "w_f": {"w": L.he_init(ks[5], (d_in, h), jnp.float32),
+                "b": jnp.full((h,), 3.0, jnp.float32)},   # open forget gates
+        "norm": {"g": jnp.ones((d_in,), jnp.float32)},
+        "out_proj": L.linear_init(ks[6], d_in, d),
+    }
+
+
+def _mlstm_chunk(q, k, v, i_pre, log_f, carry):
+    """One chunk, vectorized over (B, H).
+
+    q,k,v: (B,H,c,hd); i_pre, log_f: (B,H,c); carry = (C (B,H,hd,hd),
+    n (B,H,hd), m (B,H)). Returns y (B,H,c,hd), new carry."""
+    bsz, h, c, hd = q.shape
+    cmat, n, m = carry
+    b = jnp.cumsum(log_f, axis=-1)                        # (B,H,c)
+    total_f = b[..., -1]
+
+    # intra-chunk log decay: L[t,s] = b_t - b_s + i_s  (s <= t)
+    lmat = b[..., :, None] - b[..., None, :] + i_pre[..., None, :]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    lmat = jnp.where(tri, lmat, NEG)
+    m_intra = jnp.max(lmat, axis=-1)                      # (B,H,c)
+    m_inter = m[..., None] + b                            # (B,H,c)
+    m_t = jnp.maximum(m_inter, m_intra)
+
+    p = jnp.exp(lmat - m_t[..., None])                    # (B,H,c,c)
+    e_inter = jnp.exp(m_inter - m_t)                      # (B,H,c)
+
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    sp = scores * p
+    qc = jnp.einsum("bhtd,bhde->bhte", q,
+                    cmat.astype(L.COMPUTE_DTYPE),
+                    preferred_element_type=jnp.float32)
+    y_num = (qc * e_inter[..., None]
+             + jnp.einsum("bhts,bhsd->bhtd", sp.astype(L.COMPUTE_DTYPE), v,
+                          preferred_element_type=jnp.float32))
+    n_num = (jnp.einsum("bhtd,bhd->bht", q, n.astype(L.COMPUTE_DTYPE),
+                        preferred_element_type=jnp.float32) * e_inter
+             + jnp.sum(sp, axis=-1))
+    denom = jnp.maximum(jnp.abs(n_num), jnp.exp(-m_t))[..., None]
+    y = y_num / denom
+
+    # carry update
+    m_next = jnp.maximum(m + total_f,
+                         jnp.max(total_f[..., None] - b + i_pre, axis=-1))
+    decay_old = jnp.exp(m + total_f - m_next)             # (B,H)
+    w_s = jnp.exp(total_f[..., None] - b + i_pre - m_next[..., None])  # (B,H,c)
+    kw = k.astype(jnp.float32) * w_s[..., None] * hd ** -0.5
+    c_new = (cmat * decay_old[..., None, None]
+             + jnp.einsum("bhsd,bhse->bhde", kw, v.astype(jnp.float32)))
+    n_new = n * decay_old[..., None] + jnp.sum(kw, axis=-2)
+    return y, (c_new, n_new, m_next)
+
+
+def _heads(x, h):
+    b, s, d = x.shape
+    return jnp.moveaxis(x.reshape(b, s, h, d // h), 2, 1)  # (B,H,S,hd)
+
+
+def mlstm_forward(p: dict, cfg, x: jax.Array,
+                  state: Optional[Tuple] = None) -> Tuple[jax.Array, Optional[Tuple]]:
+    """x: (B, S, d). state (decode) = (C, n, m)."""
+    xcfg = cfg.xlstm
+    bsz, seq, d = x.shape
+    hd = p["wq"].shape[-1]                        # per-head width (fixed)
+    d_in = (p["in_proj"].get("w", p["in_proj"].get("w_q")).shape[-1] // 2)
+    h = d_in // hd                                # shape-derived (pruning)
+    xz = L.dense(x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+
+    xh = _heads(xin, h)                                   # (B,H,S,hd)
+    q = jnp.einsum("bhsd,hde->bhse", xh, p["wq"])
+    k = jnp.einsum("bhsd,hde->bhse", xh, p["wk"])
+    v = jnp.einsum("bhsd,hde->bhse", xh, p["wv"])
+    xf = xin.astype(jnp.float32)
+    i_pre = (jnp.einsum("bsd,dh->bsh", xf, p["w_i"]["w"]) + p["w_i"]["b"])
+    f_pre = (jnp.einsum("bsd,dh->bsh", xf, p["w_f"]["w"]) + p["w_f"]["b"])
+    i_pre = jnp.moveaxis(i_pre, -1, 1)                    # (B,H,S)
+    log_f = jnp.moveaxis(jax.nn.log_sigmoid(f_pre), -1, 1)
+
+    if state is None:
+        state = (jnp.zeros((bsz, h, hd, hd), jnp.float32),
+                 jnp.zeros((bsz, h, hd), jnp.float32),
+                 jnp.zeros((bsz, h), jnp.float32))
+    chunk = min(xcfg.chunk, seq)
+    assert seq % chunk == 0
+    nc = seq // chunk
+
+    def r(t):  # (B,H,S,...) -> (nc,B,H,c,...)
+        return jnp.moveaxis(
+            t.reshape(bsz, h, nc, chunk, *t.shape[3:]), 2, 0)
+
+    def step(carry, xs):
+        qc, kc, vc, ic, fc = xs
+        y, carry = _mlstm_chunk(qc, kc, vc, ic, fc, carry)
+        return carry, y
+
+    new_state, ys = jax.lax.scan(step, state, (r(q), r(k), r(v), r(i_pre), r(log_f)))
+    y = jnp.moveaxis(ys, 0, 2).reshape(bsz, h, seq, hd)   # (B,H,S,hd)
+    y = jnp.moveaxis(y, 1, 2)                             # (B,S,H,hd)
+    # per-head norm (multi-head layernorm a la xLSTM): keeps masked-prune
+    # evaluation identical to physical compaction
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps)).reshape(bsz, seq, d_in)
+    y = (y * p["norm"]["g"]).astype(L.COMPUTE_DTYPE)
+    out = L.dense(y * jax.nn.silu(z), p["out_proj"])
+    return out, (new_state if seq == 1 or state is not None else None)
+
+
+def init_mlstm_state(batch: int, cfg) -> Tuple:
+    h = cfg.n_heads
+    d_in = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
+    hd = d_in // h
+    return (jnp.zeros((batch, h, hd, hd), jnp.float32),
+            jnp.zeros((batch, h, hd), jnp.float32),
+            jnp.zeros((batch, h), jnp.float32))
+
+
+# ===================================================================== sLSTM
+def slstm_init(key, cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    d_up = int(cfg.xlstm.proj_factor_slstm * d)
+    ks = jax.random.split(key, 12)
+    wg = lambda k: L.he_init(k, (d, d), jnp.float32)
+    rg = lambda k: (jax.random.normal(k, (h, hd, hd)) * hd ** -0.5
+                    ).astype(jnp.float32)
+    return {
+        "wz": wg(ks[0]), "wi": wg(ks[1]), "wf": wg(ks[2]), "wo": wg(ks[3]),
+        "rz": rg(ks[4]), "ri": rg(ks[5]), "rf": rg(ks[6]), "ro": rg(ks[7]),
+        "b_z": jnp.zeros((d,)), "b_i": jnp.zeros((d,)),
+        "b_f": jnp.full((d,), 3.0), "b_o": jnp.zeros((d,)),
+        "norm": {"g": jnp.ones((d,), jnp.float32)},
+        "up": L.linear_init(ks[8], d, 2 * d_up),
+        "down": L.linear_init(ks[9], d_up, d),
+    }
+
+
+def _slstm_step(p, h_heads, x_gates, state, n_heads):
+    """One timestep. x_gates: precomputed W*x (B, 4, d). state: (h,c,n,m)."""
+    h, c, n, m = state
+    b, d = h.shape
+    hh = h.reshape(b, n_heads, d // n_heads)
+
+    def rec(r):
+        return jnp.einsum("bhd,hde->bhe", hh.astype(jnp.float32), r
+                          ).reshape(b, d)
+
+    z = jnp.tanh(x_gates[:, 0] + rec(p["rz"]) + p["b_z"])
+    i_pre = x_gates[:, 1] + rec(p["ri"]) + p["b_i"]
+    f_pre = x_gates[:, 2] + rec(p["rf"]) + p["b_f"]
+    o = jax.nn.sigmoid(x_gates[:, 3] + rec(p["ro"]) + p["b_o"])
+    m_new = jnp.maximum(f_pre + m, i_pre)
+    i = jnp.exp(i_pre - m_new)
+    f = jnp.exp(f_pre + m - m_new)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_forward(p: dict, cfg, x: jax.Array,
+                  state: Optional[Tuple] = None) -> Tuple[jax.Array, Optional[Tuple]]:
+    """x: (B, S, d). Sequential scan over S (no parallel form)."""
+    b, seq, d = x.shape
+    h = cfg.n_heads
+    xf = x.astype(jnp.float32)
+    gates = jnp.stack([xf @ p["wz"], xf @ p["wi"],
+                       xf @ p["wf"], xf @ p["wo"]], axis=2)  # (B,S,4,d)
+    decode = state is not None
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        state = (zeros, zeros, zeros, zeros)
+
+    def step(st, g):
+        st = _slstm_step(p, None, g, st, h)
+        return st, st[0]
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(gates, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1)                            # (B,S,d)
+    y = L.rmsnorm(y, p["norm"], cfg.norm_eps)
+    # gated up/down MLP (proj factor 4/3)
+    u, g = jnp.split(L.dense(y, p["up"]), 2, axis=-1)
+    out = L.dense(u * jax.nn.silu(g), p["down"])
+    return out, (state if decode else None)
+
+
+def init_slstm_state(batch: int, cfg) -> Tuple:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, z, z)

@@ -1,0 +1,2 @@
+from repro.roofline.hardware import TPU_V5E  # noqa: F401
+from repro.roofline.hlo_analysis import collective_stats, roofline_terms  # noqa: F401

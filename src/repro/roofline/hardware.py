@@ -1,0 +1,24 @@
+"""Target hardware constants (TPU v5e, per chip)."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Chip:
+    name: str
+    peak_bf16: float        # FLOP/s
+    peak_int8: float        # OP/s
+    hbm_bw: float           # B/s
+    ici_bw: float           # B/s per link
+    hbm_bytes: float
+    vmem_bytes: float
+
+
+TPU_V5E = Chip(
+    name="tpu_v5e",
+    peak_bf16=197e12,
+    peak_int8=394e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    hbm_bytes=16e9,
+    vmem_bytes=128e6,
+)

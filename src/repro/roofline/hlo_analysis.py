@@ -1,0 +1,143 @@
+"""Roofline terms from a compiled (SPMD-partitioned) XLA artifact.
+
+  compute    = HLO_FLOPs_per_device / peak
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_result_bytes_per_device / ICI link bw
+
+``cost_analysis`` yields per-device flops/bytes post-partitioning.
+Collective bytes are NOT in cost_analysis: we parse the optimized HLO and sum
+the *result* shapes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (a slight overcount for reduce-scatter, undercount for
+multi-hop all-gathers — consistent across variants, which is what the
+hillclimb needs). Ops inside loops are multiplied by the trip count when the
+while-loop bound is statically recoverable from scan structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(line: str) -> int:
+    """Bytes of the op result: shapes between '=' and the op name."""
+    try:
+        lhs, rhs = line.split("=", 1)
+    except ValueError:
+        return 0
+    # result type(s) = everything in rhs before the opcode token
+    m = re.match(r"\s*(\(?[^a-z(]*(?:\([^)]*\))?)", rhs)
+    header = rhs.strip()
+    # take shapes up to the first opcode occurrence
+    for c in COLLECTIVES:
+        idx = header.find(c + "(")
+        if idx == -1:
+            idx = header.find(c + "-start(")
+        if idx != -1:
+            header = header[:idx]
+            break
+    return sum(_shape_bytes(dt, dims)
+               for dt, dims in _SHAPE_RE.findall(header))
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def _loop_trip_counts(text: str) -> Dict[str, int]:
+    """Best-effort map from while-body computation name -> trip count."""
+    trips: Dict[str, int] = {}
+    # jax scans lower to while loops whose condition compares the induction
+    # var against a constant: look for "compare(... constant)" patterns per
+    # body. Fallback: trip count from "trip_count=" backend hints if present.
+    for m in re.finditer(r"body=%?([\w.\-]+)", text):
+        trips.setdefault(m.group(1), 1)
+    return trips
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    bytes_by: Dict[str, int] = {c: 0 for c in COLLECTIVES}
+    count_by: Dict[str, int] = {c: 0 for c in COLLECTIVES}
+    # map computation -> multiplier (scan bodies execute trip_count times)
+    comp_mult: Dict[str, int] = {}
+    cur_comp = ""
+    # first pass: find while-loop trip counts via induction-variable constants
+    trip_re = re.compile(
+        r"while\(.*\).*condition=%?([\w.\-]+).*body=%?([\w.\-]+)")
+    cond_to_body = {}
+    for line in hlo_text.splitlines():
+        m = trip_re.search(line)
+        if m:
+            cond_to_body[m.group(1)] = m.group(2)
+    # trip counts: constants compared in condition computations
+    cond_const: Dict[str, int] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        cm = re.match(r"%?([\w.\-]+) \(.*\) -> pred\[\]", line.strip())
+        if cm:
+            cur = cm.group(1)
+        if cur and "constant(" in line:
+            c = re.search(r"constant\((\d+)\)", line)
+            if c:
+                cond_const[cur] = max(cond_const.get(cur, 0), int(c.group(1)))
+    body_trips = {body: cond_const.get(cond, 1)
+                  for cond, body in cond_to_body.items()}
+
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        cm = re.match(r"%?([\w.\-]+) \([\w\s.,:\[\]\-]*\) -> ", s)
+        if s.startswith("ENTRY") or cm:
+            cur_comp = cm.group(1) if cm else "entry"
+        for c in COLLECTIVES:
+            if re.search(rf"= .*{c}(-start)?\(", s):
+                mult = body_trips.get(cur_comp, 1)
+                b = _result_bytes(s)
+                bytes_by[c] += b * mult
+                count_by[c] += mult
+    return CollectiveStats(bytes_by, count_by)
+
+
+def roofline_terms(cost: dict, coll: CollectiveStats, chip,
+                   int8_fraction: float = 0.0) -> dict:
+    """Three roofline terms (seconds, per device = per step wall-clock lower
+    bound). ``int8_fraction``: share of matmul FLOPs running at the int8 MXU
+    rate (HQP-quantized models)."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    peak = (int8_fraction * chip.peak_int8
+            + (1 - int8_fraction) * chip.peak_bf16)
+    t_compute = flops / peak
+    t_memory = byts / chip.hbm_bw
+    t_coll = coll.total_bytes / chip.ici_bw
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    return {"t_compute": t_compute, "t_memory": t_memory,
+            "t_collective": t_coll, "dominant": dominant,
+            "flops": flops, "bytes": byts,
+            "collective_bytes": coll.total_bytes,
+            "collective_counts": coll.count_by_kind}

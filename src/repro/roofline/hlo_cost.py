@@ -1,0 +1,390 @@
+"""Loop-aware HLO cost analyzer.
+
+XLA's built-in ``compiled.cost_analysis()`` visits a while-loop body ONCE —
+for scan-over-layers models that undercounts FLOPs/bytes by the trip count
+(verified in tests/test_roofline.py). This analyzer parses the optimized HLO
+text and computes, with while bodies multiplied by their
+``backend_config known_trip_count`` (scan bounds):
+
+  flops            — dot ops: 2 · prod(result dims) · prod(contracting dims),
+                     including dots inside fusions (recursed); conditionals
+                     take the max branch.
+  bytes            — Σ over top-level ops of (operand + result) bytes. In
+                     scheduled HLO every top-level op is a fusion boundary,
+                     so this approximates HBM traffic like XLA's own
+                     "bytes accessed", but loop-corrected.
+  collective bytes — result sizes of all-gather / all-reduce / reduce-scatter
+                     / all-to-all / collective-permute, loop-corrected, split
+                     by kind.
+  int8_dot_flops   — dot FLOPs whose operands are int8 (HQP W8A8 path), so
+                     the roofline can rate them at the int8 MXU peak.
+
+Elementwise/reduce FLOPs are ignored (≪ dot FLOPs in every cell here);
+custom-calls are opaque (the dry-run lowers the pure-XLA model, not Pallas).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_AFTER_RE = re.compile(r"^\s*([a-z][a-z0-9\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _split_rhs(rhs: str):
+    """'TYPE opcode(operands), attrs' -> (result_text, opcode, rest) or None.
+
+    Handles tuple result types containing /*index=N*/ comments."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    result = rhs[:i + 1]
+                    m = _OPCODE_AFTER_RE.match(rhs[i + 1:])
+                    if not m:
+                        return None
+                    return result, m.group(1), rhs[i + 1 + m.end():]
+        return None
+    m = re.match(r"^(\S+)\s+([a-z][a-z0-9\-]*)\(", rhs)
+    if not m:
+        return None
+    return m.group(1), m.group(2), rhs[m.end():]
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems_first(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None, None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result_text: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    is_fusion: bool = False
+    param_names: Optional[Dict[int, str]] = None
+
+    def __post_init__(self):
+        if self.param_names is None:
+            self.param_names = {}
+
+
+@dataclasses.dataclass
+class CostResult:
+    flops: float = 0.0
+    bytes: float = 0.0
+    int8_dot_flops: float = 0.0
+    coll_bytes: Optional[Dict[str, float]] = None
+    coll_counts: Optional[Dict[str, float]] = None
+
+    def __post_init__(self):
+        if self.coll_bytes is None:
+            self.coll_bytes = {c: 0.0 for c in COLLECTIVES}
+        if self.coll_counts is None:
+            self.coll_counts = {c: 0.0 for c in COLLECTIVES}
+
+    def add(self, other: "CostResult", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.int8_dot_flops += other.int8_dot_flops * mult
+        for c in COLLECTIVES:
+            self.coll_bytes[c] += other.coll_bytes[c] * mult
+            self.coll_counts[c] += other.coll_counts[c] * mult
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+_FREE_OPS = ("parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota")
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps: Dict[str, Computation] = {}
+        self.shape: Dict[str, str] = {}        # op name -> result type text
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._memo: Dict[str, CostResult] = {}
+
+    def _parse(self, text: str):
+        cur: Optional[Computation] = None
+        for raw in text.splitlines():
+            line = re.sub(r"/\*.*?\*/", "", raw.strip())
+            if line.endswith("{") and "->" in line and "=" not in line.split(
+                    "->")[0]:
+                m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)", line)
+                if m:
+                    cur = Computation(m.group(2), [],
+                                      is_fusion="fused" in m.group(2)
+                                      or "wrapped" in m.group(2))
+                    self.comps[cur.name] = cur
+                    if m.group(1):
+                        self.entry = cur.name
+                continue
+            if cur is None or line == "}" or not line:
+                continue
+            mo = _OP_RE.match(line)
+            if not mo:
+                continue
+            name, rhs = mo.group(1), mo.group(2)
+            split = _split_rhs(rhs)
+            if split is None:
+                continue
+            result_text, opcode, rest = split
+            depth, end = 1, len(rest)
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operand_text, attrs = rest[:end], rest[end + 1:]
+            self.shape[name] = result_text
+            if opcode == "parameter":
+                digits = operand_text.strip()
+                if digits.isdigit():
+                    cur.param_names[int(digits)] = name
+            cur.ops.append(Op(name, opcode, result_text,
+                              _OPERAND_RE.findall(operand_text), attrs))
+        if self.entry is None and self.comps:
+            self.entry = list(self.comps)[-1]
+
+    # ------------------------------------------------------------ pieces
+    def _operand_bytes(self, op: Op) -> int:
+        return sum(_shape_bytes(self.shape.get(o, "")) for o in op.operands)
+
+    def _fusion_bytes(self, op: Op, comp_name: str) -> int:
+        """HBM bytes for a fusion op, aware of slicing and in-place updates:
+
+        * a parameter consumed only by dynamic-slice/gather counts the slice
+          result sizes, not the full array (scan reading one layer's weights);
+        * a parameter that is the in-place *target* of dynamic-update-slice /
+          scatter counts zero (XLA aliases it), and the fusion result then
+          counts only the update sizes (scan writing one layer's stash slot).
+        """
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return (_shape_bytes(op.result_text) + self._operand_bytes(op))
+        param_names = comp.param_names
+        direct: Dict[str, List[Op]] = {}
+        for iop in comp.ops:
+            for o in iop.operands:
+                direct.setdefault(o, []).append(iop)
+
+        _PASS = ("convert", "bitcast", "copy", "reshape", "transpose")
+
+        def effective(name, depth=0):
+            """Consumers, traced through elementwise/layout-only ops."""
+            out = []
+            for c in direct.get(name, []):
+                if c.opcode in _PASS and depth < 6:
+                    out += effective(c.name, depth + 1) or [c]
+                else:
+                    out.append(c)
+            return out
+
+        consumers = {n: effective(n) for n in
+                     list(param_names.values())}
+
+        producer = {iop.name: iop for iop in comp.ops}
+
+        def src(name, depth=0):
+            p = producer.get(name)
+            while p is not None and p.opcode in _PASS and p.operands and depth < 8:
+                p = producer.get(p.operands[0])
+                depth += 1
+            return p.name if p is not None else name
+
+        # in-place targets: source of operand 0 of every dus/scatter
+        inplace: Dict[str, int] = {}
+        for iop in comp.ops:
+            if iop.opcode in ("dynamic-update-slice", "scatter") and iop.operands:
+                tgt = src(iop.operands[0])
+                upd = (_shape_bytes(self.shape.get(iop.operands[1], ""))
+                       if len(iop.operands) > 1 else 0)
+                inplace[tgt] = inplace.get(tgt, 0) + upd
+
+        total = 0
+        has_inplace = False
+        inplace_update_bytes = 0
+        for idx, operand in enumerate(op.operands):
+            full = _shape_bytes(self.shape.get(operand, ""))
+            pname = param_names.get(idx)
+            cons = consumers.get(pname, []) if pname else []
+            if pname and pname in inplace and all(
+                    c.opcode in ("dynamic-update-slice", "scatter")
+                    for c in cons):
+                has_inplace = True
+                inplace_update_bytes += inplace[pname]
+            elif cons and all(c.opcode in ("dynamic-slice", "gather")
+                              for c in cons):
+                total += min(full, sum(_shape_bytes(self.shape.get(c.name, ""))
+                                       for c in cons))
+            else:
+                total += full
+        if has_inplace:
+            total += 2 * inplace_update_bytes      # write + (worst case) read
+        else:
+            total += _shape_bytes(op.result_text)
+        return total
+
+    def _dot_flops(self, op: Op) -> float:
+        dt, dims = _shape_elems_first(op.result_text)
+        if dims is None:
+            return 0.0
+        result_elems = 1
+        for d in dims:
+            result_elems *= d
+        lhs_shape = self.shape.get(op.operands[0], "") if op.operands else ""
+        _, lhs_dims = _shape_elems_first(lhs_shape)
+        contract = 1
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+        if m and lhs_dims:
+            for i in m.group(1).split(","):
+                if i:
+                    contract *= lhs_dims[int(i)]
+        return 2.0 * result_elems * contract
+
+    def _is_int8_dot(self, op: Op) -> bool:
+        for o in op.operands:
+            dt, _ = _shape_elems_first(self.shape.get(o, ""))
+            if dt in ("s8", "u8", "s4", "u4"):
+                return True
+        return False
+
+    @staticmethod
+    def _trip_count(op: Op) -> int:
+        m = re.search(r'known_trip_count=?\{"?n"?[:=]"?(\d+)"?\}', op.attrs)
+        if m:
+            return int(m.group(1))
+        m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.attrs)
+        return int(m.group(1)) if m else 1
+
+    @staticmethod
+    def _attr_comp(op: Op, key: str) -> Optional[str]:
+        m = re.search(rf"{key}=%?([\w.\-]+)", op.attrs)
+        return m.group(1) if m else None
+
+    # ------------------------------------------------------------ main
+    def cost(self, comp_name: Optional[str] = None) -> CostResult:
+        name = comp_name or self.entry
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        res = CostResult()
+        if comp is None:
+            return res
+        self._memo[name] = res
+        count_bytes = not comp.is_fusion
+        for op in comp.ops:
+            if op.opcode in ("dot", "convolution"):
+                f = self._dot_flops(op)
+                res.flops += f
+                if self._is_int8_dot(op):
+                    res.int8_dot_flops += f
+                if count_bytes:
+                    res.bytes += (_shape_bytes(op.result_text)
+                                  + self._operand_bytes(op))
+            elif op.opcode == "while":
+                body = self._attr_comp(op, "body")
+                trips = self._trip_count(op)
+                if body:
+                    res.add(self.cost(body), max(trips, 1))
+            elif op.opcode == "conditional":
+                branch_names = re.search(r"branch_computations=\{([^}]*)\}",
+                                         op.attrs)
+                names = ([b.strip().lstrip("%") for b in
+                          branch_names.group(1).split(",")]
+                         if branch_names else
+                         [c for c in (self._attr_comp(op, "true_computation"),
+                                      self._attr_comp(op, "false_computation"))
+                          if c])
+                branches = [self.cost(b) for b in names]
+                if branches:
+                    res.add(max(branches, key=lambda r: r.flops + r.bytes))
+            elif op.opcode in ("fusion", "call"):
+                m = re.search(r"(?:calls|to_apply)=\{?%?([\w.\-]+)", op.attrs)
+                if m:
+                    sub = self.cost(m.group(1))
+                    res.flops += sub.flops
+                    res.int8_dot_flops += sub.int8_dot_flops
+                    for c in COLLECTIVES:
+                        res.coll_bytes[c] += sub.coll_bytes[c]
+                        res.coll_counts[c] += sub.coll_counts[c]
+                if count_bytes:
+                    if m:
+                        res.bytes += self._fusion_bytes(op, m.group(1))
+                    else:
+                        res.bytes += (_shape_bytes(op.result_text)
+                                      + self._operand_bytes(op))
+            elif any(op.opcode.startswith(c) for c in COLLECTIVES):
+                kind = next(c for c in COLLECTIVES if op.opcode.startswith(c))
+                if not op.opcode.endswith("-done"):
+                    b = _shape_bytes(op.result_text)
+                    res.coll_bytes[kind] += b
+                    res.coll_counts[kind] += 1
+                    if count_bytes:
+                        res.bytes += 2 * b
+            elif op.opcode == "dynamic-update-slice":
+                if count_bytes and len(op.operands) > 1:
+                    res.bytes += 2 * _shape_bytes(
+                        self.shape.get(op.operands[1], ""))
+            elif op.opcode == "dynamic-slice":
+                if count_bytes:
+                    res.bytes += 2 * _shape_bytes(op.result_text)
+            elif op.opcode in _FREE_OPS:
+                continue
+            else:
+                if count_bytes:
+                    res.bytes += (_shape_bytes(op.result_text)
+                                  + self._operand_bytes(op))
+        return res
+
+
+def analyze(hlo_text: str) -> CostResult:
+    return HloCost(hlo_text).cost()

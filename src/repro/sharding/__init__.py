@@ -1,0 +1,1 @@
+from repro.sharding.ctx import RunContext, default_ctx  # noqa: F401

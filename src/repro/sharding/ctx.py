@@ -1,0 +1,64 @@
+"""Run context: mesh + axis-name conventions threaded through model code.
+
+Mesh axis conventions (see DESIGN.md §5):
+  single-pod : ("data", "model")                16 x 16
+  multi-pod  : ("pod", "data", "model")         2 x 16 x 16
+DP/FSDP axes = ("pod", "data") (those present); TP/EP axis = "model".
+
+Model code that needs explicit collectives (the shard_map'd MoE dispatch)
+reads the axis names from the RunContext instead of hard-coding them, so the
+same model runs on a 1x1 CPU mesh in tests and the 512-chip mesh in dry-runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class RunContext:
+    mesh: Mesh
+    data_axes: Tuple[str, ...] = ("data",)   # batch / FSDP axes (incl. "pod")
+    model_axis: str = "model"
+    batch_sharded: bool = True               # False for global_batch < |data axes|
+    quantized_kv: bool = False               # INT8 KV cache for decode
+    remat: bool = True
+    pure_dp: bool = False                    # no-TP archs (xLSTM): batch takes
+                                             # the model axis too, params FSDP
+
+    @property
+    def all_axes(self) -> Tuple[str, ...]:
+        return tuple(self.data_axes) + (self.model_axis,)
+
+    def batch_spec(self) -> Tuple:
+        """Leading-batch-dim sharding ((data axes) or replicated)."""
+        if not self.batch_sharded:
+            return (None,)
+        if self.pure_dp:
+            return (self.all_axes,)
+        return (tuple(self.data_axes),)
+
+    @property
+    def dp_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.data_axes]))
+
+    @property
+    def tp_size(self) -> int:
+        return int(self.mesh.shape[self.model_axis])
+
+
+@functools.lru_cache(maxsize=1)
+def default_ctx() -> RunContext:
+    """1x1 mesh over the first device — used by tests/smoke runs."""
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return RunContext(mesh=Mesh(dev, ("data", "model")))
+
+
+def make_ctx(mesh: Mesh, **kw) -> RunContext:
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    return RunContext(mesh=mesh, data_axes=data_axes, **kw)

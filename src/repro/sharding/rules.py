@@ -1,0 +1,180 @@
+"""Partition rules: param/state/data PartitionSpecs from path patterns.
+
+Conventions (DESIGN.md §5):
+  TP ("model"): attention heads (wq/wk/wv out, wo in), FFN hidden, experts
+  (EP), vocab. FSDP (data axes): the other big axis of every matrix, and
+  optimizer state. xLSTM blocks: FSDP only (4 heads < 16-way model axis —
+  documented TP underutilization).
+
+Decode-state sharding: KV caches shard batch over data and *sequence* over
+model (flash-decoding style); for global_batch=1 (long_500k) the sequence
+axis takes every mesh axis.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.sharding.ctx import RunContext
+
+# (regex over "/"-joined path, spec builder(ctx) -> PartitionSpec)
+# Stacked block leaves have a leading layer-group axis (always unsharded).
+def _rules(ctx: RunContext):
+    da = tuple(ctx.data_axes)
+    mdl = ctx.model_axis
+    if ctx.pure_dp:
+        # no-TP architectures (xLSTM family): the model axis joins the FSDP
+        # group; every former-TP placement collapses to None.
+        da = da + (mdl,)
+        mdl = None
+    return [
+        # embeddings: vocab x d
+        (r"(embed|unembed)/table$", P(mdl, da)),
+        (r"frontend/w$", P(da, mdl)),
+        # attention
+        (r"blocks/\d+/attn/w[qkv]/w$", P(None, da, mdl)),
+        (r"blocks/\d+/attn/w[qkv]/(w_q|scale)$", P(None, da, mdl)),
+        (r"blocks/\d+/attn/wo/w(_q)?$", P(None, mdl, da)),
+        (r"blocks/\d+/attn/wo/scale$", P(None, da)),
+        # dense mlp
+        (r"blocks/\d+/mlp/(gate|up)/(w|w_q)$", P(None, da, mdl)),
+        (r"blocks/\d+/mlp/(gate|up)/scale$", P(None, mdl)),
+        (r"blocks/\d+/mlp/down/(w|w_q)$", P(None, mdl, da)),
+        (r"blocks/\d+/mlp/down/scale$", P(None, da)),
+        # MoE: experts over model (EP), FSDP on d
+        (r"blocks/\d+/moe/(gate|up)/(w|w_q)$", P(None, mdl, da, None)),
+        (r"blocks/\d+/moe/down/(w|w_q)$", P(None, mdl, None, da)),
+        (r"blocks/\d+/moe/(gate|up|down)/scale$", P(None, mdl, None)),
+        (r"blocks/\d+/moe/router/w$", P(None, da, None)),
+        (r"blocks/\d+/moe/router/b$", P(None, None)),
+        # mamba: d_inner over model
+        (r"blocks/\d+/mamba/in_proj/(w|w_q)$", P(None, da, mdl)),
+        (r"blocks/\d+/mamba/in_proj/scale$", P(None, mdl)),
+        (r"blocks/\d+/mamba/conv_w$", P(None, None, mdl)),
+        (r"blocks/\d+/mamba/x_proj/w$", P(None, mdl, None)),
+        (r"blocks/\d+/mamba/dt_proj/w$", P(None, None, mdl)),
+        (r"blocks/\d+/mamba/dt_proj/b$", P(None, mdl)),
+        (r"blocks/\d+/mamba/a_log$", P(None, mdl, None)),
+        (r"blocks/\d+/mamba/d_skip$", P(None, mdl)),
+        (r"blocks/\d+/mamba/out_proj/(w|w_q)$", P(None, mdl, da)),
+        (r"blocks/\d+/mamba/out_proj/scale$", P(None, da)),
+        # xLSTM: FSDP only (heads < model-axis width)
+        (r"blocks/\d+/(mlstm|slstm)/(in_proj|up|down|out_proj)/(w|w_q)$",
+         P(None, da, None)),
+        (r"blocks/\d+/(mlstm|slstm)/w[zifo]$", P(None, da, None)),
+        # sLSTM recurrent mats stay REPLICATED: they are consumed inside the
+        # per-timestep scan — FSDP-sharding them cost one all-gather per
+        # TIMESTEP (x24576/step on xlstm train_4k; §Perf xlstm iteration 2).
+        # mLSTM head mats are consumed once per chunk scan: FSDP is fine.
+        (r"blocks/\d+/mlstm/w[qkv]$", P(None, None, da, None)),
+    ]
+
+
+def spec_for_path(path: str, ndim: int, shape: Tuple[int, ...],
+                  ctx: RunContext) -> P:
+    for pat, spec in _rules(ctx):
+        if re.search(pat, path):
+            if len(spec) == ndim and _divisible(shape, spec, ctx):
+                return spec
+            break
+    return P(*([None] * ndim))
+
+
+def _axis_size(ctx: RunContext, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([ctx.mesh.shape[a] for a in axes]))
+
+
+def _divisible(shape, spec, ctx) -> bool:
+    return all(dim % _axis_size(ctx, ax) == 0
+               for dim, ax in zip(shape, spec))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params: Any, ctx: RunContext) -> Any:
+    """PartitionSpec pytree matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_path(_path_str(path), leaf.ndim,
+                                         leaf.shape, ctx),
+        params)
+
+
+def param_shardings(params: Any, ctx: RunContext) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s),
+                        param_specs(params, ctx),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------------------------------------------------------ states
+def opt_state_specs(params: Any, opt_state: Any, ctx: RunContext) -> Any:
+    """Optimizer-state specs mirror the param spec exactly: fp32 moments take
+    it verbatim; the int8 codec's q is param-shaped (same spec) and its
+    per-row scale drops the trailing axis. Mirroring is load-bearing — any
+    layout mismatch makes XLA reconcile with full-tensor gathers inside the
+    update (arctic-480b: 12x 625 GB f32 all-gathers; EXPERIMENTS.md §Perf)."""
+    pspecs = param_specs(params, ctx)
+
+    def for_moment(ps, leaf_state):
+        if isinstance(leaf_state, dict) and "q" in leaf_state:   # int8 codec
+            return {"q": ps, "s": P(*ps[:-1]) if len(ps) else P()}
+        return ps
+
+    is_p = lambda x: isinstance(x, P)
+    m_specs = jax.tree.map(for_moment, pspecs, opt_state["m"], is_leaf=is_p)
+    v_specs = jax.tree.map(for_moment, pspecs, opt_state["v"], is_leaf=is_p)
+    return {"step": P(), "m": m_specs, "v": v_specs}
+
+
+def batch_specs(cfg, ctx: RunContext, kind: str = "train") -> Any:
+    b = ctx.batch_spec()[0]
+    specs = {"tokens": P(b, None)}
+    if cfg.frontend.kind != "none":
+        specs["embeds"] = P(b, None, None)
+    return specs
+
+
+def decode_state_specs(cfg, state: Any, ctx: RunContext) -> Any:
+    """Specs for the stacked decode caches (leading group axis unsharded)."""
+    b = ctx.batch_spec()[0]
+    seq_axes = (ctx.model_axis,) if ctx.batch_sharded else (
+        tuple(ctx.data_axes) + (ctx.model_axis,))
+
+    def leaf_spec(leaf):
+        nd = leaf.ndim
+        if nd == 5:      # KV cache (G, B, S, Hkv, hd)
+            if leaf.shape[2] % _axis_size(ctx, seq_axes) == 0:
+                return P(None, b, seq_axes, None, None)
+            return P(None, b, None, None, None)
+        if nd == 4:      # (G,B,S,H) kv scales | (G,B,d_in,n) mamba | mlstm C
+            if leaf.shape[2] % _axis_size(ctx, seq_axes) == 0:
+                return P(None, b, seq_axes, None)
+            return P(None, b, None, None)
+        if nd >= 2:
+            return P(*([None, b] + [None] * (nd - 2)))
+        return P(None)
+
+    def walk(tree):
+        if isinstance(tree, dict) and "pos" in tree:
+            return {"caches": jax.tree.map(leaf_spec, tree["caches"]),
+                    "pos": P()}
+        return jax.tree.map(leaf_spec, tree)
+
+    return walk(state)

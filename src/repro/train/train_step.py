@@ -1,0 +1,81 @@
+"""Distributed train/serve steps (pjit-ready pure functions).
+
+``make_train_step`` builds the donate-friendly step the launcher jits with
+in/out shardings from ``sharding.rules``. Gradient accumulation (microbatches)
+is a lax.scan so the global batch stays constant when elastic re-meshing
+changes the DP width (launch/elastic.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.sharding.ctx import RunContext
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+def make_train_step(cfg, ctx: RunContext, opt_cfg: AdamWConfig,
+                    num_microbatches: int = 1) -> Callable:
+    def loss(params, batch):
+        return lm.loss_fn(params, cfg, batch, ctx, with_aux=True)
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            (l, aux), grads = grad_fn(params, batch)
+        else:
+            def micro(acc, mb):
+                (l, aux), g = grad_fn(params, mb)
+                gsum, lsum = acc
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), aux
+
+            mbs = jax.tree.map(
+                lambda t: t.reshape(num_microbatches,
+                                    t.shape[0] // num_microbatches,
+                                    *t.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), aux = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / num_microbatches, gsum)
+            l = lsum / num_microbatches
+            aux = jax.tree.map(lambda a: a[-1], aux)
+        new_params, new_opt = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": l, **{f"aux/{k}": v for k, v in aux.items()}}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg, ctx: RunContext) -> Callable:
+    """Next-token top-1 accuracy (the Δ_ax metric for the LM track)."""
+    def eval_step(params, batch):
+        hidden, _ = lm.forward(params, cfg, batch, ctx, with_aux=False)
+        n_fr = cfg.frontend.n_embeds if cfg.frontend.kind != "none" else 0
+        tokens = batch["tokens"]
+        h = hidden[:, n_fr:n_fr + tokens.shape[1] - 1]
+        logits = lm.logits_fn(params, cfg, h)
+        pred = jnp.argmax(logits, axis=-1)
+        correct = (pred == tokens[:, 1:]).astype(jnp.float32)
+        return jnp.mean(correct)
+
+    return eval_step
+
+
+def make_serve_step(cfg, ctx: RunContext) -> Callable:
+    """One decode step: (params, state, tokens (B,1)) -> (logits, state)."""
+    def serve_step(params, state, tokens):
+        return lm.decode_step(params, cfg, state, tokens, ctx)
+
+    return serve_step
+
+
+def make_prefill_step(cfg, ctx: RunContext) -> Callable:
+    def prefill_step(params, state, tokens):
+        return lm.decode_step(params, cfg, state, tokens, ctx)
+
+    return prefill_step

@@ -1,0 +1,49 @@
+"""AdamW: int8-blockwise state tracks fp32 dynamics; grad clipping works."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def _toy_params(key):
+    k1, k2 = jax.random.split(key)
+    return {"a": {"w": jax.random.normal(k1, (64, 32), jnp.float32)},
+            "b": jax.random.normal(k2, (100,), jnp.float32)}
+
+
+def test_int8_state_tracks_f32():
+    key = jax.random.PRNGKey(0)
+    params = _toy_params(key)
+    cfg32 = AdamWConfig(lr=1e-2, state_dtype="f32")
+    cfg8 = AdamWConfig(lr=1e-2, state_dtype="int8")
+    p32, s32 = params, adamw_init(params, cfg32)
+    p8, s8 = params, adamw_init(params, cfg8)
+    for i in range(20):
+        g = jax.tree.map(
+            lambda p: jnp.sin(p * (i + 1)) * 0.1, params)
+        p32, s32 = jax.jit(lambda p, g, s: adamw_update(p, g, s, cfg32))(p32, g, s32)
+        p8, s8 = jax.jit(lambda p, g, s: adamw_update(p, g, s, cfg8))(p8, g, s8)
+    d32 = np.asarray(p32["a"]["w"] - params["a"]["w"])
+    d8 = np.asarray(p8["a"]["w"] - params["a"]["w"])
+    rel = np.linalg.norm(d8 - d32) / (np.linalg.norm(d32) + 1e-9)
+    assert rel < 0.08, rel   # sqrt-mapped v: ~5%; linear v was ~14%
+
+
+def test_grad_clip_caps_update():
+    params = {"w": jnp.zeros((10,), jnp.float32)}
+    cfg = AdamWConfig(lr=1.0, grad_clip=1e-3, weight_decay=0.0)
+    state = adamw_init(params, cfg)
+    g = {"w": jnp.full((10,), 1e6, jnp.float32)}
+    p2, _ = adamw_update(params, g, state, cfg)
+    assert np.all(np.isfinite(np.asarray(p2["w"])))
+
+
+def test_loss_descends_on_quadratic():
+    cfg = AdamWConfig(lr=8e-2, state_dtype="int8", weight_decay=0.0)
+    params = {"w": jnp.ones((16,), jnp.float32) * 3}
+    state = adamw_init(params, cfg)
+    for _ in range(120):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state = adamw_update(params, g, state, cfg)
+    assert float(jnp.sum(params["w"] ** 2)) < 1.0

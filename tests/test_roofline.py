@@ -1,0 +1,94 @@
+"""Roofline analyzer: loop-aware flop/byte/collective accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import hlo_cost
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def scanned(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+    c = _compile(scanned, x, ws)
+    res = hlo_cost.analyze(c.as_text())
+    expected = 8 * 2 * 128 * 256 * 256
+    assert abs(res.flops - expected) / expected < 0.01
+    # XLA's own analysis undercounts by the trip count — this is WHY the
+    # custom analyzer exists; pin the discrepancy so a fixed XLA flips here.
+    ca = c.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    assert float(ca["flops"]) < expected / 2
+
+
+def test_plain_matmul_flops_exact():
+    def f(a, b):
+        return a @ b
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    res = hlo_cost.analyze(_compile(f, a, b).as_text())
+    assert res.flops == 2 * 64 * 128 * 32
+
+
+def test_batched_dot_flops():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+    a = jax.ShapeDtypeStruct((4, 16, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 32, 8), jnp.float32)
+    res = hlo_cost.analyze(_compile(f, a, b).as_text())
+    assert res.flops == 2 * 4 * 16 * 32 * 8
+
+
+def test_int8_dot_flagged():
+    def f(a, b):
+        return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.int32)
+    a = jax.ShapeDtypeStruct((32, 64), jnp.int8)
+    b = jax.ShapeDtypeStruct((64, 16), jnp.int8)
+    res = hlo_cost.analyze(_compile(f, a, b).as_text())
+    assert res.int8_dot_flops == res.flops > 0
+
+
+def test_bytes_scale_with_scan_length():
+    def make(n):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+
+        def scanned(x, ws):
+            return jax.lax.scan(body, x, ws)[0]
+        x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+        ws = jax.ShapeDtypeStruct((n, 128, 128), jnp.float32)
+        return hlo_cost.analyze(_compile(scanned, x, ws).as_text())
+    b4, b16 = make(4).bytes, make(16).bytes
+    assert 3.0 < b16 / b4 < 5.0          # ~4x with fixed overheads
+
+
+def test_collective_detection_via_shard_map():
+    if jax.device_count() < 1:
+        pytest.skip("no devices")
+    # single-device mesh: psum still lowers to an all-reduce op in HLO
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("x",))
+
+    def f(a):
+        return shard_map(lambda t: jax.lax.psum(t, "x"), mesh=mesh,
+                         in_specs=P("x"), out_specs=P())(a)
+    a = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    txt = jax.jit(f).lower(a).as_text()     # pre-optimization keeps collective
+    # lowered stablehlo won't parse; compile instead
+    c = jax.jit(f).lower(a).compile()
+    res = hlo_cost.analyze(c.as_text())
+    # on 1 device XLA may elide the all-reduce; accept either but the parser
+    # must not crash and bytes must be positive
+    assert res.bytes > 0

@@ -107,7 +107,9 @@ def bench_layerwise_sparsity() -> List[Row]:
     """SV-C: non-uniform theta across depth."""
     table = _load_or_run_cnn("mobilenetv3s")
     fam = table["hqp_sparsity_by_family"]
-    thetas = {k: v["theta"] for k, v in fam.items()}
+    # manifest format stores θ floats; pre-artifact caches stored info dicts
+    thetas = {k: (v["theta"] if isinstance(v, dict) else v)
+              for k, v in fam.items()}
     if not thetas:
         return [("layerwise/none", 0.0, "no families")]
     mx = max(thetas, key=thetas.get)
@@ -129,22 +131,30 @@ def bench_energy() -> List[Row]:
 
 
 def bench_lm_hqp_serving() -> List[Row]:
-    """LM-fleet analogue of Tables I/II: decode us/token + size reduction."""
+    """LM-fleet analogue of Tables I/II: decode us/token + size reduction,
+    with the INT8 row served from the typed ``compress()`` artifact."""
     import dataclasses as dc
     import jax
     import jax.numpy as jnp
     from repro import configs
+    from repro.compress import compress
+    from repro.core.pipeline import HQPConfig
     from repro.core.pruning import param_bytes
-    from repro.core.quantization import quantize_lm_params
     from repro.models import lm
     from repro.sharding.ctx import default_ctx
     cfg = configs.get_smoke_config("granite-3-8b")
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    rows = []
+    art = compress(params, cfg, hqp=HQPConfig(weight_granularity="channel"),
+                   log=lambda s: None)
+    rows = [("lm_serving/manifest", 0.0,
+             f"bytes={art.manifest.bytes_before}->{art.manifest.bytes_after} "
+             f"qfrac={art.manifest.quantized_fraction:.2f} "
+             f"theta={art.manifest.theta:.2f}")]
     for name, p, qkv in [("bf16", params, False),
-                         ("hqp_int8", quantize_lm_params(params), True)]:
+                         ("hqp_int8", art.params, True)]:
         ctx = dc.replace(default_ctx(), quantized_kv=qkv)
-        state = lm.init_decode_state(cfg, 4, 64, ctx)
+        state = lm.init_decode_state(cfg, 4, 64, ctx,
+                                     params=p if qkv else None)
         tok = jnp.zeros((4, 1), jnp.int32)
         step = jax.jit(lambda pp, s, t: lm.decode_step(pp, cfg, s, t, ctx))
         logits, state = step(p, state, tok)

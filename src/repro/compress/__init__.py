@@ -1,0 +1,17 @@
+"""HQP compression as a typed artifact layer.
+
+  qtypes   — ``QuantizedLinear`` pytree node the runtime dispatches on
+  quantize — shared symmetric-quant math (jitted JAX, one eps convention)
+  artifact — ``compress()`` entrypoint -> ``HQPArtifact`` (params + manifest)
+
+See DESIGN.md §Compression-artifact for the format and invariants.
+"""
+from repro.compress.artifact import (HQPArtifact, HQPManifest,  # noqa: F401
+                                     compress, spec_to_tree, tree_to_spec)
+from repro.compress.qtypes import (QuantizedLinear, is_quantized,  # noqa: F401
+                                   linear_bytes, linear_kernel, out_features)
+from repro.compress.quantize import (EPS, QUANT_LINEAR_KEYS,  # noqa: F401
+                                     fake_quant, fake_quant_tree, model_bytes,
+                                     quant_error, quantize_linear,
+                                     quantize_lm_params, quantized_fraction,
+                                     symmetric_quantize)

@@ -1,0 +1,195 @@
+"""The HQP artifact: one typed, self-describing compression output.
+
+``compress()`` is the single entrypoint every consumer (serving launcher,
+benchmarks, CNN repro, checkpointing) goes through: conditional prune
+(Algorithm 1) -> physical compaction -> PTQ, returning an ``HQPArtifact``
+whose ``manifest`` is the audit trail — per-family θ, bytes before/after,
+quantized byte fraction, and the accept/reject history of the conditional
+loop. The paper's "output is a standard model" property becomes "output is a
+standard *artifact*": a pytree whose quantized leaves are ``QuantizedLinear``
+nodes the runtime dispatches on.
+
+Serialization: ``tree_to_spec``/``spec_to_tree`` encode the pytree structure
+(dict/tuple/list/QuantizedLinear) as JSON plus a flat array list, so an
+artifact reloads without a template tree (``launch.checkpoint.save_artifact``
+adds the atomic-commit envelope).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.compress import quantize as cq
+from repro.compress.qtypes import QuantizedLinear
+
+
+# ------------------------------------------------------------------ manifest
+@dataclasses.dataclass
+class HQPManifest:
+    arch: str
+    track: str                        # "int8" (LM real) | "fake" (CNN sim)
+    bits: int
+    bytes_before: int
+    bytes_after: int
+    quantized_fraction: float
+    pruned: bool
+    theta: float                      # global structural sparsity
+    n_drop: int
+    total_units: int
+    theta_by_family: Dict[str, float]
+    a_baseline: Optional[float]
+    a_final: Optional[float]
+    history: List[dict]               # accept/reject audit of Algorithm 1
+
+    def summary(self) -> str:
+        lines = [
+            f"[hqp] artifact({self.arch}/{self.track}): "
+            f"{self.bytes_before / 1e6:.1f}MB -> {self.bytes_after / 1e6:.1f}MB "
+            f"({self.bytes_before / max(self.bytes_after, 1):.2f}x), "
+            f"quantized {self.quantized_fraction:.0%} of bytes at "
+            f"{self.bits}b, θ={self.theta:.1%} "
+            f"({self.n_drop}/{self.total_units} units)"]
+        if self.a_baseline is not None:
+            lines.append(f"[hqp] accuracy {self.a_baseline:.4f} -> "
+                         f"{self.a_final:.4f} over {len(self.history)} "
+                         f"conditional steps")
+        fams = ([f"{k}={v:.0%}" for k, v in sorted(self.theta_by_family.items())
+                 if v > 0] or ["(no pruning applied)"])
+        for i in range(0, len(fams), 6):
+            lines.append("[hqp] θ by family: " + "  ".join(fams[i:i + 6]))
+        return "\n".join(lines)
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def fromdict(cls, d: dict) -> "HQPManifest":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+
+@dataclasses.dataclass
+class HQPArtifact:
+    params: Any                       # deployment pytree (QuantizedLinear leaves)
+    manifest: HQPManifest
+
+
+# ------------------------------------------------------------------ compress
+def compress(params: Any, cfg, sq_grads: Any = None,
+             eval_fn: Optional[Callable[[Any], float]] = None,
+             hqp=None, specs=None, a_baseline: Optional[float] = None,
+             log: Callable[[str], None] = print) -> HQPArtifact:
+    """Full HQP: conditional prune -> compact -> PTQ -> manifest.
+
+    ``sq_grads`` (Fisher diag pytree) + ``eval_fn`` enable the conditional
+    prune; without them the prune phase is skipped (PTQ-only artifact).
+    ``specs`` defaults to the LM family specs derived from ``cfg``; the CNN
+    track passes its own conv-channel specs. ``hqp.track`` selects real INT8
+    storage ("int8") or the paper-faithful simulated INT8 ("fake")."""
+    # lazy: core.* imports this module's package via core.quantization
+    from repro.core import pipeline as pipe
+    from repro.core import pruning as pr
+    from repro.core import sensitivity as sens
+
+    if (sq_grads is None) != (eval_fn is None):
+        raise ValueError(
+            "compress(): sq_grads and eval_fn must be given together (both "
+            "for conditional pruning, neither for a PTQ-only artifact); got "
+            f"sq_grads={'set' if sq_grads is not None else 'None'}, "
+            f"eval_fn={'set' if eval_fn is not None else 'None'}")
+    hqp = hqp or pipe.HQPConfig(weight_granularity="channel")
+    bytes_before = pr.param_bytes(params)
+    arch = getattr(cfg, "name", None) or getattr(cfg, "arch", "?")
+
+    deploy = params
+    pruned = False
+    theta, n_drop, total_units = 0.0, 0, 0
+    theta_by_family: Dict[str, float] = {}
+    a_final = a_baseline
+    history: List[dict] = []
+    if sq_grads is not None and eval_fn is not None:
+        if specs is None:
+            specs = sens.lm_prune_groups(cfg)
+        res = pipe.conditional_prune(params, specs, sq_grads, eval_fn, hqp,
+                                     a_baseline=a_baseline, log=log)
+        deploy = res.params_compact
+        pruned = True
+        theta, n_drop, total_units = res.theta, res.n_drop, res.ranked.total
+        theta_by_family = {k: v["theta"]
+                           for k, v in res.sparsity_by_family.items()}
+        a_baseline, a_final = res.a_baseline, res.a_final
+        history = [dataclasses.asdict(h) for h in res.history]
+
+    if hqp.track == "fake":
+        deploy = cq.fake_quant_tree(deploy, hqp.bits, hqp.weight_granularity)
+        bytes_after = cq.simulated_int8_bytes(deploy)
+        qfrac = cq.simulated_quantized_fraction(deploy)
+    else:
+        deploy = cq.quantize_lm_params(deploy, hqp.bits)
+        bytes_after = cq.model_bytes(deploy)
+        qfrac = cq.quantized_fraction(deploy)
+
+    manifest = HQPManifest(
+        arch=arch, track=hqp.track, bits=hqp.bits,
+        bytes_before=int(bytes_before), bytes_after=int(bytes_after),
+        quantized_fraction=float(qfrac), pruned=pruned, theta=float(theta),
+        n_drop=int(n_drop), total_units=int(total_units),
+        theta_by_family=theta_by_family,
+        a_baseline=None if a_baseline is None else float(a_baseline),
+        a_final=None if a_final is None else float(a_final),
+        history=history)
+    return HQPArtifact(params=deploy, manifest=manifest)
+
+
+# ------------------------------------------------------------------ (de)spec
+def tree_to_spec(tree: Any, arrays: List[np.ndarray]) -> Any:
+    """JSON-able structure spec; leaves append to ``arrays`` (bf16 leaves are
+    stored as a uint16 view, tagged in the spec)."""
+    if isinstance(tree, QuantizedLinear):
+        slot = len(arrays)
+        arrays.append(np.asarray(tree.w_q))
+        arrays.append(np.asarray(tree.scale))
+        return {"__kind__": "qlinear", "bits": tree.bits, "slot": slot}
+    if isinstance(tree, dict):
+        return {"__kind__": "dict",
+                "items": {k: tree_to_spec(v, arrays) for k, v in tree.items()}}
+    if isinstance(tree, (tuple, list)):
+        kind = "tuple" if isinstance(tree, tuple) else "list"
+        return {"__kind__": kind,
+                "items": [tree_to_spec(v, arrays) for v in tree]}
+    if tree is None:
+        return {"__kind__": "none"}
+    arr = np.asarray(tree)
+    slot = len(arrays)
+    dtype = str(tree.dtype)
+    if dtype == "bfloat16":
+        arr = arr.view(np.uint16)
+    arrays.append(arr)
+    return {"__kind__": "leaf", "slot": slot, "dtype": dtype}
+
+
+def _leaf_from(arr: np.ndarray, dtype: str):
+    import jax.numpy as jnp
+    if dtype == "bfloat16":
+        import ml_dtypes
+        arr = arr.view(ml_dtypes.bfloat16)
+    return jnp.asarray(arr)
+
+
+def spec_to_tree(spec: Any, arrays: List[np.ndarray]) -> Any:
+    import jax.numpy as jnp
+    kind = spec["__kind__"]
+    if kind == "qlinear":
+        return QuantizedLinear(w_q=jnp.asarray(arrays[spec["slot"]]),
+                               scale=jnp.asarray(arrays[spec["slot"] + 1]),
+                               bits=spec["bits"])
+    if kind == "dict":
+        return {k: spec_to_tree(v, arrays) for k, v in spec["items"].items()}
+    if kind in ("tuple", "list"):
+        seq = [spec_to_tree(v, arrays) for v in spec["items"]]
+        return tuple(seq) if kind == "tuple" else seq
+    if kind == "none":
+        return None
+    return _leaf_from(arrays[spec["slot"]], spec["dtype"])

@@ -1,0 +1,54 @@
+"""Typed quantized-parameter containers (the HQP artifact's leaf types).
+
+``QuantizedLinear`` replaces the ad-hoc ``{"w_q", "scale"}`` dicts: it is a
+pytree-registered dataclass, so the whole JAX machinery (jit, vmap, scan,
+shard_map, eval_shape, tree_map) treats it as a first-class node while model
+code dispatches on *type* instead of sniffing dict keys. ``bits`` rides along
+as static metadata — it is part of the treedef, not a traced leaf, so kernels
+can specialize on it at trace time.
+
+Path keys: flattening with ``tree_flatten_with_path`` yields ``GetAttrKey``
+entries named exactly like the old dict keys (``w_q``, ``scale``), so the
+sharding path-regex rules and checkpoint key layout are unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedLinear:
+    """INT8 linear weight: ``w_q`` (..., in, out) int8 + per-out-channel
+    ``scale`` (..., out) f32. Leading axes (layer stack / experts) carry
+    their own scales. ``x ≈ (x_q @ w_q) * x_scale * scale`` — dequant lives
+    in the matmul epilogue, the FP weight is never materialized."""
+    w_q: jax.Array
+    scale: jax.Array
+    bits: int = 8
+
+
+jax.tree_util.register_dataclass(
+    QuantizedLinear, data_fields=["w_q", "scale"], meta_fields=["bits"])
+
+
+def is_quantized(p: Any) -> bool:
+    return isinstance(p, QuantizedLinear)
+
+
+def linear_kernel(p: Any) -> jax.Array:
+    """The weight array of a (possibly quantized) linear — for shape
+    derivation only (head counts / widths of HQP-compacted params)."""
+    return p.w_q if isinstance(p, QuantizedLinear) else p["w"]
+
+
+def out_features(p: Any) -> int:
+    return linear_kernel(p).shape[-1]
+
+
+def linear_bytes(p: Any) -> int:
+    if isinstance(p, QuantizedLinear):
+        return p.w_q.size * p.w_q.dtype.itemsize + p.scale.size * 4
+    return p["w"].size * p["w"].dtype.itemsize

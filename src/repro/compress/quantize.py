@@ -1,0 +1,159 @@
+"""Symmetric quantization — the single implementation both tracks share.
+
+All math is JAX (jitted; the per-linear kernel is vmapped over stacked
+layer/expert axes), so PTQ runs on-device with no numpy round-trips and is
+``eval_shape``-traceable (the dry-run pipeline quantizes abstract params).
+
+One epsilon convention (``EPS``) everywhere: the CNN simulated-INT8 track
+(``fake_quant``) and the LM real-INT8 track (``quantize_linear``) previously
+used 1e-8 vs 1e-12; both now go through ``symmetric_quantize``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress.qtypes import QuantizedLinear
+
+EPS = 1e-8          # amax floor: all-zero slices get scale EPS/qmax, q == 0
+MIN_FAKE_SIZE = 64  # leaves below this stay FP in the simulated track
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "axes"))
+def symmetric_quantize(w: jax.Array, bits: int = 8,
+                       axes: Optional[Tuple[int, ...]] = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Shared symmetric-quant core: q = clip(round(w/s), ±qmax), s = amax/qmax.
+
+    ``axes``: reduction axes for amax (None = per-tensor). Returns (q float,
+    scale with ``axes`` kept as size-1 dims); callers cast q for storage."""
+    qmax = float(2 ** (bits - 1) - 1)
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=axes, keepdims=True)
+    scale = jnp.maximum(amax, EPS) / qmax
+    q = jnp.clip(jnp.round(wf / scale), -qmax, qmax)
+    return q, scale
+
+
+def _granularity_axes(ndim: int, granularity: str) -> Tuple[int, ...]:
+    if granularity == "tensor":
+        return tuple(range(ndim))
+    return tuple(range(ndim - 1))        # per output channel (last axis)
+
+
+def fake_quant(w: jax.Array, bits: int = 8,
+               granularity: str = "tensor") -> jax.Array:
+    """Dequantized-after-quantize weights (accuracy-simulation path)."""
+    q, scale = symmetric_quantize(w, bits, _granularity_axes(w.ndim,
+                                                             granularity))
+    return (q * scale).astype(w.dtype)
+
+
+def fake_quant_tree(params: Any, bits: int = 8, granularity: str = "tensor",
+                    min_size: int = MIN_FAKE_SIZE) -> Any:
+    """Fake-quantize every weight leaf with >= min_size elements (CNN track).
+
+    BN params/stats and small vectors stay FP32 (TensorRT folds/keeps them)."""
+    def fq(leaf):
+        if leaf.ndim >= 2 and leaf.size >= min_size:
+            return fake_quant(leaf, bits, granularity)
+        return leaf
+    return jax.tree.map(fq, params)
+
+
+def quant_error(w: jax.Array, bits: int, granularity: str) -> float:
+    """RMS dequantization error (sensitivity analyses / ablations)."""
+    q, scale = symmetric_quantize(w, bits, _granularity_axes(w.ndim,
+                                                             granularity))
+    deq = q * scale
+    return float(jnp.sqrt(jnp.mean(jnp.square(
+        w.astype(jnp.float32) - deq))))
+
+
+# ------------------------------------------------------------------ real INT8
+QUANT_LINEAR_KEYS = ("wq", "wk", "wv", "wo", "gate", "up", "down",
+                     "in_proj", "out_proj", "frontend")
+
+
+def _quantize_linear_2d(w: jax.Array, bits: int):
+    q, scale = symmetric_quantize(w, bits, axes=(0,))   # reduce the in-axis
+    return q.astype(jnp.int8), scale[0].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def quantize_linear(p: Any, bits: int = 8) -> QuantizedLinear:
+    """{"w": (.., in, out)} (or a bare array) -> QuantizedLinear.
+
+    Stacked (L, in, out) and expert (L, E, in, out) layouts are handled by
+    vmapping the 2D kernel over the leading axes: the scale is per-out-channel
+    within each leading index."""
+    w = p["w"] if isinstance(p, dict) else p
+    fn = functools.partial(_quantize_linear_2d, bits=bits)
+    for _ in range(w.ndim - 2):
+        fn = jax.vmap(fn)
+    q, scale = fn(w)
+    return QuantizedLinear(w_q=q, scale=scale, bits=bits)
+
+
+def quantize_lm_params(params: Any, bits: int = 8,
+                       skip: Tuple[str, ...] = ("router", "dt_proj", "x_proj"),
+                       ) -> Any:
+    """Walk the LM param tree; replace quantizable linears with
+    ``QuantizedLinear``. Embeddings, norms, routers and the small SSM
+    projections stay high-precision (standard practice; router fidelity gates
+    MoE quality). Pure JAX: traceable under jit/eval_shape."""
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            if ("w" in tree and hasattr(tree["w"], "ndim")
+                    and tree["w"].ndim >= 2
+                    and path and path[-1] in QUANT_LINEAR_KEYS
+                    and not any(s in path for s in skip)):
+                return quantize_linear(tree, bits)
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            return type(tree)(walk(v, path + (i,))
+                              for i, v in enumerate(tree))
+        return tree
+    return walk(params)
+
+
+# ------------------------------------------------------------------ accounting
+def quantized_fraction(params: Any) -> float:
+    """Fraction of parameter *bytes* now held in int8."""
+    int8 = total = 0
+    for leaf in jax.tree.leaves(params):
+        b = leaf.size * leaf.dtype.itemsize
+        total += b
+        if leaf.dtype == jnp.int8:
+            int8 += b
+    return int8 / max(total, 1)
+
+
+def model_bytes(params: Any) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(params))
+
+
+def simulated_int8_bytes(params: Any, min_size: int = MIN_FAKE_SIZE) -> int:
+    """Deployed-size accounting for the fake-quant (CNN) track: leaves the
+    simulation quantized count 1 B/param, the FP remainder its real width."""
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        if leaf.ndim >= 2 and leaf.size >= min_size:
+            total += leaf.size
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def simulated_quantized_fraction(params: Any,
+                                 min_size: int = MIN_FAKE_SIZE) -> float:
+    q = total = 0
+    for leaf in jax.tree.leaves(params):
+        b = leaf.size * leaf.dtype.itemsize
+        total += b
+        if leaf.ndim >= 2 and leaf.size >= min_size:
+            q += b
+    return q / max(total, 1)

@@ -6,6 +6,9 @@
   quantization  — paper-faithful per-tensor PTQ sim + production INT8 storage
   pipeline      — Algorithm 1 conditional loop + Q∘P composition
   mixed_precision — §VI-A S-guided INT4/INT8/BF16 allocation (beyond-paper)
+
+The deployment-facing entrypoint is ``repro.compress.compress`` — it wraps
+``pipeline.conditional_prune`` + compaction + PTQ into a typed artifact.
 """
 from repro.core import (calibration, mixed_precision, pipeline, pruning,  # noqa: F401
                         quantization, sensitivity)

@@ -29,6 +29,7 @@ class HQPConfig:
     act_method: str = "kl"           # absmax | percentile | kl
     max_steps: int = 200
     protect_frac: float = 0.0
+    track: str = "int8"              # "int8" real storage | "fake" simulated
 
 
 @dataclasses.dataclass
@@ -106,10 +107,10 @@ def hqp_compress_lm(params: Any, cfg, sq_grads: Any,
                     eval_fn: Callable[[Any], float],
                     hqp: Optional[HQPConfig] = None,
                     log: Callable[[str], None] = print):
-    """Full HQP for the unified LM: conditional prune -> per-channel INT8."""
-    from repro.core import quantization as q
+    """Full HQP for the unified LM — thin wrapper over the typed artifact
+    entrypoint (``repro.compress.compress``), kept for its historical
+    signature. Returns the ``HQPArtifact``; prefer calling compress()."""
+    from repro.compress import compress
     hqp = hqp or HQPConfig(weight_granularity="channel")
-    specs = sens.lm_prune_groups(cfg)
-    res = conditional_prune(params, specs, sq_grads, eval_fn, hqp, log=log)
-    params_int8 = q.quantize_lm_params(res.params_sparse, hqp.bits)
-    return res, params_int8
+    return compress(params, cfg, sq_grads=sq_grads, eval_fn=eval_fn,
+                    hqp=hqp, log=log)

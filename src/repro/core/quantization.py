@@ -1,117 +1,24 @@
-"""Post-training quantization (HQP Phase 2).
+"""Post-training quantization (HQP Phase 2) — compat surface.
+
+The implementation lives in ``repro.compress.quantize`` (jitted JAX, one
+shared symmetric-quant helper, one epsilon convention); this module re-exports
+it so the paper-track code keeps its historical import path.
 
 Two consumers:
   * CNN repro track — *simulated* INT8 (fake-quant weights + calibrated
     activation taps) with the paper's per-tensor step size s = R/(2^b - 1),
     reproducing the pruning-quantization-conflict phenomenon exactly as
     analyzed in §II-C.
-  * LM fleet — *real* INT8 storage: linear params become {"w_q" int8,
-    "scale" f32 per-out-channel}, executed by the W8A8 Pallas kernel (TPU)
-    or the int8 dot_general path (XLA). Per-channel granularity is the
-    beyond-paper production choice; per-tensor is available for ablation.
+  * LM fleet — *real* INT8 storage: linear params become typed
+    ``QuantizedLinear`` nodes (int8 weights + per-out-channel f32 scales),
+    executed by the registered backend (Pallas W8A8 on TPU, XLA int8
+    dot_general elsewhere). Per-channel granularity is the beyond-paper
+    production choice; per-tensor is available for ablation.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-
-# ------------------------------------------------------------------ weights
-def quant_error(w: jax.Array, bits: int, granularity: str) -> float:
-    q, scale, _ = _quantize_array(np.asarray(w, np.float32), bits, granularity)
-    deq = q * scale
-    return float(np.sqrt(np.mean((np.asarray(w, np.float32) - deq) ** 2)))
-
-
-def _quantize_array(w: np.ndarray, bits: int, granularity: str,
-                    axis: int = -1) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Returns (q int, scale broadcastable, qmax). Symmetric."""
-    qmax = 2 ** (bits - 1) - 1
-    if granularity == "tensor":
-        amax = np.max(np.abs(w))
-        scale = np.maximum(amax, 1e-8) / qmax
-        scale = np.asarray(scale)[None]
-    else:  # per output channel (last axis by convention)
-        red = tuple(i for i in range(w.ndim) if i != (axis % w.ndim))
-        amax = np.max(np.abs(w), axis=red, keepdims=True)
-        scale = np.maximum(amax, 1e-8) / qmax
-    q = np.clip(np.round(w / scale), -qmax, qmax)
-    return q, scale, qmax
-
-
-def fake_quant(w: jax.Array, bits: int = 8,
-               granularity: str = "tensor") -> jax.Array:
-    """Dequantized-after-quantize weights (accuracy simulation path)."""
-    q, scale, _ = _quantize_array(np.asarray(w, np.float32), bits, granularity)
-    return jnp.asarray((q * scale).astype(np.float32), dtype=w.dtype)
-
-
-def fake_quant_tree(params: Any, bits: int = 8, granularity: str = "tensor",
-                    min_size: int = 64) -> Any:
-    """Fake-quantize every weight leaf with >= min_size elements (CNN track).
-
-    BN params/stats and small vectors stay FP32 (TensorRT folds/keeps them)."""
-    def fq(leaf):
-        if leaf.ndim >= 2 and leaf.size >= min_size:
-            return fake_quant(leaf, bits, granularity)
-        return leaf
-    return jax.tree.map(fq, params)
-
-
-# ------------------------------------------------------------------ LM real INT8
-QUANT_LINEAR_KEYS = ("wq", "wk", "wv", "wo", "gate", "up", "down",
-                     "in_proj", "out_proj", "frontend")
-
-
-def quantize_linear(p: Dict[str, jax.Array], bits: int = 8) -> Dict[str, jax.Array]:
-    """{"w": (.., in, out)} -> {"w_q" int8, "scale" (.., out) f32}.
-
-    Handles stacked (L, in, out) and expert (L, E, in, out) layouts: the scale
-    is per-out-channel within each leading index."""
-    w = np.asarray(p["w"], np.float32)
-    qmax = 2 ** (bits - 1) - 1
-    amax = np.max(np.abs(w), axis=-2, keepdims=True)     # reduce the in-axis
-    scale = np.maximum(amax, 1e-12) / qmax
-    q = np.clip(np.round(w / scale), -qmax, qmax).astype(np.int8)
-    return {"w_q": jnp.asarray(q), "scale": jnp.asarray(
-        np.squeeze(scale, -2).astype(np.float32))}
-
-
-def quantize_lm_params(params: Any, bits: int = 8,
-                       skip: Tuple[str, ...] = ("router", "dt_proj", "x_proj"),
-                       ) -> Any:
-    """Walk the LM param tree; replace quantizable linears with INT8 form.
-
-    Embeddings, norms, routers and the small SSM projections stay
-    high-precision (standard practice; router fidelity gates MoE quality)."""
-    def walk(tree, path=()):
-        if isinstance(tree, dict):
-            if ("w" in tree and isinstance(tree["w"], jax.Array)
-                    and tree["w"].ndim >= 2
-                    and path and path[-1] in QUANT_LINEAR_KEYS
-                    and not any(s in path for s in skip)):
-                return quantize_linear(tree, bits)
-            return {k: walk(v, path + (k,)) for k, v in tree.items()}
-        if isinstance(tree, (tuple, list)):
-            return type(tree)(walk(v, path + (i,))
-                              for i, v in enumerate(tree))
-        return tree
-    return walk(params)
-
-
-def quantized_fraction(params: Any) -> float:
-    """Fraction of parameter *bytes* now held in int8."""
-    int8 = total = 0
-    for leaf in jax.tree.leaves(params):
-        b = leaf.size * leaf.dtype.itemsize
-        total += b
-        if leaf.dtype == jnp.int8:
-            int8 += b
-    return int8 / max(total, 1)
-
-
-def model_bytes(params: Any) -> int:
-    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(params))
+from repro.compress.quantize import (EPS, QUANT_LINEAR_KEYS,  # noqa: F401
+                                     fake_quant, fake_quant_tree, model_bytes,
+                                     quant_error, quantize_linear,
+                                     quantize_lm_params, quantized_fraction,
+                                     symmetric_quantize)

@@ -1,32 +1,26 @@
-"""jit'd public wrappers: dispatch Pallas on TPU, portable jnp elsewhere.
+"""jit'd public wrappers: shape plumbing + backend-registry dispatch.
 
-Every op here has a pure-jnp oracle in ``ref.py``; tests sweep shapes/dtypes
-with the kernels in interpret mode and assert allclose against the oracle.
+The execution backend (``pallas`` | ``xla`` | ``ref``) is resolved per call
+site at trace time via ``kernels.backend`` — platform default, overridable
+with ``REPRO_BACKEND`` or ``backend.set_backend()``. Every op has a pure-jnp
+oracle in ``ref.py``; tests sweep shapes/dtypes with the kernels in interpret
+mode and assert allclose against the oracle.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
-
-
-@functools.lru_cache(maxsize=1)
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.backend import get_backend
 
 
 def quantize_rowwise(x: jax.Array):
     """(..., K) float -> ((..., K) int8, (...,) f32 scale)."""
-    if _on_tpu():
-        from repro.kernels.quantize import quantize_rowwise_pallas
-        shp = x.shape
-        q, s = quantize_rowwise_pallas(x.reshape(-1, shp[-1]))
-        return q.reshape(shp), s.reshape(shp[:-1])
-    return ref.quantize_ref(x, axis=-1)
+    shp = x.shape
+    q, s = get_backend().quantize_rowwise(x.reshape(-1, shp[-1]))
+    return q.reshape(shp), s.reshape(shp[:-1])
 
 
 def int8_matmul(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
@@ -35,27 +29,18 @@ def int8_matmul(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
 
     Dynamic per-row activation quantization unless x_scale is supplied
     (static calibrated scales from HQP PTQ come through x_scale)."""
+    backend = get_backend()
     shp = x.shape
     x2 = x.reshape(-1, shp[-1])
     if x2.dtype != jnp.int8:
-        x_q, x_scale = quantize_rowwise(x2)
+        x_q, x_scale = backend.quantize_rowwise(x2)
     else:
         x_q = x2
         x_scale = x_scale.reshape(-1)
-    if _on_tpu():
-        from repro.kernels.int8_matmul import int8_matmul_pallas
-        out = int8_matmul_pallas(x_q, w_q, x_scale, w_scale)
-    else:
-        out = ref.int8_matmul_ref(x_q, w_q, w_scale, x_scale)
+    out = backend.int8_matmul(x_q, w_q, x_scale, w_scale)
     return out.reshape(*shp[:-1], w_q.shape[1])
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
     """(B, S, H, hd) causal MHA (equal q/kv heads; GQA folded by caller)."""
-    if _on_tpu():
-        from repro.kernels.flash_attention import flash_attention_pallas
-        b, s, h, hd = q.shape
-        fold = lambda t: jnp.moveaxis(t, 2, 1).reshape(b * h, s, hd)
-        o = flash_attention_pallas(fold(q), fold(k), fold(v))
-        return jnp.moveaxis(o.reshape(b, h, s, hd), 1, 2)
-    return ref.flash_attention_ref(q, k, v, causal=True)
+    return get_backend().flash_attention(q, k, v)

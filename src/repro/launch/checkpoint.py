@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.sharding.rules import path_str as _path_key
+
 COMMIT_MARKER = ".COMMITTED"
 
 
@@ -34,8 +36,7 @@ def _flatten(tree: Any) -> Dict[str, np.ndarray]:
     uint16 view under a tagged key and re-view on restore."""
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
+        key = _path_key(path)
         if leaf.dtype == jnp.bfloat16:
             flat["__bf16__" + key] = np.asarray(leaf).view(np.uint16)
         else:
@@ -95,8 +96,7 @@ def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
         shardings, is_leaf=lambda s: isinstance(s, jax.sharding.Sharding))
         if shardings is not None else [None] * len(paths))
     for (path, like), sh in zip(paths, sh_flat):
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
+        key = _path_key(path)
         if "__bf16__" + key in data:
             import ml_dtypes
             arr = data["__bf16__" + key].view(ml_dtypes.bfloat16)
@@ -107,6 +107,55 @@ def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
             arr = jax.device_put(arr, sh)
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+# ------------------------------------------------------------------ artifact
+ARTIFACT_MANIFEST = "manifest.json"
+ARTIFACT_ARRAYS = "arrays.npz"
+
+
+def save_artifact(art_dir: str, artifact) -> str:
+    """Persist an ``HQPArtifact`` self-describingly (atomic commit).
+
+    Layout: ``manifest.json`` holds the compression manifest *and* the pytree
+    structure spec; ``arrays.npz`` the flat leaves. Reload needs no template
+    tree — the artifact is the deployment hand-off format (DESIGN.md
+    §Compression-artifact)."""
+    from repro.compress.artifact import tree_to_spec
+    base = pathlib.Path(art_dir)
+    base.parent.mkdir(parents=True, exist_ok=True)
+    tmp = base.parent / f".tmp_{base.name}_{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    arrays: list = []
+    spec = tree_to_spec(artifact.params, arrays)
+    np.savez(tmp / ARTIFACT_ARRAYS,
+             **{f"a{i}": a for i, a in enumerate(arrays)})
+    (tmp / ARTIFACT_MANIFEST).write_text(json.dumps(
+        {"manifest": artifact.manifest.asdict(), "tree": spec,
+         "n_arrays": len(arrays), "time": time.time()}))
+    if base.exists():
+        shutil.rmtree(base)
+    tmp.rename(base)
+    (base / COMMIT_MARKER).touch()
+    return str(base)
+
+
+def load_artifact(art_dir: str):
+    """Inverse of ``save_artifact`` -> ``HQPArtifact``."""
+    from repro.compress.artifact import HQPArtifact, HQPManifest, spec_to_tree
+    base = pathlib.Path(art_dir)
+    if not base.exists():
+        raise FileNotFoundError(f"no artifact at {base}")
+    if not (base / COMMIT_MARKER).exists():
+        raise FileNotFoundError(f"artifact {base} is not committed (torn write)")
+    meta = json.loads((base / ARTIFACT_MANIFEST).read_text())
+    data = np.load(base / ARTIFACT_ARRAYS)
+    arrays = [data[f"a{i}"] for i in range(meta["n_arrays"])]
+    params = spec_to_tree(meta["tree"], arrays)
+    return HQPArtifact(params=params,
+                       manifest=HQPManifest.fromdict(meta["manifest"]))
 
 
 def prune_old(ckpt_dir: str, keep: int = 3):

@@ -98,13 +98,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         ctx = make_ctx(mesh, batch_sharded=shape.global_batch >= 16,
                        quantized_kv=quantized_kv,
                        remat=(shape.kind == "train"),
+                       moe_no_drop=(shape.kind != "train"),
                        pure_dp=pure_dp)
         params_abs = jax.eval_shape(
             lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
         if variant.startswith(("hqp", "int8w")):
+            # the jitted PTQ walk is traceable: eval_shape it directly
             from repro.core.quantization import quantize_lm_params
-            params_abs = jax.eval_shape(
-                lambda p: quantize_lm_params_abstract(p), params_abs)
+            params_abs = jax.eval_shape(quantize_lm_params, params_abs)
         p_sh = rules.param_shardings(params_abs, ctx)
 
         with mesh:
@@ -224,30 +225,6 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["traceback"] = traceback.format_exc()[-4000:]
     rec["elapsed_s"] = round(time.time() - t0, 1)
     return _finish(rec, save)
-
-
-def quantize_lm_params_abstract(params):
-    """Abstract version of INT8 PTQ for eval_shape (same shapes/dtypes)."""
-    import jax.numpy as jnp
-    from repro.core.quantization import QUANT_LINEAR_KEYS
-
-    def walk(tree, path=()):
-        if isinstance(tree, dict):
-            if ("w" in tree and hasattr(tree["w"], "ndim")
-                    and tree["w"].ndim >= 2
-                    and path and path[-1] in QUANT_LINEAR_KEYS
-                    and not any(s in path for s in ("router", "dt_proj",
-                                                    "x_proj"))):
-                w = tree["w"]
-                return {"w_q": jnp.zeros(w.shape, jnp.int8),
-                        "scale": jnp.zeros(w.shape[:-2] + w.shape[-1:],
-                                           jnp.float32)}
-            return {k: walk(v, path + (k,)) for k, v in tree.items()}
-        if isinstance(tree, (tuple, list)):
-            return type(tree)(walk(v, path + (i,))
-                              for i, v in enumerate(tree))
-        return tree
-    return walk(params)
 
 
 def _finish(rec: dict, save: bool) -> dict:

@@ -1,17 +1,19 @@
 """Serving launcher: batched prefill + decode with the HQP-compressed model.
 
 Deliverable (b) inference driver: loads (or initializes) a model, optionally
-applies the full HQP pipeline (sensitivity prune -> INT8 PTQ -> INT8 KV
-cache), then serves a batch of synthetic requests through cache-filling
-prefill and token-by-token decode, reporting tokens/s and the compression
-metrics next to each other — the LM analogue of the paper's Tables I/II.
+runs the full HQP pipeline through the typed artifact entrypoint
+(``repro.compress.compress``: Fisher sensitivity -> conditional prune ->
+compaction -> on-device INT8 PTQ -> INT8 KV cache), prints the artifact
+manifest (bytes, quantized fraction, per-family θ), then serves a batch of
+synthetic requests through cache-filling prefill and token-by-token decode,
+reporting tokens/s next to the compression metrics — the LM analogue of the
+paper's Tables I/II.
 
   python -m repro.launch.serve --arch qwen3-0.6b --smoke --hqp --tokens 32
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -22,7 +24,36 @@ from repro import configs
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.sharding.ctx import make_ctx
-from repro.train.train_step import make_serve_step
+from repro.train.train_step import make_eval_step, make_serve_step
+
+
+def _calib_batch(cfg, batch: int, seq: int, seed: int = 17) -> dict:
+    rng = np.random.RandomState(seed)
+    b = {"tokens": jnp.asarray(
+        rng.randint(0, cfg.vocab_size, (batch, seq)), jnp.int32)}
+    if cfg.frontend.kind != "none":
+        b["embeds"] = jnp.zeros((batch, cfg.frontend.n_embeds, cfg.d_model),
+                                jnp.bfloat16)
+    return b
+
+
+def build_artifact(params, cfg, ctx, prune_steps: int, log=print):
+    """HQP artifact for serving: one-batch Fisher pass + next-token-accuracy
+    eval drive the conditional prune; PTQ is the jitted on-device path."""
+    from repro.core.pipeline import HQPConfig
+    from repro.core.sensitivity import fisher_diag
+    from repro.compress import compress
+
+    batch = _calib_batch(cfg, batch=2, seq=32)
+    grad = jax.jit(jax.grad(
+        lambda p, b: lm.loss_fn(p, cfg, b, ctx, with_aux=False)[0]))
+    sq, _ = fisher_diag(grad, params, [batch])
+    eval_step = jax.jit(make_eval_step(cfg, ctx))
+    eval_fn = lambda p: float(eval_step(p, batch))
+    hqp = HQPConfig(weight_granularity="channel", step_frac=0.05,
+                    max_steps=prune_steps)
+    return compress(params, cfg, sq_grads=sq, eval_fn=eval_fn, hqp=hqp,
+                    log=log)
 
 
 def main(argv=None):
@@ -33,28 +64,50 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--hqp", action="store_true",
-                    help="INT8 weights + INT8 KV cache")
+                    help="full HQP artifact: prune -> INT8 weights + INT8 KV")
+    ap.add_argument("--prune-steps", type=int, default=3,
+                    help="conditional-prune δ-steps for the serving artifact")
+    ap.add_argument("--save-artifact", default=None,
+                    help="directory to persist the HQP artifact (atomic)")
+    ap.add_argument("--load-artifact", default=None,
+                    help="serve a previously saved HQP artifact")
     ap.add_argument("--max-seq", type=int, default=128)
     args = ap.parse_args(argv)
+
+    if args.save_artifact and not args.hqp:
+        ap.error("--save-artifact requires --hqp (nothing to save otherwise)")
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
     mesh = make_host_mesh()
-    ctx = make_ctx(mesh, batch_sharded=False, quantized_kv=args.hqp)
+    use_hqp = args.hqp or args.load_artifact is not None
+    ctx = make_ctx(mesh, batch_sharded=False, quantized_kv=use_hqp)
 
-    params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    from repro.core.pruning import param_bytes
-    size0 = param_bytes(params)
-    if args.hqp:
-        from repro.core.quantization import quantize_lm_params
-        params = quantize_lm_params(params)
-        print(f"[serve] HQP INT8: {size0/1e6:.1f}MB -> "
-              f"{param_bytes(params)/1e6:.1f}MB")
+    if args.load_artifact:
+        from repro.launch.checkpoint import load_artifact
+        art = load_artifact(args.load_artifact)
+        if art.manifest.arch != cfg.name:
+            raise SystemExit(
+                f"artifact was built for {art.manifest.arch!r}, requested "
+                f"config is {cfg.name!r} — pass the matching --arch/--smoke")
+        print(art.manifest.summary())
+        params = art.params
+    else:
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        if args.hqp:
+            art = build_artifact(params, cfg, ctx, args.prune_steps)
+            print(art.manifest.summary())
+            params = art.params
+            if args.save_artifact:
+                from repro.launch.checkpoint import save_artifact
+                print(f"[serve] artifact saved to "
+                      f"{save_artifact(args.save_artifact, art)}")
 
     serve_step = jax.jit(make_serve_step(cfg, ctx), donate_argnums=(1,))
 
     with mesh:
-        state = lm.init_decode_state(cfg, args.batch, args.max_seq, ctx)
+        state = lm.init_decode_state(cfg, args.batch, args.max_seq, ctx,
+                                     params=params if use_hqp else None)
         rng = np.random.RandomState(0)
         prompts = jnp.asarray(rng.randint(
             0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)

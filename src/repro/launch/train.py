@@ -50,7 +50,8 @@ def main(argv=None):
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
     mesh = make_host_mesh()
-    ctx = make_ctx(mesh, batch_sharded=args.batch >= mesh.shape["data"])
+    ctx = make_ctx(mesh, batch_sharded=args.batch >= mesh.shape["data"],
+                   moe_no_drop=False)       # training: capacity_factor drops
     opt_cfg = AdamWConfig(lr=args.lr, state_dtype=args.state_dtype)
 
     params = lm.init_params(jax.random.PRNGKey(0), cfg)

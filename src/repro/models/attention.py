@@ -213,10 +213,8 @@ def attention_forward(p: dict, cfg, x: jax.Array, positions: jax.Array,
     hd = cfg.resolved_head_dim
     b, s, _ = x.shape
     # head counts derive from (possibly HQP-compacted) param shapes
-    wq = p["wq"].get("w", p["wq"].get("w_q"))
-    wk = p["wk"].get("w", p["wk"].get("w_q"))
-    n_heads = wq.shape[-1] // hd
-    n_kv = wk.shape[-1] // hd
+    n_heads = L.out_features(p["wq"]) // hd
+    n_kv = L.out_features(p["wk"]) // hd
     q = _split_heads(L.dense(x, p["wq"]), n_heads, hd)
     k = _split_heads(L.dense(x, p["wk"]), n_kv, hd)
     v = _split_heads(L.dense(x, p["wv"]), n_kv, hd)

@@ -2,12 +2,13 @@
 
 Parameter convention
 --------------------
-A linear layer's params are a dict:
+A linear layer's params are either
   full precision : {"w": (in, out) bf16/f32}
-  HQP-quantized  : {"w_q": (in, out) int8, "scale": (out,) f32[, "w_bits": ()]}
-``dense()`` dispatches on the keys, so the same model code runs both the FP
-baseline and the HQP INT8 model — quantization is a parameter transform, not a
-model rewrite. This mirrors the paper's "output is a standard model" property.
+  HQP-quantized  : a ``repro.compress.QuantizedLinear`` pytree node
+``dense()`` dispatches on *type*, so the same model code runs both the FP
+baseline and the HQP INT8 artifact — quantization is a parameter transform,
+not a model rewrite. This mirrors the paper's "output is a standard model"
+property; see DESIGN.md §Compression-artifact.
 """
 from __future__ import annotations
 
@@ -15,6 +16,10 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.compress.qtypes import (QuantizedLinear, linear_bytes,  # noqa: F401
+                                   linear_kernel, out_features)
+from repro.kernels import ops as kops
 
 COMPUTE_DTYPE = jnp.bfloat16
 
@@ -30,26 +35,23 @@ def linear_init(key, d_in, d_out, dtype=COMPUTE_DTYPE):
 
 
 # ---------------------------------------------------------------- dense
-def dense(x: jax.Array, p: dict) -> jax.Array:
-    """Matmul dispatch: FP weight, or INT8 weight with per-out-channel scale.
+def dense(x: jax.Array, p) -> jax.Array:
+    """Matmul dispatch: FP weight dict, or a typed ``QuantizedLinear``.
 
     The INT8 path intentionally keeps the weight int8 in HLO (bytes halve in
     the roofline memory term); dequant is folded into the matmul epilogue by
     scaling the int32/f32 accumulator — never materializing an FP weight.
-    On TPU, ``repro.kernels.ops.int8_matmul`` (Pallas) implements this fused;
-    the jnp path below is the portable equivalent XLA fuses on its own.
+    Which kernel runs is the execution backend's choice
+    (``kernels.backend``): fused Pallas on TPU, XLA-fused jnp elsewhere.
     """
-    if "w_q" in p:
-        from repro.kernels import ops as kops  # lazy: avoid cycle
-        return kops.int8_matmul(x, p["w_q"], p["scale"])
+    if isinstance(p, QuantizedLinear):
+        return kops.int8_matmul(x, p.w_q, p.scale)
     w = p["w"]
     return jnp.dot(x.astype(COMPUTE_DTYPE), w.astype(COMPUTE_DTYPE))
 
 
-def dense_param_bytes(p: dict) -> int:
-    if "w_q" in p:
-        return p["w_q"].size * 1 + p["scale"].size * 4
-    return p["w"].size * p["w"].dtype.itemsize
+def dense_param_bytes(p) -> int:
+    return linear_bytes(p)
 
 
 # ---------------------------------------------------------------- norms

@@ -254,8 +254,16 @@ def loss_fn(params: dict, cfg, batch: dict,
 
 # ------------------------------------------------------------------ decode
 def init_decode_state(cfg, batch: int, max_seq: int,
-                      ctx: Optional[RunContext] = None) -> dict:
-    """Stacked per-period-position caches + current length."""
+                      ctx: Optional[RunContext] = None,
+                      params: Optional[dict] = None) -> dict:
+    """Stacked per-period-position caches + current length.
+
+    When ``params`` is given, per-position cache widths (KV heads, Mamba
+    channels, mLSTM heads) derive from the param shapes instead of the
+    config, so HQP-compacted artifacts — which physically shrank those axes
+    — serve without a config rewrite. Compacted stacked families are
+    shape-uniform across the layer stack, so one width per period position
+    suffices."""
     ctx = ctx or default_ctx()
     period = pattern_period(cfg)
     groups = cfg.n_layers // period
@@ -266,15 +274,26 @@ def init_decode_state(cfg, batch: int, max_seq: int,
         return jax.tree.map(lambda *xs: jnp.stack(xs),
                             *[make() for _ in range(groups)])
 
+    def blk(j):
+        return params["blocks"][j] if params is not None else None
+
     caches = []
-    for kind, _ in spec:
+    for j, (kind, _) in enumerate(spec):
         if kind == "attn":
+            n_kv = (L.out_features(blk(j)["attn"]["wk"]) // hd
+                    if params is not None else cfg.n_kv_heads)
             caches.append(stack(lambda: A.init_kv_cache(
-                batch, max_seq, cfg.n_kv_heads, hd, ctx.quantized_kv)))
+                batch, max_seq, n_kv, hd, ctx.quantized_kv)))
         elif kind == "mamba":
-            caches.append(stack(lambda: SSM.init_mamba_state(batch, cfg)))
+            d_in = (blk(j)["mamba"]["conv_w"].shape[-1]
+                    if params is not None else None)
+            caches.append(stack(
+                lambda: SSM.init_mamba_state(batch, cfg, d_in=d_in)))
         elif kind == "mlstm":
-            caches.append(stack(lambda: X.init_mlstm_state(batch, cfg)))
+            d_in = (L.out_features(blk(j)["mlstm"]["in_proj"]) // 2
+                    if params is not None else None)
+            caches.append(stack(
+                lambda: X.init_mlstm_state(batch, cfg, d_in=d_in)))
         elif kind == "slstm":
             caches.append(stack(lambda: X.init_slstm_state(batch, cfg)))
     return {"caches": tuple(caches), "pos": jnp.zeros((), jnp.int32)}

@@ -41,33 +41,27 @@ def moe_init(key, cfg) -> dict:
     }
 
 
-def _capacity(n_tokens: int, cfg) -> int:
+def _capacity(n_tokens: int, cfg, no_drop: bool = False) -> int:
+    """Per-expert buffer rows. ``no_drop``: an expert appears at most once in
+    a token's top-k, so capacity == n_tokens holds every routable pair —
+    batched prefill then computes exactly what per-token decode computes
+    (the serving-consistency invariant; train keeps capacity_factor drops)."""
+    if no_drop:
+        return n_tokens
     m = cfg.moe
     c = int(m.experts_per_token * n_tokens * m.capacity_factor / m.n_experts) + 1
     return max(4, min(c, n_tokens))
 
 
 def _expert_ffn(xb: jax.Array, p: dict) -> jax.Array:
-    """xb: (E_loc, C, d); expert weights (E_loc, d, ff)/(E_loc, ff, d)."""
-    def one(x, g, u, dn):
-        h = jax.nn.silu(jnp.dot(x, g)) * jnp.dot(x, u)
-        return jnp.dot(h.astype(L.COMPUTE_DTYPE), dn)
-    gw = p["gate"].get("w_q", p["gate"].get("w"))
-    # quantized experts: dequant per expert inside the vmap (scale per out-col)
-    if "w_q" in p["gate"]:
-        def one_q(x, pg, pu, pd):
-            h = jax.nn.silu(_qdot(x, pg)) * _qdot(x, pu)
-            return _qdot(h.astype(L.COMPUTE_DTYPE), pd)
-        return jax.vmap(one_q)(xb,
-                               {k: p["gate"][k] for k in ("w_q", "scale")},
-                               {k: p["up"][k] for k in ("w_q", "scale")},
-                               {k: p["down"][k] for k in ("w_q", "scale")})
-    return jax.vmap(one)(xb, p["gate"]["w"], p["up"]["w"], p["down"]["w"])
+    """xb: (E_loc, C, d); expert weights (E_loc, d, ff)/(E_loc, ff, d).
 
-
-def _qdot(x: jax.Array, p: dict) -> jax.Array:
-    from repro.kernels import ops as kops
-    return kops.int8_matmul(x, p["w_q"], p["scale"])
+    ``L.dense`` dispatches per expert inside the vmap — FP dicts and
+    ``QuantizedLinear`` nodes (per-expert out-channel scales) share one path."""
+    def one(x, pg, pu, pd):
+        h = jax.nn.silu(L.dense(x, pg)) * L.dense(x, pu)
+        return L.dense(h, pd)
+    return jax.vmap(one)(xb, p["gate"], p["up"], p["down"])
 
 
 def _moe_local(x: jax.Array, params: dict, cfg, e_start: jax.Array,
@@ -144,18 +138,22 @@ def moe_forward(params: dict, cfg, x: jax.Array, ctx,
 
     dp = ctx.dp_size if ctx.batch_sharded else 1
     n_local = (b // dp) * s
-    capacity = _capacity(n_local, cfg)
+    capacity = _capacity(n_local, cfg, no_drop=ctx.moe_no_drop)
 
     bspec = ctx.batch_spec()[0]
     x_spec = P(bspec, None, None)
-    # per-expert specs (expert axis prepended, sharded over the model axis)
-    if "w" in params["gate"]:
-        ew = {"w": P(ctx.model_axis, None, None)}
-    else:
-        ew = {"w_q": P(ctx.model_axis, None, None),
-              "scale": P(ctx.model_axis, None)}
+
+    # per-expert specs (expert axis prepended, sharded over the model axis);
+    # a QuantizedLinear node gets a spec node of the same type/metadata
+    def ew(p):
+        if isinstance(p, L.QuantizedLinear):
+            return L.QuantizedLinear(w_q=P(ctx.model_axis, None, None),
+                                     scale=P(ctx.model_axis, None),
+                                     bits=p.bits)
+        return {"w": P(ctx.model_axis, None, None)}
     param_specs = {"router": {"w": P(None, None), "b": P(None)},
-                   "gate": dict(ew), "up": dict(ew), "down": dict(ew)}
+                   "gate": ew(params["gate"]), "up": ew(params["up"]),
+                   "down": ew(params["down"])}
 
     def body(xl, pl):
         xf = xl.reshape(-1, d)

@@ -140,8 +140,10 @@ def mamba_forward(p: dict, cfg, x: jax.Array,
     return L.dense(out, p["out_proj"]), new_state
 
 
-def init_mamba_state(batch: int, cfg) -> dict:
+def init_mamba_state(batch: int, cfg, d_in: Optional[int] = None) -> dict:
+    """``d_in`` override: channel width of an HQP-compacted block."""
     s = cfg.ssm
-    d_in = s.expand * cfg.d_model
+    if d_in is None:
+        d_in = s.expand * cfg.d_model
     return {"h": jnp.zeros((batch, d_in, s.d_state), jnp.float32),
             "conv": jnp.zeros((batch, s.d_conv - 1, d_in), jnp.float32)}

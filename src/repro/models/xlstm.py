@@ -101,7 +101,7 @@ def mlstm_forward(p: dict, cfg, x: jax.Array,
     xcfg = cfg.xlstm
     bsz, seq, d = x.shape
     hd = p["wq"].shape[-1]                        # per-head width (fixed)
-    d_in = (p["in_proj"].get("w", p["in_proj"].get("w_q")).shape[-1] // 2)
+    d_in = L.out_features(p["in_proj"]) // 2
     h = d_in // hd                                # shape-derived (pruning)
     xz = L.dense(x, p["in_proj"])
     xin, z = jnp.split(xz, 2, axis=-1)
@@ -146,10 +146,13 @@ def mlstm_forward(p: dict, cfg, x: jax.Array,
     return out, (new_state if seq == 1 or state is not None else None)
 
 
-def init_mlstm_state(batch: int, cfg) -> Tuple:
-    h = cfg.n_heads
-    d_in = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
-    hd = d_in // h
+def init_mlstm_state(batch: int, cfg, d_in: Optional[int] = None) -> Tuple:
+    """``d_in`` override: width of an HQP-compacted block (head width hd is
+    fixed under head pruning; the head count shrinks)."""
+    hd = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model) // cfg.n_heads
+    if d_in is None:
+        d_in = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
+    h = d_in // hd
     return (jnp.zeros((batch, h, hd, hd), jnp.float32),
             jnp.zeros((batch, h, hd), jnp.float32),
             jnp.zeros((batch, h), jnp.float32))

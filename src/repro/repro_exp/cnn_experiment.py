@@ -20,7 +20,7 @@ import dataclasses
 import functools
 import json
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +30,6 @@ from repro.configs import get_cnn_config
 from repro.core import calibration as calib
 from repro.core import pipeline as pipe
 from repro.core import pruning as pr
-from repro.core import quantization as q
 from repro.core import sensitivity as sens
 from repro.data.synthetic import SyntheticImages
 from repro.models import cnn
@@ -123,14 +122,6 @@ def calibrate_activations(cfg, variables, calib_data: SyntheticImages,
     return actq.finalize()
 
 
-def ptq(cfg, variables, calib_data, method="kl",
-        granularity="tensor") -> Tuple[dict, calib.ActQ]:
-    qv = {"params": q.fake_quant_tree(variables["params"], 8, granularity),
-          "stats": variables["stats"]}
-    actq = calibrate_activations(cfg, qv, calib_data, method)
-    return qv, actq
-
-
 # ------------------------------------------------------------------ latency
 def measured_latency_ms(cfg, variables, batch: int = 64, iters: int = 30,
                         image_size: int = 32) -> float:
@@ -216,9 +207,13 @@ def run_experiment(arch: str, delta_ax: float = 0.015, train_steps: int = 400,
 
     # ---------------- Q8-only (per-tensor PTQ, KL activations) ----------
     log(f"[repro:{arch}] Q8-only...")
-    qv, actq = ptq(cfg, variables, calib_data)
+    from repro.compress import compress
+    art_q8 = compress(variables, cfg,
+                      hqp=pipe.HQPConfig(track="fake"), log=log)
+    qv = art_q8.params
+    actq = calibrate_activations(cfg, qv, calib_data)
     acc_q8 = make_eval_fn(cfg, val_data, actq=actq)(qv)
-    add("Quantization Only (Q8)", acc_q8, base_bytes * 0.25 + 0,
+    add("Quantization Only (Q8)", acc_q8, art_q8.manifest.bytes_after,
         0.0, base_measured, modeled_latency_ms(cfg, variables, int8=True))
 
     # ---------------- P50-only (magnitude, no constraint) ---------------
@@ -238,15 +233,16 @@ def run_experiment(arch: str, delta_ax: float = 0.015, train_steps: int = 400,
     # ---------------- HQP (Algorithm 1 -> robust PTQ) -------------------
     log(f"[repro:{arch}] HQP conditional prune (Fisher S, Δ_ax={delta_ax})...")
     sq = fisher_for(cfg, variables, calib_data)
-    hqp_cfg = pipe.HQPConfig(delta_ax=delta_ax, step_frac=0.02, max_steps=60)
-    res = pipe.conditional_prune(variables, specs, sq, eval_fn, hqp_cfg,
-                                 a_baseline=a_base, log=log)
-    qv_hqp, actq_hqp = ptq(cfg, res.params_sparse, calib_data)
-    acc_hqp = make_eval_fn(cfg, val_data, actq=actq_hqp)(qv_hqp)
-    hqp_compact = res.params_compact
-    add("Proposed HQP", acc_hqp,
-        pr.param_bytes(hqp_compact["params"]) * 0.25,
-        res.theta, measured_latency_ms(cfg, hqp_compact),
+    hqp_cfg = pipe.HQPConfig(delta_ax=delta_ax, step_frac=0.02, max_steps=60,
+                             track="fake")
+    art = compress(variables, cfg, sq_grads=sq, eval_fn=eval_fn, hqp=hqp_cfg,
+                   specs=specs, a_baseline=a_base, log=log)
+    log(art.manifest.summary())
+    hqp_compact = art.params                 # compacted + fake-quantized
+    actq_hqp = calibrate_activations(cfg, hqp_compact, calib_data)
+    acc_hqp = make_eval_fn(cfg, val_data, actq=actq_hqp)(hqp_compact)
+    add("Proposed HQP", acc_hqp, art.manifest.bytes_after,
+        art.manifest.theta, measured_latency_ms(cfg, hqp_compact),
         modeled_latency_ms(cfg, hqp_compact, int8=True))
 
     table = {
@@ -258,8 +254,8 @@ def run_experiment(arch: str, delta_ax: float = 0.015, train_steps: int = 400,
             r.method: results[0].modeled_ms / r.modeled_ms for r in results},
         "speedups_measured": {
             r.method: results[0].measured_ms / r.measured_ms for r in results},
-        "hqp_sparsity_by_family": res.sparsity_by_family,
-        "hqp_history": [dataclasses.asdict(h) for h in res.history],
+        "hqp_sparsity_by_family": art.manifest.theta_by_family,
+        "hqp_history": art.manifest.history,
     }
     return table
 

@@ -145,6 +145,7 @@ class HloCost:
     def __init__(self, text: str):
         self.comps: Dict[str, Computation] = {}
         self.shape: Dict[str, str] = {}        # op name -> result type text
+        self.producer: Dict[str, "Op"] = {}    # op name -> defining op
         self.entry: Optional[str] = None
         self._parse(text)
         self._memo: Dict[str, CostResult] = {}
@@ -189,8 +190,10 @@ class HloCost:
                 digits = operand_text.strip()
                 if digits.isdigit():
                     cur.param_names[int(digits)] = name
-            cur.ops.append(Op(name, opcode, result_text,
-                              _OPERAND_RE.findall(operand_text), attrs))
+            op = Op(name, opcode, result_text,
+                    _OPERAND_RE.findall(operand_text), attrs)
+            cur.ops.append(op)
+            self.producer[name] = op
         if self.entry is None and self.comps:
             self.entry = list(self.comps)[-1]
 
@@ -291,10 +294,20 @@ class HloCost:
         return 2.0 * result_elems * contract
 
     def _is_int8_dot(self, op: Op) -> bool:
+        """An operand is int8 if it — or the value it was converted/laid out
+        from — is s8/u8/s4/u4 (CPU XLA upcasts int8 operands with an explicit
+        convert before the dot; TPU feeds the MXU int8 directly)."""
+        _PASS = ("convert", "bitcast", "copy", "reshape", "transpose")
         for o in op.operands:
-            dt, _ = _shape_elems_first(self.shape.get(o, ""))
-            if dt in ("s8", "u8", "s4", "u4"):
-                return True
+            name = o
+            for _ in range(6):
+                dt, _ = _shape_elems_first(self.shape.get(name, ""))
+                if dt in ("s8", "u8", "s4", "u4"):
+                    return True
+                p = self.producer.get(name)
+                if p is None or p.opcode not in _PASS or not p.operands:
+                    break
+                name = p.operands[0]
         return False
 
     @staticmethod

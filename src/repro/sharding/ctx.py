@@ -30,6 +30,12 @@ class RunContext:
     remat: bool = True
     pure_dp: bool = False                    # no-TP archs (xLSTM): batch takes
                                              # the model axis too, params FSDP
+    moe_no_drop: bool = True                 # inference: lossless MoE dispatch
+                                             # (capacity covers every routed
+                                             # pair, so batched prefill ==
+                                             # per-token decode); the training
+                                             # launcher turns this off and
+                                             # lets capacity_factor drop
 
     @property
     def all_axes(self) -> Tuple[str, ...]:

@@ -97,16 +97,24 @@ def _divisible(shape, spec, ctx) -> bool:
                for dim, ax in zip(shape, spec))
 
 
-def _path_str(path) -> str:
+def path_str(path) -> str:
+    """"/"-joined tree path — the canonical key string shared by the
+    sharding rules and checkpoint layouts (must stay identical: the regex
+    rules and the saved-array keys both address e.g. ``.../wq/w_q``)."""
     parts = []
     for p in path:
-        if hasattr(p, "key"):
+        if hasattr(p, "key"):        # DictKey
             parts.append(str(p.key))
-        elif hasattr(p, "idx"):
+        elif hasattr(p, "idx"):      # SequenceKey
             parts.append(str(p.idx))
+        elif hasattr(p, "name"):     # GetAttrKey (QuantizedLinear fields)
+            parts.append(str(p.name))
         else:
             parts.append(str(p))
     return "/".join(parts)
+
+
+_path_str = path_str
 
 
 def param_specs(params: Any, ctx: RunContext) -> Any:

@@ -4,3 +4,5 @@ import sys
 # Tests run on the single host CPU device (the dry-run, and only the dry-run,
 # forces 512 devices — see launch/dryrun.py).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# the tests dir itself, for the optional-dependency stubs (_hypothesis_stub)
+sys.path.insert(0, os.path.dirname(__file__))

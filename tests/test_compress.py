@@ -1,0 +1,226 @@
+"""Typed compression layer: QuantizedLinear dispatch, jitted (numpy-free)
+PTQ, the shared symmetric-quant helper, artifact save/load round-trips, and
+the execution-backend registry."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.compress import (QuantizedLinear, compress, fake_quant,
+                            quantize_linear, quantize_lm_params,
+                            quantized_fraction, symmetric_quantize)
+from repro.core.pipeline import HQPConfig
+from repro.kernels import backend as kb
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.launch import checkpoint as ckpt
+from repro.models import layers as L
+from repro.models import lm
+
+
+# ------------------------------------------------------------------ qtypes
+def test_quantize_linear_returns_typed_node():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 32), jnp.float32)
+    q = quantize_linear({"w": w})
+    assert isinstance(q, QuantizedLinear)
+    assert q.w_q.dtype == jnp.int8 and q.w_q.shape == (64, 32)
+    assert q.scale.shape == (32,) and q.bits == 8
+    deq = np.asarray(q.w_q, np.float32) * np.asarray(q.scale)[None, :]
+    np.testing.assert_allclose(deq, np.asarray(w), atol=float(q.scale.max()))
+
+
+def test_quantize_linear_stacked_and_expert_layouts():
+    """(L, in, out) and (L, E, in, out): per-out-channel scales per leading
+    index (the vmapped path)."""
+    for shape, sshape in [((3, 16, 8), (3, 8)), ((2, 4, 16, 8), (2, 4, 8))]:
+        w = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
+        q = quantize_linear({"w": w})
+        assert q.w_q.shape == shape and q.scale.shape == sshape
+        deq = np.asarray(q.w_q, np.float32) * np.asarray(q.scale)[..., None, :]
+        assert np.median(np.abs(deq - np.asarray(w))) < 0.02
+
+
+def test_dense_dispatches_on_type():
+    key = jax.random.PRNGKey(2)
+    w = jax.random.normal(key, (128, 64), jnp.float32) * 0.1
+    x = jax.random.normal(jax.random.fold_in(key, 1), (8, 128), jnp.bfloat16)
+    y_fp = L.dense(x, {"w": w})
+    y_q = L.dense(x, quantize_linear({"w": w}))
+    rel = (np.abs(np.asarray(y_q - y_fp, np.float32))
+           / (np.abs(np.asarray(y_fp, np.float32)) + 0.1))
+    assert np.median(rel) < 0.1
+    assert L.out_features(quantize_linear({"w": w})) == 64
+    assert L.dense_param_bytes(quantize_linear({"w": w})) == 128 * 64 + 64 * 4
+
+
+def test_quantized_linear_vmaps():
+    wq = QuantizedLinear(
+        w_q=jnp.ones((4, 16, 8), jnp.int8),
+        scale=jnp.full((4, 8), 0.5, jnp.float32), bits=8)
+    x = jnp.ones((4, 2, 16), jnp.bfloat16)
+    y = jax.vmap(lambda xe, pe: L.dense(xe, pe))(x, wq)
+    assert y.shape == (4, 2, 8)
+    np.testing.assert_allclose(np.asarray(y, np.float32), 8.0, rtol=1e-2)
+
+
+# ------------------------------------------------------------------ PTQ
+def test_ptq_is_numpy_free_on_lm_track():
+    """The LM quantize step must be fully traceable: any host transfer
+    (np.asarray on a tracer) raises under jit/eval_shape."""
+    cfg = configs.get_smoke_config("qwen3-0.6b")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    qp = jax.jit(quantize_lm_params)(params)        # would raise on transfer
+    assert quantized_fraction(qp) > 0.5
+    abstract = jax.eval_shape(quantize_lm_params, params)
+    flat = [l for l in jax.tree.leaves(abstract)
+            if getattr(l, "dtype", None) == jnp.int8]
+    assert flat, "eval_shape produced no int8 leaves"
+
+
+def test_shared_helper_single_epsilon():
+    """Both tracks share symmetric_quantize: an all-zero tensor quantizes to
+    all-zero q with the same finite scale on either path."""
+    z = jnp.zeros((8, 8), jnp.float32)
+    q, scale = symmetric_quantize(z, 8, axes=(0,))
+    assert float(jnp.max(jnp.abs(q))) == 0.0
+    assert np.all(np.isfinite(np.asarray(scale)))
+    ql = quantize_linear({"w": z})
+    np.testing.assert_allclose(np.asarray(ql.scale), np.asarray(scale[0]))
+    fq = fake_quant(z, 8, "channel")
+    assert float(jnp.max(jnp.abs(fq))) == 0.0
+
+
+# ------------------------------------------------------------------ compress()
+def _tiny_lm_artifact(arch="qwen3-0.6b", prune=False):
+    cfg = configs.get_smoke_config(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    kw = {}
+    if prune:
+        kw["sq_grads"] = jax.tree.map(
+            lambda t: jnp.abs(t.astype(jnp.float32)), params)
+        kw["eval_fn"] = lambda p: 1.0
+        kw["hqp"] = HQPConfig(weight_granularity="channel", step_frac=0.1,
+                              max_steps=2)
+    return cfg, params, compress(params, cfg, log=lambda s: None, **kw)
+
+
+def test_compress_ptq_only_manifest():
+    cfg, params, art = _tiny_lm_artifact()
+    m = art.manifest
+    assert m.bytes_after < m.bytes_before
+    assert 0.5 < m.quantized_fraction <= 1.0
+    assert m.theta == 0.0 and not m.pruned and m.track == "int8"
+    assert "MB" in m.summary()
+
+
+def test_compress_prune_then_quantize():
+    cfg, params, art = _tiny_lm_artifact(prune=True)
+    m = art.manifest
+    assert m.pruned and m.theta > 0.0 and m.n_drop > 0
+    assert any(v > 0 for v in m.theta_by_family.values())
+    assert m.history and m.history[0]["accepted"] in (True, False)
+    # the compacted+quantized artifact still runs a forward pass
+    tokens = jnp.zeros((1, 8), jnp.int32)
+    h, _ = lm.forward(art.params, cfg, {"tokens": tokens})
+    assert bool(jnp.all(jnp.isfinite(h.astype(jnp.float32))))
+
+
+def test_compressed_artifact_serves_decode():
+    """Pruned+quantized artifact drives prefill+decode with caches sized
+    from the compacted params."""
+    cfg, params, art = _tiny_lm_artifact(prune=True)
+    from repro.sharding.ctx import default_ctx
+    ctx = dataclasses.replace(default_ctx(), quantized_kv=True)
+    state = lm.init_decode_state(cfg, 2, 32, ctx, params=art.params)
+    prompts = jnp.zeros((2, 4), jnp.int32)
+    logits, state = lm.decode_step(art.params, cfg, state, prompts, ctx)
+    logits, state = lm.decode_step(art.params, cfg, state,
+                                   jnp.zeros((2, 1), jnp.int32), ctx)
+    assert logits.shape[0] == 2
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+# ------------------------------------------------------------------ artifact io
+def test_artifact_save_load_roundtrip(tmp_path):
+    cfg, params, art = _tiny_lm_artifact(prune=True)
+    d = str(tmp_path / "artifact")
+    ckpt.save_artifact(d, art)
+    loaded = ckpt.load_artifact(d)
+    assert loaded.manifest.asdict() == art.manifest.asdict()
+    la, lb = jax.tree.leaves(art.params), jax.tree.leaves(loaded.params)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # structure survives: same treedef, QuantizedLinear nodes intact
+    assert (jax.tree.structure(art.params)
+            == jax.tree.structure(loaded.params))
+
+
+def test_artifact_load_rejects_torn_write(tmp_path):
+    cfg, params, art = _tiny_lm_artifact()
+    d = str(tmp_path / "artifact")
+    ckpt.save_artifact(d, art)
+    (tmp_path / "artifact" / ckpt.COMMIT_MARKER).unlink()
+    with pytest.raises(FileNotFoundError):
+        ckpt.load_artifact(d)
+
+
+def test_checkpoint_flatten_handles_typed_nodes(tmp_path):
+    """The step-checkpoint path also round-trips QuantizedLinear leaves
+    (GetAttrKey path entries)."""
+    tree = {"lin": quantize_linear(
+        {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 8))})}
+    ckpt.save(str(tmp_path), 1, tree)
+    restored, _ = ckpt.restore(str(tmp_path), tree)
+    np.testing.assert_array_equal(np.asarray(tree["lin"].w_q),
+                                  np.asarray(restored["lin"].w_q))
+
+
+# ------------------------------------------------------------------ backends
+def test_backend_registry_selection():
+    assert set(kb.available()) >= {"pallas", "xla", "ref"}
+    assert kb.get_backend().name in kb.available()
+    with pytest.raises(KeyError):
+        kb.get_backend("cuda")
+    prev = kb.set_backend("xla")
+    try:
+        assert kb.get_backend().name == "xla"
+    finally:
+        kb.set_backend(prev)
+
+
+def test_ref_backend_matches_xla_through_model_dense():
+    """interpret-mode Pallas through the real dense() path == jnp oracle."""
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (64, 32), jnp.float32) * 0.1
+    x = jax.random.normal(jax.random.fold_in(key, 1), (8, 64), jnp.bfloat16)
+    ql = quantize_linear({"w": w})
+    prev = kb.set_backend("xla")
+    try:
+        y_xla = L.dense(x, ql)
+        kb.set_backend("ref")
+        y_ref = L.dense(x, ql)
+    finally:
+        kb.set_backend(prev)
+    np.testing.assert_allclose(np.asarray(y_ref, np.float32),
+                               np.asarray(y_xla, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_ops_int8_matmul_precomputed_scales():
+    """Static (calibrated) activation scales pass straight through ops."""
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (2, 8, 64), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 16), jnp.float32)
+    w_q, w_s = ref.quantize_ref(w, axis=0)
+    x_q, x_s = ref.quantize_ref(x, axis=-1)
+    out = kops.int8_matmul(x_q, w_q, w_s, x_scale=x_s)
+    expected = kops.int8_matmul(x, w_q, w_s)
+    assert out.shape == (2, 8, 16)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32),
+                               rtol=5e-2, atol=5e-2)

@@ -11,11 +11,22 @@ runs so this module is always executable on a bare CPU container.
   SV-C      (layer-wise non-uniform theta)  -> bench_layerwise_sparsity
   SV-E      (energy ratio == speedup)       -> bench_energy
   Fig. 2/3 analogue (LM fleet)              -> bench_lm_hqp_serving
+  continuous-batching engine                -> bench_serving
   kernels                                   -> bench_kernels
   SRoofline                                 -> bench_roofline_table
+
+CLI:
+  python benchmarks/run.py                          # everything, CSV rows
+  python benchmarks/run.py --only serving,kernels \
+      --json BENCH_pr.json                          # CI perf-trajectory mode
+
+``bench_serving`` additionally writes BENCH_serving.json (tokens/s + latency
+percentiles per variant); ``--json`` wraps all emitted rows plus the serving
+payload into one schema-tagged file CI validates and uploads.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 import time
@@ -27,7 +38,14 @@ ROOT = pathlib.Path(__file__).resolve().parents[1]
 REPRO_DIR = ROOT / "experiments" / "repro"
 DRYRUN_DIR = ROOT / "experiments" / "dryrun"
 
+BENCH_SCHEMA = "repro-bench/v1"
+SERVING_SCHEMA = "repro-bench-serving/v1"
+
 Row = Tuple[str, float, str]
+
+# last bench_serving payload, picked up by --json (benches keep the uniform
+# "returns rows" signature)
+_LAST_SERVING: dict = {}
 
 
 def _load_or_run_cnn(arch: str) -> dict:
@@ -170,6 +188,71 @@ def bench_lm_hqp_serving() -> List[Row]:
     return rows
 
 
+def bench_serving(out_path: str = "BENCH_serving.json") -> List[Row]:
+    """Continuous-batching engine throughput + latency percentiles, bf16 vs
+    the INT8 HQP artifact — the serving-regime numbers CI tracks per PR."""
+    import dataclasses as dc
+    import jax
+    from repro import configs
+    from repro.compress import compress
+    from repro.core.pruning import param_bytes
+    from repro.models import lm
+    from repro.serving import (Engine, Request, SchedulerConfig,
+                               summarize_results)
+    from repro.sharding.ctx import default_ctx
+
+    cfg = configs.get_smoke_config("qwen3-0.6b")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    art = compress(params, cfg, log=lambda s: None)
+    rng = np.random.RandomState(0)
+    n_req, new_tok, n_slots, chunk = 8, 16, 4, 8
+    prompts = [rng.randint(0, cfg.vocab_size, 8 + (5 * i) % 13).tolist()
+               for i in range(n_req)]
+
+    payload = {"schema": SERVING_SCHEMA, "arch": cfg.name,
+               "n_requests": n_req, "n_slots": n_slots,
+               "prefill_chunk": chunk, "max_new_tokens": new_tok,
+               "variants": {}}
+    rows: List[Row] = []
+    for name, p, qkv in [("bf16", params, False),
+                         ("hqp_int8", art.params, True)]:
+        ctx = dc.replace(default_ctx(), quantized_kv=qkv)
+        eng = Engine(p, cfg, ctx=ctx, n_slots=n_slots, max_seq=64,
+                     sched=SchedulerConfig(prefill_chunk=chunk))
+        reqs = [Request(prompt=pr, max_new_tokens=new_tok) for pr in prompts]
+        arrivals = [2 * i for i in range(n_req)]
+        # warmup with the FULL request set: every prefill tail-chunk shape
+        # compiles here, so the timed pass below measures steady-state
+        # serving, not XLA compilation
+        eng.run(reqs, arrival_ticks=arrivals)
+        for k in eng.stats:
+            eng.stats[k] = 0
+        t0 = time.perf_counter()
+        results = eng.run(reqs, arrival_ticks=arrivals)
+        wall = time.perf_counter() - t0
+        v = {
+            **summarize_results(results, wall),
+            "param_bytes": int(param_bytes(p)),
+            "decode_ticks": eng.stats["decode_ticks"],
+            "prefill_ticks": eng.stats["prefill_ticks"],
+        }
+        if name == "hqp_int8":
+            v["artifact_bytes"] = art.manifest.bytes_after
+            v["bytes_before"] = art.manifest.bytes_before
+        payload["variants"][name] = v
+        rows.append((f"serving/{name}", wall / max(v["out_tokens"], 1) * 1e6,
+                     f"tok_s={v['tokens_per_s']:.1f} "
+                     f"p50={v['latency_p50_ms']:.0f}ms "
+                     f"p95={v['latency_p95_ms']:.0f}ms "
+                     f"bytes={v['param_bytes']}"))
+
+    global _LAST_SERVING
+    _LAST_SERVING = payload
+    if out_path:
+        pathlib.Path(out_path).write_text(json.dumps(payload, indent=1))
+    return rows
+
+
 def bench_kernels() -> List[Row]:
     """Kernel micro-bench: bf16 vs W8A8 matmul on the XLA path."""
     import jax
@@ -220,20 +303,62 @@ BENCHES = [
     bench_layerwise_sparsity,
     bench_energy,
     bench_lm_hqp_serving,
+    bench_serving,
     bench_kernels,
     bench_roofline_table,
 ]
 
 
-def main() -> None:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench name suffixes, e.g. "
+                         "'serving,kernels'")
+    ap.add_argument("--json", default=None,
+                    help="write all rows (+ the serving payload) to this "
+                         "schema-tagged JSON file (CI perf trajectory)")
+    args = ap.parse_args(argv)
+
+    selected = BENCHES
+    if args.only:
+        want = [w.strip() for w in args.only.split(",") if w.strip()]
+        selected = [b for b in BENCHES
+                    if any(b.__name__ == f"bench_{w}" or b.__name__ == w
+                           for w in want)]
+        missing = [w for w in want
+                   if not any(b.__name__ in (f"bench_{w}", w)
+                              for b in BENCHES)]
+        if missing:
+            raise SystemExit(f"unknown benches: {missing}; known: "
+                             f"{[b.__name__ for b in BENCHES]}")
+
+    all_rows: List[Row] = []
+    errors: List[str] = []
     print("name,us_per_call,derived")
-    for bench in BENCHES:
+    for bench in selected:
         try:
             for name, us, derived in bench():
+                all_rows.append((name, us, derived))
                 print(f"{name},{us:.2f},{derived}")
         except Exception as e:  # keep the harness running
+            errors.append(f"{bench.__name__}:{type(e).__name__}:{e}")
             print(f"{bench.__name__},nan,ERROR:{type(e).__name__}:{e}")
+
+    if args.json:
+        payload = {
+            "schema": BENCH_SCHEMA,
+            "benches": [b.__name__ for b in selected],
+            "rows": [{"name": n, "us_per_call": u, "derived": d}
+                     for n, u, d in all_rows],
+            "errors": errors,
+        }
+        if _LAST_SERVING:
+            payload["serving"] = _LAST_SERVING
+        pathlib.Path(args.json).write_text(json.dumps(payload, indent=1))
+        print(f"# wrote {args.json} ({len(all_rows)} rows)")
+    # CI contract: selected benches must produce rows and no errors
+    return 1 if (errors and args.json) else 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -3,7 +3,6 @@ MobileNetV3-Small (Table I analogue), ~3-5 minutes on CPU.
 
   PYTHONPATH=src python examples/hqp_cnn.py [resnet18|mobilenetv3s]
 """
-import json
 import sys
 
 sys.path.insert(0, "src")

@@ -1,0 +1,78 @@
+"""Validate a BENCH_pr.json perf-trajectory file (CI gate).
+
+  python scripts/check_bench.py BENCH_pr.json
+
+Fails (exit 1) on: missing/unparseable file, wrong schema tag, zero rows,
+bench errors recorded, or a serving payload with non-positive throughput /
+inverted percentiles / missing artifact bytes. CI uploads the file only
+after this gate passes, so the uploaded trajectory is never silently empty.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+BENCH_SCHEMA = "repro-bench/v1"
+SERVING_SCHEMA = "repro-bench-serving/v1"
+SERVING_REQUIRED = ("tokens_per_s", "latency_p50_ms", "latency_p95_ms",
+                    "ttft_p50_ms", "ttft_p95_ms", "param_bytes")
+
+
+def fail(msg: str) -> None:
+    print(f"check_bench: FAIL: {msg}")
+    raise SystemExit(1)
+
+
+def check_serving(s: dict) -> None:
+    if s.get("schema") != SERVING_SCHEMA:
+        fail(f"serving schema {s.get('schema')!r} != {SERVING_SCHEMA!r}")
+    variants = s.get("variants") or {}
+    if not variants:
+        fail("serving payload has no variants")
+    for name, v in variants.items():
+        for key in SERVING_REQUIRED:
+            if not isinstance(v.get(key), (int, float)):
+                fail(f"serving variant {name!r} missing numeric {key!r}")
+        if v["tokens_per_s"] <= 0:
+            fail(f"serving variant {name!r}: tokens_per_s <= 0")
+        if v["latency_p95_ms"] < v["latency_p50_ms"]:
+            fail(f"serving variant {name!r}: p95 < p50")
+    if "hqp_int8" in variants:
+        ab = variants["hqp_int8"].get("artifact_bytes")
+        if not isinstance(ab, int) or ab <= 0:
+            fail("hqp_int8 variant missing positive artifact_bytes")
+
+
+def main(argv) -> int:
+    if len(argv) != 1:
+        fail("usage: check_bench.py BENCH_pr.json")
+    path = pathlib.Path(argv[0])
+    if not path.exists():
+        fail(f"{path} does not exist")
+    try:
+        doc = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+    if doc.get("schema") != BENCH_SCHEMA:
+        fail(f"schema {doc.get('schema')!r} != {BENCH_SCHEMA!r}")
+    rows = doc.get("rows") or []
+    if not rows:
+        fail("no benchmark rows")
+    for r in rows:
+        if not isinstance(r.get("name"), str) or "us_per_call" not in r:
+            fail(f"malformed row: {r!r}")
+        if str(r.get("derived", "")).startswith("ERROR:"):
+            fail(f"row recorded an error: {r['name']}")
+    if doc.get("errors"):
+        fail(f"bench errors: {doc['errors']}")
+    if "serving" in doc:
+        check_serving(doc["serving"])
+    n_serving = sum(r["name"].startswith("serving/") for r in rows)
+    print(f"check_bench: OK ({len(rows)} rows, {n_serving} serving, "
+          f"benches={doc.get('benches')})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

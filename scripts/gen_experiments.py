@@ -1,7 +1,6 @@
 """Regenerate EXPERIMENTS.md tables from experiments/ artifacts."""
 import json
 import pathlib
-import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 DRY = ROOT / "experiments" / "dryrun"

@@ -15,3 +15,11 @@ from repro.compress.quantize import (EPS, QUANT_LINEAR_KEYS,  # noqa: F401
                                      quant_error, quantize_linear,
                                      quantize_lm_params, quantized_fraction,
                                      symmetric_quantize)
+
+__all__ = [
+    "HQPArtifact", "HQPManifest", "compress", "spec_to_tree",
+    "tree_to_spec", "QuantizedLinear", "is_quantized", "linear_bytes",
+    "linear_kernel", "out_features", "EPS", "QUANT_LINEAR_KEYS",
+    "fake_quant", "fake_quant_tree", "model_bytes", "quant_error",
+    "quantize_linear", "quantize_lm_params", "quantized_fraction",
+    "symmetric_quantize"]

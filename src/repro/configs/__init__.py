@@ -58,3 +58,9 @@ def get_smoke_config(arch: str) -> ModelConfig:
 def get_cnn_config(arch: str) -> CNNConfig:
     from repro.configs import cnn as _cnn
     return _cnn.config(arch)
+
+__all__ = [
+    "CNNConfig", "FrontendConfig", "LM_SHAPES", "ModelConfig",
+    "MoEConfig", "ShapeConfig", "SSMConfig", "XLSTMConfig",
+    "get_shape", "shape_applicable", "list_archs", "get_config",
+    "get_smoke_config", "get_cnn_config"]

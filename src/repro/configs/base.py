@@ -8,7 +8,7 @@ same-family config for CPU smoke tests). The registry in ``__init__`` maps
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -14,3 +14,8 @@ from repro.core import (calibration, mixed_precision, pipeline, pruning,  # noqa
                         quantization, sensitivity)
 from repro.core.pipeline import (HQPConfig, HQPResult, conditional_prune,  # noqa: F401
                                  hqp_compress_lm)
+
+__all__ = [
+    "calibration", "mixed_precision", "pipeline", "pruning",
+    "quantization", "sensitivity", "HQPConfig", "HQPResult",
+    "conditional_prune", "hqp_compress_lm"]

@@ -10,7 +10,7 @@ minimizing KL(P||Q).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,9 +9,8 @@ nibbles per byte — noted in DESIGN.md).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Tuple
+from typing import Any, List
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

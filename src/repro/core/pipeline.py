@@ -11,10 +11,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, List, Optional
 
-import jax
-import numpy as np
 
 from repro.core import pruning as pr
 from repro.core import sensitivity as sens

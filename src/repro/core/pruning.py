@@ -8,7 +8,7 @@ parameter transforms; the model code never changes).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Any, List, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -17,8 +17,12 @@ Two consumers:
 """
 from __future__ import annotations
 
-from repro.compress.quantize import (EPS, QUANT_LINEAR_KEYS,  # noqa: F401
+from repro.compress.quantize import (EPS, QUANT_LINEAR_KEYS,
                                      fake_quant, fake_quant_tree, model_bytes,
                                      quant_error, quantize_linear,
                                      quantize_lm_params, quantized_fraction,
                                      symmetric_quantize)
+
+__all__ = ["EPS", "QUANT_LINEAR_KEYS", "fake_quant", "fake_quant_tree",
+           "model_bytes", "quant_error", "quantize_linear",
+           "quantize_lm_params", "quantized_fraction", "symmetric_quantize"]

@@ -1,1 +1,3 @@
 from repro.data.synthetic import SyntheticImages, SyntheticTokens  # noqa: F401
+
+__all__ = ["SyntheticImages", "SyntheticTokens"]

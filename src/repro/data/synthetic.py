@@ -11,7 +11,6 @@ validation metric the Δ_ax constraint is enforced against.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Iterator, Optional
 
 import numpy as np

@@ -14,7 +14,6 @@ preemption story (launch/elastic.py) relies on this.
 """
 from __future__ import annotations
 
-import hashlib
 import json
 import os
 import pathlib

@@ -33,7 +33,7 @@ from repro.roofline.hardware import TPU_V5E
 from repro.sharding import rules
 from repro.sharding.ctx import make_ctx
 from repro.train.optimizer import AdamWConfig, adamw_init
-from repro.train.train_step import make_serve_step, make_train_step
+from repro.train.train_step import make_train_step
 
 OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 

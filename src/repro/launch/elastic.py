@@ -15,16 +15,14 @@ container and documented in DESIGN.md.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
-import jax
 import numpy as np
 from jax.sharding import Mesh
 
 from repro.launch import checkpoint as ckpt
 from repro.sharding import rules
-from repro.sharding.ctx import RunContext, make_ctx
+from repro.sharding.ctx import make_ctx
 
 
 @dataclasses.dataclass

@@ -1,19 +1,26 @@
-"""Serving launcher: batched prefill + decode with the HQP-compressed model.
+"""Serving launcher: HQP artifacts through the batched or continuous-batching path.
 
-Deliverable (b) inference driver: loads (or initializes) a model, optionally
-runs the full HQP pipeline through the typed artifact entrypoint
-(``repro.compress.compress``: Fisher sensitivity -> conditional prune ->
-compaction -> on-device INT8 PTQ -> INT8 KV cache), prints the artifact
-manifest (bytes, quantized fraction, per-family θ), then serves a batch of
-synthetic requests through cache-filling prefill and token-by-token decode,
-reporting tokens/s next to the compression metrics — the LM analogue of the
-paper's Tables I/II.
+Deliverable (b) inference driver: acquires a model (fresh init, full HQP
+pipeline, or a saved artifact — loading NEVER re-runs sensitivity /
+calibration), prints the artifact manifest, then serves synthetic requests.
+
+Two serving paths:
+
+  default      one batch, lockstep prefill + decode (the PR-1 smoke loop)
+  --engine     continuous batching (``repro.serving.Engine``): slot-based
+               admission/eviction, chunked prefill interleaved with batched
+               decode, per-request latency stats; replays a request trace
+               (``--trace``, JSONL) or a synthetic staggered-arrival load.
+               With ``--verify`` (default under ``--smoke``) every engine
+               output is checked token-identical against serial decode.
 
   python -m repro.launch.serve --arch qwen3-0.6b --smoke --hqp --tokens 32
+  python -m repro.launch.serve --arch qwen3-0.6b --smoke --engine
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -56,6 +63,135 @@ def build_artifact(params, cfg, ctx, prune_steps: int, log=print):
                     log=log)
 
 
+def acquire_params(args, cfg, ctx, log=print):
+    """Resolve the model to serve. Exactly one of three paths runs:
+
+    load-artifact  deserialize; NO gradients, NO Fisher pass, NO eval — a
+                   saved artifact already paid for its calibration
+    --hqp          init + full pipeline (optionally --save-artifact)
+    plain          fresh bf16 init
+    """
+    if args.load_artifact:
+        from repro.launch.checkpoint import load_artifact
+        art = load_artifact(args.load_artifact)
+        if art.manifest.arch != cfg.name:
+            raise SystemExit(
+                f"artifact was built for {art.manifest.arch!r}, requested "
+                f"config is {cfg.name!r} — pass the matching --arch/--smoke")
+        log(art.manifest.summary())
+        return art.params
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    if args.hqp:
+        art = build_artifact(params, cfg, ctx, args.prune_steps, log=log)
+        log(art.manifest.summary())
+        params = art.params
+        if args.save_artifact:
+            from repro.launch.checkpoint import save_artifact
+            log(f"[serve] artifact saved to "
+                f"{save_artifact(args.save_artifact, art)}")
+    return params
+
+
+# ------------------------------------------------------------------ engine
+def load_trace(path: str, cfg, seed: int = 0):
+    """JSONL request trace: one object per line with ``arrival_s`` (float,
+    offset from replay start) and either ``prompt`` (token ids) or
+    ``prompt_len`` (synthesized from ``seed``); optional ``max_new_tokens``
+    (default 16) and ``eos_id``."""
+    from repro.serving import Request
+    rng = np.random.RandomState(seed)
+    reqs, arrivals = [], []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            d = json.loads(line)
+            if "prompt" in d:
+                prompt = d["prompt"]
+                if not prompt:
+                    raise ValueError(f"trace line has an empty prompt: {d}")
+            elif "prompt_len" in d:
+                prompt = rng.randint(
+                    0, cfg.vocab_size, int(d["prompt_len"])).tolist()
+            else:
+                raise ValueError(
+                    f"trace line needs 'prompt' or 'prompt_len': {d}")
+            reqs.append(Request(prompt=prompt,
+                                max_new_tokens=int(d.get("max_new_tokens", 16)),
+                                eos_id=d.get("eos_id")))
+            arrivals.append(float(d.get("arrival_s", 0.0)))
+    return reqs, arrivals
+
+
+def synth_requests(cfg, n: int, prompt_len: int, max_new_tokens: int,
+                   gap_s: float = 0.02, seed: int = 0):
+    """Staggered synthetic load: varying prompt lengths so chunked prefill
+    genuinely interleaves with decode of earlier requests."""
+    from repro.serving import Request
+    rng = np.random.RandomState(seed)
+    lens = [max(4, prompt_len + (i * 7) % 11 - 5) for i in range(n)]
+    reqs = [Request(prompt=rng.randint(0, cfg.vocab_size, L).tolist(),
+                    max_new_tokens=max_new_tokens) for L in lens]
+    return reqs, [i * gap_s for i in range(n)]
+
+
+def run_engine(params, cfg, ctx, args, log=print):
+    from repro.serving import (Engine, SchedulerConfig, serial_decode,
+                               summarize_results)
+    if args.trace:
+        reqs, arrivals = load_trace(args.trace, cfg)
+        log(f"[engine] replaying trace {args.trace}: {len(reqs)} requests")
+    else:
+        n = max(3, args.batch)
+        reqs, arrivals = synth_requests(cfg, n, args.prompt_len, args.tokens)
+        log(f"[engine] synthetic load: {n} staggered requests")
+    if not reqs:
+        raise SystemExit("[engine] trace contains no requests")
+    need = max(len(r.prompt) + r.max_new_tokens for r in reqs)
+    if need > args.max_seq:
+        raise SystemExit(f"trace needs max-seq >= {need}, got {args.max_seq}")
+
+    eng = Engine(params, cfg, ctx=ctx, n_slots=args.engine_slots,
+                 max_seq=args.max_seq,
+                 sched=SchedulerConfig(prefill_chunk=args.prefill_chunk))
+    t0 = time.monotonic()
+    results = eng.run(reqs, arrivals_s=arrivals)
+    wall = time.monotonic() - t0
+
+    stats = {
+        **summarize_results(results, wall),
+        "n_slots": args.engine_slots,
+        "prefill_chunk": args.prefill_chunk,
+        **eng.stats,
+    }
+    log(f"[engine] {stats['n_requests']} requests in {wall*1000:.0f}ms: "
+        f"{stats['tokens_per_s']:.1f} tok/s, "
+        f"latency p50/p95 {stats['latency_p50_ms']:.0f}/"
+        f"{stats['latency_p95_ms']:.0f}ms, "
+        f"ttft p50/p95 {stats['ttft_p50_ms']:.0f}/"
+        f"{stats['ttft_p95_ms']:.0f}ms "
+        f"(ticks: {eng.stats['prefill_ticks']}p/{eng.stats['decode_ticks']}d)")
+
+    verify = args.verify if args.verify is not None else args.smoke
+    if verify:
+        bad = []
+        for i, res in sorted(results.items()):
+            req = reqs[i]
+            ref = serial_decode(params, cfg, req.prompt, req.max_new_tokens,
+                                ctx=ctx, max_seq=args.max_seq,
+                                eos_id=req.eos_id)
+            if res.tokens != ref:
+                bad.append(i)
+        if bad:
+            raise SystemExit(f"[engine] VERIFY FAILED: requests {bad} differ "
+                             f"from serial single-request decode")
+        log(f"[engine] verify: all {len(results)} outputs token-identical "
+            f"to serial decode")
+    return results, stats
+
+
+# -------------------------------------------------------------------- main
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -70,12 +206,26 @@ def main(argv=None):
     ap.add_argument("--save-artifact", default=None,
                     help="directory to persist the HQP artifact (atomic)")
     ap.add_argument("--load-artifact", default=None,
-                    help="serve a previously saved HQP artifact")
+                    help="serve a previously saved HQP artifact (skips all "
+                         "sensitivity/calibration work)")
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching engine instead of the "
+                         "single-batch lockstep loop")
+    ap.add_argument("--engine-slots", type=int, default=4)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--trace", default=None,
+                    help="JSONL request trace to replay (engine mode)")
+    ap.add_argument("--verify", action="store_true", default=None,
+                    help="check engine outputs == serial decode "
+                         "(default: on under --smoke)")
     args = ap.parse_args(argv)
 
     if args.save_artifact and not args.hqp:
         ap.error("--save-artifact requires --hqp (nothing to save otherwise)")
+    if args.save_artifact and args.load_artifact:
+        ap.error("--save-artifact with --load-artifact would just copy the "
+                 "artifact; use the filesystem for that")
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
@@ -83,25 +233,12 @@ def main(argv=None):
     use_hqp = args.hqp or args.load_artifact is not None
     ctx = make_ctx(mesh, batch_sharded=False, quantized_kv=use_hqp)
 
-    if args.load_artifact:
-        from repro.launch.checkpoint import load_artifact
-        art = load_artifact(args.load_artifact)
-        if art.manifest.arch != cfg.name:
-            raise SystemExit(
-                f"artifact was built for {art.manifest.arch!r}, requested "
-                f"config is {cfg.name!r} — pass the matching --arch/--smoke")
-        print(art.manifest.summary())
-        params = art.params
-    else:
-        params = lm.init_params(jax.random.PRNGKey(0), cfg)
-        if args.hqp:
-            art = build_artifact(params, cfg, ctx, args.prune_steps)
-            print(art.manifest.summary())
-            params = art.params
-            if args.save_artifact:
-                from repro.launch.checkpoint import save_artifact
-                print(f"[serve] artifact saved to "
-                      f"{save_artifact(args.save_artifact, art)}")
+    params = acquire_params(args, cfg, ctx)
+
+    if args.engine:
+        with mesh:
+            _, stats = run_engine(params, cfg, ctx, args)
+        return stats
 
     serve_step = jax.jit(make_serve_step(cfg, ctx), donate_argnums=(1,))
 

@@ -18,12 +18,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.data.synthetic import SyntheticTokens
 from repro.launch import checkpoint as ckpt
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.sharding import rules
 from repro.sharding.ctx import make_ctx

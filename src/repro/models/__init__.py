@@ -1,1 +1,3 @@
 from repro.models import lm  # noqa: F401
+
+__all__ = ["lm"]

@@ -126,33 +126,47 @@ def _quant_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 def update_kv_cache(cache: dict, k_new: jax.Array, v_new: jax.Array,
                     pos: jax.Array) -> dict:
-    """Insert (B, Sn, Hkv, hd) at position ``pos`` (scalar int32)."""
-    idx = (0, pos, 0, 0)
+    """Insert (B, Sn, Hkv, hd) at position ``pos``.
+
+    ``pos`` is a scalar (all rows write at the same offset — the single-batch
+    serve path) or a (B,) vector of per-slot offsets (the continuous-batching
+    engine, where every slot sits at its own sequence position). The vector
+    path is a per-row scatter (vmapped dynamic_update_slice)."""
     if "k_q" in cache:
         kq, ks = _quant_kv(k_new)
         vq, vs = _quant_kv(v_new)
-        return {
-            "k_q": jax.lax.dynamic_update_slice(cache["k_q"], kq, idx),
-            "v_q": jax.lax.dynamic_update_slice(cache["v_q"], vq, idx),
-            "k_s": jax.lax.dynamic_update_slice(cache["k_s"], ks, idx[:3]),
-            "v_s": jax.lax.dynamic_update_slice(cache["v_s"], vs, idx[:3]),
-        }
-    return {
-        "k": jax.lax.dynamic_update_slice(
-            cache["k"], k_new.astype(cache["k"].dtype), idx),
-        "v": jax.lax.dynamic_update_slice(
-            cache["v"], v_new.astype(cache["v"].dtype), idx),
-    }
+        new = {"k_q": kq, "v_q": vq, "k_s": ks, "v_s": vs}
+    else:
+        new = {"k": k_new.astype(cache["k"].dtype),
+               "v": v_new.astype(cache["v"].dtype)}
+    if jnp.ndim(pos) == 0:
+        def scatter(buf, upd):
+            idx = (0, pos) + (0,) * (buf.ndim - 2)
+            return jax.lax.dynamic_update_slice(buf, upd, idx)
+    else:
+        def scatter(buf, upd):
+            def row(b_row, u_row, p):
+                idx = (p,) + (0,) * (b_row.ndim - 1)
+                return jax.lax.dynamic_update_slice(b_row, u_row, idx)
+            return jax.vmap(row)(buf, upd, pos)
+    return {key: scatter(cache[key], new[key]) for key in cache}
 
 
-def decode_attention(q: jax.Array, cache: dict, cur_len: jax.Array) -> jax.Array:
-    """q: (B, 1, Hq, hd) new-token queries; attends cache[:cur_len].
+def cached_attention(q: jax.Array, cache: dict, start: jax.Array) -> jax.Array:
+    """q: (B, Sq, Hq, hd) queries at absolute positions start..start+Sq-1,
+    attending a cache that already holds positions [0, start+Sq).
+
+    ``start`` is scalar or (B,) (per-slot positions under continuous
+    batching). Query i attends cache positions <= start+i: exactly the decode
+    semantics for Sq=1 and cache-continuation prefill for Sq>1 — a chunked
+    prefill therefore produces bit-identical logits to a whole-prompt prefill,
+    which is what makes engine output token-identical to the serial path.
 
     Masked full-cache einsum: O(S) memory traffic (the decode bottleneck the
     INT8 cache halves). Softmax reductions over the (possibly model-sharded)
     S axis lower to small cross-shard all-reduces.
     """
-    b, _, hq, hd = q.shape
+    b, sq, hq, hd = q.shape
     quantized = "k_q" in cache
     if quantized:
         kf, vf = cache["k_q"], cache["v_q"]              # int8, dequant via scores
@@ -160,24 +174,26 @@ def decode_attention(q: jax.Array, cache: dict, cur_len: jax.Array) -> jax.Array
         kf, vf = cache["k"], cache["v"]
     skv, hkv = kf.shape[1], kf.shape[2]
     g = hq // hkv
-    qg = (q.reshape(b, hkv, g, hd).astype(jnp.float32) * hd ** -0.5
+    qg = (q.reshape(b, sq, hkv, g, hd).astype(jnp.float32) * hd ** -0.5
           ).astype(L.COMPUTE_DTYPE)
-    # scores: (B, Hkv, G, S). For the int8 cache the per-(pos,head) scale is
-    # applied to the score/probability matrices (size B·H·S) instead of the
-    # cache (size B·H·S·hd): the cache itself is only ever read as int8.
-    s = jnp.einsum("bhgd,bchd->bhgc", qg, kf.astype(L.COMPUTE_DTYPE),
+    # scores: (B, Sq, Hkv, G, S). For the int8 cache the per-(pos,head) scale
+    # is applied to the score/probability matrices (size B·H·Sq·S) instead of
+    # the cache (size B·H·S·hd): the cache itself is only ever read as int8.
+    s = jnp.einsum("bqhgd,bchd->bqhgc", qg, kf.astype(L.COMPUTE_DTYPE),
                    preferred_element_type=jnp.float32)
     if quantized:
-        s = s * jnp.transpose(cache["k_s"], (0, 2, 1))[:, :, None, :]
-    mask = jnp.arange(skv)[None, None, None, :] < cur_len
-    s = jnp.where(mask, s, NEG_INF)
+        s = s * jnp.transpose(cache["k_s"], (0, 2, 1))[:, None, :, None, :]
+    limit = (jnp.broadcast_to(jnp.asarray(start), (b,))[:, None]
+             + jnp.arange(sq)[None, :])                  # (B, Sq) last visible
+    mask = jnp.arange(skv)[None, None, :] <= limit[..., None]   # (B, Sq, S)
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     if quantized:
-        p = p * jnp.transpose(cache["v_s"], (0, 2, 1))[:, :, None, :]
-    out = jnp.einsum("bhgc,bchd->bhgd", p.astype(L.COMPUTE_DTYPE),
+        p = p * jnp.transpose(cache["v_s"], (0, 2, 1))[:, None, :, None, :]
+    out = jnp.einsum("bqhgc,bchd->bqhgd", p.astype(L.COMPUTE_DTYPE),
                      vf.astype(L.COMPUTE_DTYPE),
                      preferred_element_type=jnp.float32)
-    return out.reshape(b, 1, hq, hd).astype(L.COMPUTE_DTYPE)
+    return out.reshape(b, sq, hq, hd).astype(L.COMPUTE_DTYPE)
 
 
 # ------------------------------------------------------------------ block fwd
@@ -232,12 +248,12 @@ def attention_forward(p: dict, cfg, x: jax.Array, positions: jax.Array,
     if cache is None:
         o = flash_attention(q, k, v, causal=True, chunk_kv=cfg.attn_chunk_kv)
         new_cache = None
-    elif s > 1:
-        # cache-filling prefill: write K/V, attend locally (starts at pos 0)
-        new_cache = update_kv_cache(cache, k, v, cur_len)
-        o = flash_attention(q, k, v, causal=True, chunk_kv=cfg.attn_chunk_kv)
     else:
+        # cache-filling prefill (s > 1) and decode (s == 1) share one path:
+        # write K/V, then attend the cache with per-query causal limits.
+        # Chunked prefill continuation (cur_len > 0) needs the cache read —
+        # a local flash attend would miss the earlier chunks.
         new_cache = update_kv_cache(cache, k, v, cur_len)
-        o = decode_attention(q, new_cache, cur_len + s)
+        o = cached_attention(q, new_cache, cur_len)
     out = L.dense(o.reshape(b, s, n_heads * hd), p["wo"])
     return out, new_cache

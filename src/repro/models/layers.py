@@ -17,9 +17,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.compress.qtypes import (QuantizedLinear, linear_bytes,  # noqa: F401
+from repro.compress.qtypes import (QuantizedLinear, linear_bytes,
                                    linear_kernel, out_features)
 from repro.kernels import ops as kops
+
+# re-exported for model code that types against the layers namespace
+__all__ = ["QuantizedLinear", "linear_bytes", "linear_kernel",
+           "out_features"]
 
 COMPUTE_DTYPE = jnp.bfloat16
 

@@ -12,7 +12,6 @@ jointly with the params.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -255,8 +254,13 @@ def loss_fn(params: dict, cfg, batch: dict,
 # ------------------------------------------------------------------ decode
 def init_decode_state(cfg, batch: int, max_seq: int,
                       ctx: Optional[RunContext] = None,
-                      params: Optional[dict] = None) -> dict:
+                      params: Optional[dict] = None,
+                      per_slot_pos: bool = False) -> dict:
     """Stacked per-period-position caches + current length.
+
+    ``per_slot_pos=True`` makes ``pos`` a (batch,) vector — the layout the
+    continuous-batching engine uses, where every batch row ("slot") advances
+    independently (``serving.state_pool`` owns slot gather/scatter).
 
     When ``params`` is given, per-position cache widths (KV heads, Mamba
     channels, mLSTM heads) derive from the param shapes instead of the
@@ -296,13 +300,22 @@ def init_decode_state(cfg, batch: int, max_seq: int,
                 lambda: X.init_mlstm_state(batch, cfg, d_in=d_in)))
         elif kind == "slstm":
             caches.append(stack(lambda: X.init_slstm_state(batch, cfg)))
-    return {"caches": tuple(caches), "pos": jnp.zeros((), jnp.int32)}
+    pos = (jnp.zeros((batch,), jnp.int32) if per_slot_pos
+           else jnp.zeros((), jnp.int32))
+    return {"caches": tuple(caches), "pos": pos}
 
 
 def decode_step(params: dict, cfg, state: dict, tokens: jax.Array,
                 ctx: Optional[RunContext] = None,
                 embeds: Optional[jax.Array] = None) -> Tuple[jax.Array, dict]:
     """tokens: (B, S_new) (S_new=1 for decode, >1 for cache-filling prefill).
+
+    ``state["pos"]`` is a scalar (whole batch at one position — the serial
+    serve path) or a (B,) vector of per-slot positions (the continuous-
+    batching engine, where each slot is mid-way through its own request).
+    With a vector pos, rope positions and KV-cache writes/masks are all
+    slot-indexed; the recurrent (Mamba/xLSTM) states are position-free and
+    need no change.
 
     ``embeds``: optional precomputed frontend embeddings, prepended during
     prefill (VLM patches / audio frames). Returns (logits, new state)."""
@@ -313,7 +326,8 @@ def decode_step(params: dict, cfg, state: dict, tokens: jax.Array,
         x = jnp.concatenate([fr, x], axis=1)
     b, s, _ = x.shape
     cur = state["pos"]
-    positions = cur + jnp.arange(s)
+    positions = (cur + jnp.arange(s) if jnp.ndim(cur) == 0
+                 else cur[:, None] + jnp.arange(s)[None, :])
     period = pattern_period(cfg)
     spec = layer_specs(cfg)[:period]
 

@@ -17,8 +17,7 @@ MoE layer instead of two all-to-alls, and composes with FSDP on the data axes.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -116,7 +115,6 @@ def _moe_local(x: jax.Array, params: dict, cfg, e_start: jax.Array,
         lb = e * jnp.sum(frac * mean_prob)
         z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
         if data_axes:
-            nd = 1
             for a in data_axes:
                 lb = jax.lax.pmean(lb, a)
                 z = jax.lax.pmean(z, a)
@@ -128,7 +126,6 @@ def _moe_local(x: jax.Array, params: dict, cfg, e_start: jax.Array,
 def moe_forward(params: dict, cfg, x: jax.Array, ctx,
                 with_aux: bool = False) -> Tuple[jax.Array, dict]:
     """x: (B, S, d) -> (B, S, d). Requires ctx.mesh active-compatible specs."""
-    m = cfg.moe
     b, s, d = x.shape
     mesh = ctx.mesh
     tp = ctx.tp_size

@@ -1,2 +1,4 @@
 from repro.roofline.hardware import TPU_V5E  # noqa: F401
 from repro.roofline.hlo_analysis import collective_stats, roofline_terms  # noqa: F401
+
+__all__ = ["TPU_V5E", "collective_stats", "roofline_terms"]

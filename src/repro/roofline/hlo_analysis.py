@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -45,7 +45,6 @@ def _result_bytes(line: str) -> int:
     except ValueError:
         return 0
     # result type(s) = everything in rhs before the opcode token
-    m = re.match(r"\s*(\(?[^a-z(]*(?:\([^)]*\))?)", rhs)
     header = rhs.strip()
     # take shapes up to the first opcode occurrence
     for c in COLLECTIVES:

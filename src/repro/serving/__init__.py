@@ -1,0 +1,15 @@
+"""Continuous-batching serving subsystem (DESIGN.md §9).
+
+``Engine`` owns a slot-based batch over a per-slot decode-state pool;
+``Scheduler`` interleaves chunked prefill with batched decode. Everything
+dispatches through the existing model/kernels stack, so HQP artifacts
+(``QuantizedLinear`` leaves, INT8 KV) serve unchanged.
+"""
+from repro.serving.engine import (Engine, Request, RequestResult,
+                                  serial_decode, summarize_results)
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.serving.state_pool import init_pool, init_slot_template
+
+__all__ = ["Engine", "Request", "RequestResult", "serial_decode",
+           "summarize_results", "Scheduler", "SchedulerConfig", "init_pool",
+           "init_slot_template"]

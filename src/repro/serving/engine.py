@@ -1,0 +1,337 @@
+"""Continuous-batching serving engine over HQP artifacts.
+
+The ``Engine`` owns a slot-based batch of ``n_slots`` concurrent requests.
+Requests are admitted into free slots on arrival, prefilled in chunks
+interleaved with batched decode steps (``serving.scheduler`` owns the
+policy), and evicted on EOS / length — freeing the slot for the next waiting
+request. All device work goes through exactly three jitted callables with a
+**static slot count**:
+
+  _reset_fn  (pool, slot, template)          admission: zero one slot
+  _prefill_fn(params, pool, slot, chunk)     one prompt chunk into one slot
+  _decode_fn (params, pool, tokens, active)  one batched step, all live slots
+
+so steady-state serving never retraces (prefill compiles once per distinct
+chunk length — the tail chunk keeps its exact size because padded prompt
+tokens would change outputs). The state pool is built on
+``init_decode_state(..., params=...)``: HQP-compacted artifacts size their
+own caches, and ``QuantizedLinear`` weights dispatch through the
+kernels/backend registry exactly as on the serial path.
+
+Token-identity contract: engine outputs are bit-identical to serial
+single-request decode because (a) every per-slot computation is independent
+across the batch axis, (b) chunked prefill attends the cache with the same
+``cached_attention`` masked einsum the serial path uses (chunking cannot
+change any logit), and (c) inactive slots are select-masked back to their
+pre-step state after every batched decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.serving import state_pool as sp
+from repro.serving.scheduler import (DECODE, PREFILL, Scheduler,
+                                     SchedulerConfig)
+from repro.sharding.ctx import RunContext, default_ctx
+
+FREE = "free"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (token ids in, token ids out; greedy).
+
+    ``uid`` is engine-assigned at submit() (the return value); any value set
+    by the caller is ignored for identity."""
+    prompt: Sequence[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    uid: Optional[int] = None
+
+
+@dataclasses.dataclass
+class RequestResult:
+    uid: int
+    prompt_len: int
+    tokens: List[int]                 # generated ids (EOS included if hit)
+    finish_reason: str                # "eos" | "length"
+    t_submit: float
+    t_admit: float = 0.0
+    t_first_token: float = 0.0
+    t_finish: float = 0.0
+
+    @property
+    def ttft_s(self) -> float:
+        return self.t_first_token - self.t_submit
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_finish - self.t_submit
+
+
+@dataclasses.dataclass
+class _Slot:
+    idx: int
+    stage: str = FREE                 # free | prefill | decode
+    prompt: Optional[np.ndarray] = None
+    prefill_done: int = 0
+    last_token: int = 0
+    result: Optional[RequestResult] = None
+    eos_id: Optional[int] = None
+    max_new_tokens: int = 0
+
+
+class Engine:
+    """Continuous-batching engine serving a (possibly HQP-quantized) LM."""
+
+    def __init__(self, params: Any, cfg, ctx: Optional[RunContext] = None,
+                 n_slots: int = 4, max_seq: int = 128,
+                 sched: Optional[SchedulerConfig] = None):
+        if cfg.frontend.kind != "none":
+            raise NotImplementedError(
+                "Engine v1 serves token-only archs; frontend (VLM/audio) "
+                "requests need per-slot embed plumbing — a later PR")
+        self.params = params
+        self.cfg = cfg
+        self.ctx = ctx or default_ctx()
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.scheduler = Scheduler(sched)
+        self.pool = sp.init_pool(cfg, n_slots, max_seq, self.ctx,
+                                 params=params)
+        self._template = sp.init_slot_template(cfg, max_seq, self.ctx,
+                                               params=params)
+        self.slots = [_Slot(i) for i in range(n_slots)]
+        self.waiting: List[Request] = []
+        self._uid = itertools.count()
+        self.ticks = 0
+        self.stats = {"prefill_ticks": 0, "decode_ticks": 0,
+                      "decode_slot_steps": 0, "prefill_tokens": 0}
+
+        cfg_, ctx_ = self.cfg, self.ctx
+
+        def _reset(pool, slot, template):
+            return sp.reset_slot(pool, slot, template)
+
+        def _prefill(params, pool, slot, chunk):
+            st = sp.gather_slot(pool, slot)
+            logits, new = lm.decode_step(params, cfg_, st, chunk, ctx_)
+            return logits[:, -1], sp.scatter_slot(pool, slot, new)
+
+        def _decode(params, pool, tokens, active):
+            logits, new = lm.decode_step(params, cfg_, pool, tokens, ctx_)
+            return logits[:, -1], sp.select_slots(new, pool, active)
+
+        self._reset_fn = jax.jit(_reset, donate_argnums=(0,))
+        self._prefill_fn = jax.jit(_prefill, donate_argnums=(1,))
+        self._decode_fn = jax.jit(_decode, donate_argnums=(1,))
+
+    # ------------------------------------------------------------- lifecycle
+    def submit(self, request: Request) -> int:
+        prompt = np.asarray(request.prompt, np.int32)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError("prompt must be a non-empty 1-D token list")
+        if request.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1 (the first token "
+                             "falls out of prefill unconditionally)")
+        if prompt.size + request.max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new_tokens "
+                f"({request.max_new_tokens}) exceeds max_seq={self.max_seq}")
+        # identity is always engine-assigned: a caller-supplied Request.uid
+        # could collide with the internal counter and alias two requests
+        uid = next(self._uid)
+        req = dataclasses.replace(request, uid=uid, prompt=prompt)
+        req._t_submit = time.monotonic()   # type: ignore[attr-defined]
+        self.waiting.append(req)
+        return uid
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(s.stage != FREE for s in self.slots)
+
+    @property
+    def n_active(self) -> int:
+        return sum(s.stage != FREE for s in self.slots)
+
+    def _admit(self) -> None:
+        for slot in self.slots:
+            if not self.waiting:
+                return
+            if slot.stage != FREE:
+                continue
+            req = self.waiting.pop(0)
+            self.pool = self._reset_fn(self.pool, jnp.int32(slot.idx),
+                                       self._template)
+            slot.stage = PREFILL
+            slot.prompt = req.prompt
+            slot.prefill_done = 0
+            slot.eos_id = req.eos_id
+            slot.max_new_tokens = req.max_new_tokens
+            slot.result = RequestResult(
+                uid=req.uid, prompt_len=int(req.prompt.size), tokens=[],
+                finish_reason="", t_submit=req._t_submit,
+                t_admit=time.monotonic())
+
+    def _emit(self, slot: _Slot, tok: int,
+              finished: List[RequestResult]) -> None:
+        res = slot.result
+        if not res.tokens:
+            res.t_first_token = time.monotonic()
+        res.tokens.append(tok)
+        done_eos = slot.eos_id is not None and tok == slot.eos_id
+        done_len = len(res.tokens) >= slot.max_new_tokens
+        if done_eos or done_len:
+            res.finish_reason = "eos" if done_eos else "length"
+            res.t_finish = time.monotonic()
+            finished.append(res)
+            slot.stage = FREE          # eviction: slot reusable next tick
+            slot.result = None
+            slot.prompt = None
+        else:
+            slot.last_token = tok
+            slot.stage = DECODE
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> List[RequestResult]:
+        """One engine tick: admit, then run one scheduler action. Returns
+        requests that finished this tick."""
+        self._admit()
+        prefilling = [s.idx for s in self.slots if s.stage == PREFILL]
+        decoding = [s.idx for s in self.slots if s.stage == DECODE]
+        action = self.scheduler.next_action(prefilling, decoding)
+        finished: List[RequestResult] = []
+
+        if action.kind == PREFILL:
+            slot = self.slots[action.slot]
+            lo, hi = self.scheduler.chunk_bounds(slot.prompt.size,
+                                                 slot.prefill_done)
+            chunk = jnp.asarray(slot.prompt[None, lo:hi])
+            last_logits, self.pool = self._prefill_fn(
+                self.params, self.pool, jnp.int32(slot.idx), chunk)
+            slot.prefill_done = hi
+            self.stats["prefill_ticks"] += 1
+            self.stats["prefill_tokens"] += hi - lo
+            if hi == slot.prompt.size:
+                tok = int(np.argmax(np.asarray(last_logits[0])))
+                self._emit(slot, tok, finished)
+        elif action.kind == DECODE:
+            tokens = np.zeros((self.n_slots, 1), np.int32)
+            active = np.zeros((self.n_slots,), bool)
+            for i in action.slots:
+                tokens[i, 0] = self.slots[i].last_token
+                active[i] = True
+            logits, self.pool = self._decode_fn(
+                self.params, self.pool, jnp.asarray(tokens),
+                jnp.asarray(active))
+            toks = np.asarray(jnp.argmax(logits, axis=-1))
+            for i in action.slots:
+                self._emit(self.slots[i], int(toks[i]), finished)
+            self.stats["decode_ticks"] += 1
+            self.stats["decode_slot_steps"] += len(action.slots)
+
+        self.ticks += 1
+        return finished
+
+    # ------------------------------------------------------------------- run
+    def run(self, requests: Sequence[Request],
+            arrivals_s: Optional[Sequence[float]] = None,
+            arrival_ticks: Optional[Sequence[int]] = None,
+            ) -> Dict[int, RequestResult]:
+        """Drive the given requests to completion; returns results keyed by
+        the request's INDEX in ``requests`` (uids are engine-internal).
+
+        ``arrivals_s``: wall-clock offsets (trace replay);
+        ``arrival_ticks``: deterministic engine-tick offsets (tests). With
+        neither, everything is submitted up front."""
+        if arrivals_s is not None and arrival_ticks is not None:
+            raise ValueError("pass at most one of arrivals_s/arrival_ticks")
+        if self.has_work:
+            raise RuntimeError(
+                "run() requires an idle engine: requests already queued via "
+                "submit() have no index in this run's result map — drain "
+                "them with step() first")
+        offsets = (arrivals_s if arrivals_s is not None else arrival_ticks
+                   if arrival_ticks is not None else [0] * len(requests))
+        pending = sorted(zip(offsets, range(len(requests))), key=lambda p: p[0])
+        by_wall = arrivals_s is not None
+        t0 = time.monotonic()
+        tick0 = self.ticks          # offsets are relative to THIS run's start
+        uid_to_index: Dict[int, int] = {}
+        results: Dict[int, RequestResult] = {}
+        while pending or self.has_work:
+            now = (time.monotonic() - t0) if by_wall else self.ticks - tick0
+            while pending and pending[0][0] <= now:
+                _, i = pending.pop(0)
+                uid_to_index[self.submit(requests[i])] = i
+            if self.has_work:
+                for res in self.step():
+                    results[uid_to_index[res.uid]] = res
+            elif pending:
+                if by_wall:
+                    time.sleep(min(1e-3, max(0.0, pending[0][0] - now)))
+                else:
+                    self.ticks += 1     # idle tick until the next arrival
+        return results
+
+
+# ------------------------------------------------------------------- stats
+def summarize_results(results: Dict[int, RequestResult],
+                      wall_s: float) -> Dict[str, float]:
+    """Throughput + nearest-rank latency/TTFT percentiles over a finished
+    result set (shared by `serve --engine` and the serving bench)."""
+    lat = sorted(r.latency_s for r in results.values())
+    ttft = sorted(r.ttft_s for r in results.values())
+
+    def pct(xs, q):
+        return xs[max(0, -(-int(q * len(xs)) // 100) - 1)]
+
+    out_tokens = sum(len(r.tokens) for r in results.values())
+    return {
+        "n_requests": len(results),
+        "out_tokens": out_tokens,
+        "tokens_per_s": out_tokens / max(wall_s, 1e-9),
+        "latency_p50_ms": pct(lat, 50) * 1e3,
+        "latency_p95_ms": pct(lat, 95) * 1e3,
+        "ttft_p50_ms": pct(ttft, 50) * 1e3,
+        "ttft_p95_ms": pct(ttft, 95) * 1e3,
+    }
+
+
+# ---------------------------------------------------------------- reference
+@functools.lru_cache(maxsize=8)
+def _serial_step(cfg, ctx):
+    """One jitted decode step per (cfg, ctx) — serial_decode is called once
+    per verified request, and a fresh jit(lambda) per call would recompile
+    the (1, 1) decode graph every time."""
+    return jax.jit(lambda p, st, t: lm.decode_step(p, cfg, st, t, ctx))
+
+
+def serial_decode(params, cfg, prompt: Sequence[int], max_new_tokens: int,
+                  ctx: Optional[RunContext] = None, max_seq: int = 128,
+                  eos_id: Optional[int] = None) -> List[int]:
+    """The serial single-request greedy path the engine must match
+    token-for-token: whole-prompt prefill, then one decode step per token."""
+    ctx = ctx or default_ctx()
+    prompt = np.asarray(prompt, np.int32)
+    state = lm.init_decode_state(cfg, 1, max_seq, ctx, params=params)
+    step = _serial_step(cfg, ctx)
+    logits, state = step(params, state, jnp.asarray(prompt[None]))
+    out: List[int] = []
+    tok = int(np.argmax(np.asarray(logits[0, -1])))
+    while True:
+        out.append(tok)
+        if tok == eos_id or len(out) >= max_new_tokens:
+            return out
+        logits, state = step(params, state,
+                             jnp.full((1, 1), tok, jnp.int32))
+        tok = int(np.argmax(np.asarray(logits[0, -1])))

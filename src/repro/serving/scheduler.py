@@ -1,0 +1,66 @@
+"""Scheduling policy for the continuous-batching engine.
+
+The scheduler is pure host-side policy: it looks at slot metadata and picks
+the next device action. Invariants (see DESIGN.md §9):
+
+  * one prefill *chunk* per tick, never a whole prompt — chunked prefill is
+    what bounds the decode stall other requests see while a long prompt is
+    admitted (HALP's point: measure latency under the real serving regime);
+  * prefill has priority over decode (round-robin across prefilling slots),
+    so a newly admitted request reaches its first token in
+    ceil(prompt/chunk) ticks regardless of how many slots are decoding;
+  * decode is one batched step over *all* decoding slots — slots never run
+    separate decode dispatches;
+  * admission is eager: a free slot + a waiting request always admits before
+    the tick's action is chosen (the engine owns admission; the scheduler
+    only sequences work already placed in slots).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+PREFILL = "prefill"
+DECODE = "decode"
+IDLE = "idle"
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    prefill_chunk: int = 16     # max prompt tokens per prefill dispatch
+
+
+@dataclasses.dataclass(frozen=True)
+class Action:
+    kind: str                             # "prefill" | "decode" | "idle"
+    slot: Optional[int] = None            # prefill: which slot
+    slots: Tuple[int, ...] = ()           # decode: which slots step
+
+
+class Scheduler:
+    """Round-robin chunked prefill interleaved with batched decode."""
+
+    def __init__(self, cfg: Optional[SchedulerConfig] = None):
+        self.cfg = cfg or SchedulerConfig()
+        self._rr = 0                       # round-robin cursor over slots
+
+    def next_action(self, prefilling: Sequence[int],
+                    decoding: Sequence[int]) -> Action:
+        """``prefilling``/``decoding``: slot indices by lifecycle stage."""
+        if prefilling:
+            order = sorted(prefilling)
+            pick = next((s for s in order if s >= self._rr), order[0])
+            self._rr = pick + 1
+            return Action(PREFILL, slot=pick)
+        self._rr = 0
+        if decoding:
+            return Action(DECODE, slots=tuple(sorted(decoding)))
+        return Action(IDLE)
+
+    def chunk_bounds(self, prompt_len: int, done: int) -> Tuple[int, int]:
+        """Next prefill chunk [lo, hi) for a prompt with ``done`` tokens
+        already in the cache. The final chunk keeps its exact remainder
+        length (no padding: padded prompt tokens would alter outputs)."""
+        lo = done
+        hi = min(prompt_len, done + self.cfg.prefill_chunk)
+        return lo, hi

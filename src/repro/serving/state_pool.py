@@ -1,0 +1,92 @@
+"""Per-slot decode-state pool for the continuous-batching engine.
+
+The pool is the ``lm.init_decode_state`` pytree with two twists:
+
+  * ``pos`` is a (n_slots,) vector — every slot advances independently;
+  * every cache leaf keeps the seed layout (groups, n_slots, ...), i.e. the
+    slot axis is **axis 1** of every leaf under ``state["caches"]`` (axis 0 is
+    the lax.scan group stack). ``SLOT_AXIS`` pins that invariant.
+
+Built on ``init_decode_state(..., params=...)`` so HQP-compacted artifacts —
+whose pruned KV heads / Mamba channels physically shrank — size their own
+pool; the engine never consults the config for cache widths.
+
+Slot ops are pure functions (jitted by the engine):
+
+  gather_slot(pool, slot)          -> single-slot state (batch=1, scalar pos)
+  scatter_slot(pool, slot, state)  -> pool with that slot replaced
+  reset_slot(pool, slot, template) -> pool with the slot zeroed (admission)
+
+``gather``/``scatter`` use dynamic_slice with a *traced* slot index, so one
+compiled executable serves every slot.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+
+SLOT_AXIS = 1   # slot axis of every leaf under pool["caches"]
+
+
+def init_pool(cfg, n_slots: int, max_seq: int, ctx=None,
+              params: Optional[dict] = None) -> Dict[str, Any]:
+    """Pool for ``n_slots`` concurrent requests (per-slot ``pos``)."""
+    return lm.init_decode_state(cfg, n_slots, max_seq, ctx, params=params,
+                                per_slot_pos=True)
+
+
+def init_slot_template(cfg, max_seq: int, ctx=None,
+                       params: Optional[dict] = None) -> Dict[str, Any]:
+    """A fresh single-slot state (batch=1, scalar pos) — written into the
+    pool on admission, and the state shape prefill/gather round-trips."""
+    return lm.init_decode_state(cfg, 1, max_seq, ctx, params=params)
+
+
+def gather_slot(pool: Dict[str, Any], slot: jax.Array) -> Dict[str, Any]:
+    """Extract slot ``slot`` as a batch=1 ``decode_step`` state."""
+    caches = jax.tree.map(
+        lambda leaf: jax.lax.dynamic_slice_in_dim(leaf, slot, 1, SLOT_AXIS),
+        pool["caches"])
+    pos = jax.lax.dynamic_slice(pool["pos"], (slot,), (1,))[0]
+    return {"caches": caches, "pos": pos}
+
+
+def scatter_slot(pool: Dict[str, Any], slot: jax.Array,
+                 state: Dict[str, Any]) -> Dict[str, Any]:
+    """Write a batch=1 state back into slot ``slot``."""
+    caches = jax.tree.map(
+        lambda leaf, upd: jax.lax.dynamic_update_slice_in_dim(
+            leaf, upd.astype(leaf.dtype), slot, SLOT_AXIS),
+        pool["caches"], state["caches"])
+    pos = jax.lax.dynamic_update_slice(
+        pool["pos"], jnp.reshape(state["pos"], (1,)).astype(jnp.int32),
+        (slot,))
+    return {"caches": caches, "pos": pos}
+
+
+def reset_slot(pool: Dict[str, Any], slot: jax.Array,
+               template: Dict[str, Any]) -> Dict[str, Any]:
+    """Zero a slot for a newly admitted request (stale KV from the previous
+    occupant is masked by ``pos`` anyway; the recurrent Mamba/xLSTM states
+    genuinely need the reset)."""
+    return scatter_slot(pool, slot, template)
+
+
+def select_slots(new: Dict[str, Any], old: Dict[str, Any],
+                 active: jax.Array) -> Dict[str, Any]:
+    """Per-slot select: keep ``new`` where ``active`` (B,) bool, else ``old``.
+
+    Applied after a batched decode step so inactive slots (free, or parked
+    mid-prefill) are bit-untouched — without this, the dummy tokens fed to
+    inactive slots would pollute their recurrent states and creep ``pos``."""
+    def sel(n, o):
+        mask = active.reshape((1, -1) + (1,) * (n.ndim - 2))
+        return jnp.where(mask, n, o)
+
+    caches = jax.tree.map(sel, new["caches"], old["caches"])
+    pos = jnp.where(active, new["pos"], old["pos"])
+    return {"caches": caches, "pos": pos}

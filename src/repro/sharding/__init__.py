@@ -1,1 +1,3 @@
 from repro.sharding.ctx import RunContext, default_ctx  # noqa: F401
+
+__all__ = ["RunContext", "default_ctx"]

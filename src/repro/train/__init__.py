@@ -1,1 +1,3 @@
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update"]

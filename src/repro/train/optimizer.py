@@ -10,7 +10,7 @@ insight applied to *training* state (beyond-paper, recorded in EXPERIMENTS.md
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,8 +7,7 @@ changes the DP width (launch/elastic.py).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,15 +1,12 @@
 """Fault tolerance: atomic checkpoints, torn-write detection, auto-resume,
 elastic restore, straggler policy."""
-import os
-import pathlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.launch import checkpoint as ckpt
-from repro.launch.elastic import StragglerPolicy, choose_mesh_shape, replan
+from repro.launch.elastic import StragglerPolicy, choose_mesh_shape
 
 
 def _tree(key=0):

@@ -156,7 +156,6 @@ def test_conditional_prune_respects_delta_and_is_maximal():
     cfg, variables = small_cnn()
     specs = sens.cnn_prune_groups(cfg, variables)
     sq = fake_fisher(variables)
-    counter = {}
 
     def eval_fn(masked):
         # count zeroed channels across the first member of each family

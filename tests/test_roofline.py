@@ -85,7 +85,6 @@ def test_collective_detection_via_shard_map():
         return shard_map(lambda t: jax.lax.psum(t, "x"), mesh=mesh,
                          in_specs=P("x"), out_specs=P())(a)
     a = jax.ShapeDtypeStruct((8, 16), jnp.float32)
-    txt = jax.jit(f).lower(a).as_text()     # pre-optimization keeps collective
     # lowered stablehlo won't parse; compile instead
     c = jax.jit(f).lower(a).compile()
     res = hlo_cost.analyze(c.as_text())

@@ -1,13 +1,11 @@
 """Sharding rules + a real multi-device SPMD compile (8 forced host devices
 in a subprocess, since the test process already initialized 1 device)."""
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
@@ -43,9 +41,7 @@ def test_spec_divisibility_guard():
 
 def test_full_config_specs_divisible_on_production_mesh():
     """Every full-size arch: spec axis sizes divide dims on the 16x16 mesh."""
-    import dataclasses
     from repro.sharding.ctx import RunContext
-    from jax.sharding import Mesh
 
     class FakeMesh:
         axis_names = ("data", "model")

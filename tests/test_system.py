@@ -12,7 +12,7 @@ from repro import configs
 from repro.models import lm
 from repro.sharding.ctx import default_ctx
 from repro.train.optimizer import AdamWConfig, adamw_init
-from repro.train.train_step import make_eval_step, make_train_step
+from repro.train.train_step import make_train_step
 
 ARCHS = configs.list_archs()
 

@@ -12,6 +12,7 @@ runs so this module is always executable on a bare CPU container.
   SV-E      (energy ratio == speedup)       -> bench_energy
   Fig. 2/3 analogue (LM fleet)              -> bench_lm_hqp_serving
   continuous-batching engine                -> bench_serving
+  decode attention (windowed vs full)       -> bench_decode_attention
   kernels                                   -> bench_kernels
   SRoofline                                 -> bench_roofline_table
 
@@ -190,7 +191,13 @@ def bench_lm_hqp_serving() -> List[Row]:
 
 def bench_serving(out_path: str = "BENCH_serving.json") -> List[Row]:
     """Continuous-batching engine throughput + latency percentiles, bf16 vs
-    the INT8 HQP artifact — the serving-regime numbers CI tracks per PR."""
+    the INT8 HQP artifact — the serving-regime numbers CI tracks per PR.
+
+    The ``bf16_sync1`` variant pins ``decode_steps=1`` (the PR-2 per-token
+    host-sync behavior) against the default multi-step device decode loop, so
+    the host-sync amortization shows up as a tokens/s delta in the same file;
+    every variant also records ``host_syncs``/``device_steps`` so the win is
+    observable, not inferred."""
     import dataclasses as dc
     import jax
     from repro import configs
@@ -205,25 +212,27 @@ def bench_serving(out_path: str = "BENCH_serving.json") -> List[Row]:
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     art = compress(params, cfg, log=lambda s: None)
     rng = np.random.RandomState(0)
-    n_req, new_tok, n_slots, chunk = 8, 16, 4, 8
+    n_req, new_tok, n_slots, chunk, dsteps = 8, 16, 4, 8, 4
     prompts = [rng.randint(0, cfg.vocab_size, 8 + (5 * i) % 13).tolist()
                for i in range(n_req)]
 
     payload = {"schema": SERVING_SCHEMA, "arch": cfg.name,
                "n_requests": n_req, "n_slots": n_slots,
                "prefill_chunk": chunk, "max_new_tokens": new_tok,
-               "variants": {}}
+               "decode_steps": dsteps, "variants": {}}
     rows: List[Row] = []
-    for name, p, qkv in [("bf16", params, False),
-                         ("hqp_int8", art.params, True)]:
+    for name, p, qkv, ds in [("bf16", params, False, dsteps),
+                             ("bf16_sync1", params, False, 1),
+                             ("hqp_int8", art.params, True, dsteps)]:
         ctx = dc.replace(default_ctx(), quantized_kv=qkv)
         eng = Engine(p, cfg, ctx=ctx, n_slots=n_slots, max_seq=64,
-                     sched=SchedulerConfig(prefill_chunk=chunk))
+                     sched=SchedulerConfig(prefill_chunk=chunk,
+                                           decode_steps=ds))
         reqs = [Request(prompt=pr, max_new_tokens=new_tok) for pr in prompts]
         arrivals = [2 * i for i in range(n_req)]
         # warmup with the FULL request set: every prefill tail-chunk shape
-        # compiles here, so the timed pass below measures steady-state
-        # serving, not XLA compilation
+        # and visible-window bucket compiles here, so the timed pass below
+        # measures steady-state serving, not XLA compilation
         eng.run(reqs, arrival_ticks=arrivals)
         for k in eng.stats:
             eng.stats[k] = 0
@@ -235,6 +244,9 @@ def bench_serving(out_path: str = "BENCH_serving.json") -> List[Row]:
             "param_bytes": int(param_bytes(p)),
             "decode_ticks": eng.stats["decode_ticks"],
             "prefill_ticks": eng.stats["prefill_ticks"],
+            "decode_steps": ds,
+            "host_syncs": eng.stats["host_syncs"],
+            "device_steps": eng.stats["device_steps"],
         }
         if name == "hqp_int8":
             v["artifact_bytes"] = art.manifest.bytes_after
@@ -244,12 +256,76 @@ def bench_serving(out_path: str = "BENCH_serving.json") -> List[Row]:
                      f"tok_s={v['tokens_per_s']:.1f} "
                      f"p50={v['latency_p50_ms']:.0f}ms "
                      f"p95={v['latency_p95_ms']:.0f}ms "
+                     f"syncs={v['host_syncs']} dsteps={v['device_steps']} "
                      f"bytes={v['param_bytes']}"))
 
     global _LAST_SERVING
     _LAST_SERVING = payload
     if out_path:
         pathlib.Path(out_path).write_text(json.dumps(payload, indent=1))
+    return rows
+
+
+def bench_decode_attention() -> List[Row]:
+    """Decode-attention ms/step vs cache capacity (``max_seq`` sweep).
+
+    The length-aware windowed path (static window fixed while ``max_seq``
+    grows 4x) must stay ~flat — ``check_bench`` gates on <= 1.3x smallest->
+    largest — while the full-cache masked einsum (the pre-windowing decode
+    path) scales linearly and is recorded as the contrast row. Runs the xla
+    backend (timed gate) and the Pallas kernel in interpret mode (``ref``,
+    correctness-on-CI; its absolute times are interpreter overhead, not
+    kernel speed)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops as kops
+    from repro.kernels.backend import set_backend
+
+    b, hq, hkv, hd = 4, 8, 4, 64
+    window = 64                      # live-length bucket, fixed across sweep
+    sweep = (128, 256, 512)          # 4x capacity growth
+    key = jax.random.PRNGKey(0)
+    rows: List[Row] = []
+
+    def timed(fn, args, reps):
+        # min-of-reps, not median: the flatness ratio gates CI, and on
+        # shared runners scheduler noise only ever ADDS time — the minimum
+        # is the stable estimate of the true cost
+        jax.block_until_ready(fn(*args))
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        return float(np.min(ts))
+
+    for backend, reps in (("xla", 50), ("ref", 5)):
+        for max_seq in sweep:
+            ks = jax.random.split(jax.random.fold_in(key, max_seq), 3)
+            q = jax.random.normal(ks[0], (b, 1, hq, hd), jnp.bfloat16)
+            cache = {
+                "k": jax.random.normal(ks[1], (b, max_seq, hkv, hd),
+                                       jnp.bfloat16),
+                "v": jax.random.normal(ks[2], (b, max_seq, hkv, hd),
+                                       jnp.bfloat16),
+            }
+            start = jnp.full((b,), window - 1, jnp.int32)
+            prev = set_backend(backend)
+            try:
+                win_fn = jax.jit(lambda q, c, s: kops.decode_attention(
+                    q, c, s, window=window))
+                t_win = timed(win_fn, (q, cache, start), reps)
+                rows.append((f"decode_attention/{backend}_win/S{max_seq}",
+                             t_win * 1e6, f"window={window} slots={b}"))
+                if backend == "xla":
+                    full_fn = jax.jit(lambda q, c, s: kops.decode_attention(
+                        q, c, s, window=None))
+                    t_full = timed(full_fn, (q, cache, start), reps)
+                    rows.append((f"decode_attention/xla_full/S{max_seq}",
+                                 t_full * 1e6,
+                                 f"window=None ratio={t_full/t_win:.2f}x"))
+            finally:
+                set_backend(prev)
     return rows
 
 
@@ -304,6 +380,7 @@ BENCHES = [
     bench_energy,
     bench_lm_hqp_serving,
     bench_serving,
+    bench_decode_attention,
     bench_kernels,
     bench_roofline_table,
 ]

@@ -54,7 +54,9 @@ def main():
     print(f"engine ticks: {eng.ticks} "
           f"({eng.stats['prefill_ticks']} prefill / "
           f"{eng.stats['decode_ticks']} decode, "
-          f"{eng.stats['decode_slot_steps']} slot-steps)")
+          f"{eng.stats['decode_slot_steps']} slot-steps, "
+          f"{eng.stats['device_steps']} device decode steps in "
+          f"{eng.stats['host_syncs']} host syncs)")
 
 
 if __name__ == "__main__":

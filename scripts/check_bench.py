@@ -3,20 +3,28 @@
   python scripts/check_bench.py BENCH_pr.json
 
 Fails (exit 1) on: missing/unparseable file, wrong schema tag, zero rows,
-bench errors recorded, or a serving payload with non-positive throughput /
-inverted percentiles / missing artifact bytes. CI uploads the file only
-after this gate passes, so the uploaded trajectory is never silently empty.
+bench errors recorded, a serving payload with non-positive throughput /
+inverted percentiles / missing artifact bytes (variants with zero completed
+requests are tolerated — they report a zeroed summary, not a crash), or a
+``decode_attention/xla_win/*`` sweep whose ms/step grows more than
+DECODE_FLAT_MAX from the smallest to the largest ``max_seq`` — the windowed
+decode path must scale with live length, not cache capacity. CI uploads the
+file only after this gate passes, so the uploaded trajectory is never
+silently empty.
 """
 from __future__ import annotations
 
 import json
 import pathlib
+import re
 import sys
 
 BENCH_SCHEMA = "repro-bench/v1"
 SERVING_SCHEMA = "repro-bench-serving/v1"
 SERVING_REQUIRED = ("tokens_per_s", "latency_p50_ms", "latency_p95_ms",
                     "ttft_p50_ms", "ttft_p95_ms", "param_bytes")
+DECODE_WIN_ROW = re.compile(r"^decode_attention/xla_win/S(\d+)$")
+DECODE_FLAT_MAX = 1.3
 
 
 def fail(msg: str) -> None:
@@ -34,6 +42,8 @@ def check_serving(s: dict) -> None:
         for key in SERVING_REQUIRED:
             if not isinstance(v.get(key), (int, float)):
                 fail(f"serving variant {name!r} missing numeric {key!r}")
+        if v.get("n_requests") == 0:
+            continue    # zeroed summary from an empty result set is valid
         if v["tokens_per_s"] <= 0:
             fail(f"serving variant {name!r}: tokens_per_s <= 0")
         if v["latency_p95_ms"] < v["latency_p50_ms"]:
@@ -42,6 +52,32 @@ def check_serving(s: dict) -> None:
         ab = variants["hqp_int8"].get("artifact_bytes")
         if not isinstance(ab, int) or ab <= 0:
             fail("hqp_int8 variant missing positive artifact_bytes")
+
+
+def check_decode_flat(rows: list) -> int:
+    """Windowed decode attention must be ~flat across the max_seq sweep: the
+    whole point of the length-aware path is that cost tracks the visible
+    window, not cache capacity. Gated on the xla rows only (``ref`` rows are
+    Pallas-interpreter overhead, not kernel speed)."""
+    win = {}
+    for r in rows:
+        m = DECODE_WIN_ROW.match(r.get("name", ""))
+        if m:
+            win[int(m.group(1))] = float(r["us_per_call"])
+    if not win:
+        return 0
+    if len(win) < 2:
+        fail(f"decode_attention sweep has {len(win)} xla_win row(s); "
+             f"need >= 2 max_seq points to check flatness")
+    lo, hi = min(win), max(win)
+    ratio = win[hi] / max(win[lo], 1e-12)
+    if ratio > DECODE_FLAT_MAX:
+        fail(f"windowed decode attention is not length-aware: "
+             f"S{hi} costs {ratio:.2f}x S{lo} "
+             f"(limit {DECODE_FLAT_MAX}x; us={win})")
+    print(f"check_bench: decode_attention flat OK "
+          f"(S{lo}->S{hi}: {ratio:.2f}x over {len(win)} points)")
+    return len(win)
 
 
 def main(argv) -> int:
@@ -68,9 +104,10 @@ def main(argv) -> int:
         fail(f"bench errors: {doc['errors']}")
     if "serving" in doc:
         check_serving(doc["serving"])
+    n_decode = check_decode_flat(rows)
     n_serving = sum(r["name"].startswith("serving/") for r in rows)
     print(f"check_bench: OK ({len(rows)} rows, {n_serving} serving, "
-          f"benches={doc.get('benches')})")
+          f"{n_decode} windowed-decode, benches={doc.get('benches')})")
     return 0
 
 

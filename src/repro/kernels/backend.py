@@ -31,11 +31,16 @@ class Backend:
     quantize_rowwise: (M, K) float -> ((M, K) int8, (M,) f32 scales)
     int8_matmul:      (M, K) int8, (K, N) int8, (M,) f32, (N,) f32 -> (M, N)
     flash_attention:  (B, S, H, hd) q/k/v -> (B, S, H, hd), causal
+    decode_attention: (B, Hq, hd) q vs a (B, W, Hkv, hd) slotted KV window
+                      (float, or int8 + (B, W, Hkv) f32 scales), (B,) int32
+                      per-slot ``start`` -> (B, Hq, hd); the serving decode
+                      hot path (split-KV flash decoding on pallas)
     """
     name: str
     quantize_rowwise: Callable
     int8_matmul: Callable
     flash_attention: Callable
+    decode_attention: Callable
 
 
 _REGISTRY: Dict[str, Backend] = {}
@@ -84,6 +89,7 @@ def _xla_backend() -> Backend:
             x_q, w_q, w_s, x_s),
         flash_attention=lambda q, k, v: ref.flash_attention_ref(
             q, k, v, causal=True),
+        decode_attention=ref.decode_attention_ref,
     )
 
 
@@ -100,6 +106,7 @@ def _fold_heads(fn):
 
 
 def _pallas_backend(interpret: bool) -> Backend:
+    from repro.kernels.decode_attention import decode_attention_pallas
     from repro.kernels.flash_attention import flash_attention_pallas
     from repro.kernels.int8_matmul import int8_matmul_pallas
     from repro.kernels.quantize import quantize_rowwise_pallas
@@ -111,6 +118,9 @@ def _pallas_backend(interpret: bool) -> Backend:
             x_q, w_q, x_s, w_s, interpret=interpret),
         flash_attention=_fold_heads(lambda q, k, v: flash_attention_pallas(
             q, k, v, interpret=interpret)),
+        decode_attention=lambda q, k, v, k_s, v_s, start:
+            decode_attention_pallas(q, k, v, k_s, v_s, start,
+                                    interpret=interpret),
     )
 
 

@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: length-aware split-KV decode attention (flash-decoding).
+
+One query token per slot attends a slotted KV cache laid out (B, S, Hkv, hd).
+Grid (B, Hkv, S/bk) with the KV-sequence axis innermost: the online-softmax
+accumulators (m, l, acc) live in VMEM scratch across the KV loop, exactly like
+``flash_attention.py`` — but causality here is *per slot*: each batch row
+carries its own visible limit ``start`` (the absolute position of the query),
+and every KV block strictly beyond that limit is skipped via ``pl.when``, so
+a slot that is 40 tokens into a 4096-slot cache issues work for one block,
+not thirty-two. That block skip is what makes decode cost track *actual*
+sequence length instead of cache capacity.
+
+INT8 KV path: ``k``/``v`` arrive as int8 with per-(pos, head) f32 scales. The
+dequant is fused into the epilogue — scores are scaled by ``k_s`` after the
+QK^T dot and probabilities by ``v_s`` before the PV dot — so the cache is
+only ever read as int8 (half the HBM stream of bf16) and no dequantized KV
+tile is ever materialized. The ``l`` normalizer accumulates the *unscaled*
+probabilities: out = (Σ p·v_s·v) / (Σ p) == softmax(s)·v_s·v, matching the
+XLA fallback's probability-side dequant bit-for-tolerance.
+
+GQA: the G = Hq/Hkv query heads sharing one KV head form the row axis of
+every score tile, so the kernel's dots are (G, hd)x(hd, bk) and (G, bk)x(bk,
+hd) — the KV block is read once per group, not once per query head.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# renamed across jax versions (TPUCompilerParams -> CompilerParams)
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
+NEG_INF = -1e30
+
+
+def _kernel(start_ref, q_ref, k_ref, v_ref, *rest, bk: int, n_kv: int,
+            scale: float, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start = start_ref[0, 0]                       # this slot's query position
+
+    @pl.when(j * bk <= start)                     # block intersects the window
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)       # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)    # (bk, hd) — int8 read as-is
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if quantized:
+            s = s * ks_ref[0, 0][None, :]         # dequant on scores, not KV
+        kv_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(kv_pos <= start, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1)
+        if quantized:
+            p = p * vs_ref[0, 0][None, :]         # dequant on probabilities
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v_ref[0, :, 0].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            k_s: Optional[jax.Array] = None,
+                            v_s: Optional[jax.Array] = None,
+                            start: jax.Array = None, *, bk: int = 128,
+                            interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, hd); k/v: (B, S, Hkv, hd) float or int8 (then k_s/v_s
+    (B, S, Hkv) f32 scales); start: (B,) int32 per-slot query positions.
+    Returns (B, Hq, hd) bf16."""
+    b, hq, hd = q.shape
+    s_len, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bk = min(bk, s_len)
+    pk = (-s_len) % bk
+    if pk:                                   # padded tail masked by kv_pos
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        if k_s is not None:
+            k_s = jnp.pad(k_s, ((0, 0), (0, pk), (0, 0)))
+            v_s = jnp.pad(v_s, ((0, 0), (0, pk), (0, 0)))
+    n_kv = (s_len + pk) // bk
+    quantized = k_s is not None
+
+    inputs = [jnp.reshape(start, (b, 1)).astype(jnp.int32),
+              q.reshape(b, hkv, g, hd), k, v]
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda bb, h, j: (bb, 0)),
+        pl.BlockSpec((1, 1, g, hd), lambda bb, h, j: (bb, h, 0, 0)),
+        pl.BlockSpec((1, bk, 1, hd), lambda bb, h, j: (bb, j, h, 0)),
+        pl.BlockSpec((1, bk, 1, hd), lambda bb, h, j: (bb, j, h, 0)),
+    ]
+    if quantized:
+        # scales transposed to (B, Hkv, S): the seq axis lands on lanes
+        inputs += [jnp.transpose(k_s, (0, 2, 1)),
+                   jnp.transpose(v_s, (0, 2, 1))]
+        in_specs += [pl.BlockSpec((1, 1, bk), lambda bb, h, j: (bb, h, j)),
+                     pl.BlockSpec((1, 1, bk), lambda bb, h, j: (bb, h, j))]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk=bk, n_kv=n_kv, scale=hd ** -0.5,
+                          quantized=quantized),
+        grid=(b, hkv, n_kv),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda bb, h, j: (bb, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), jnp.bfloat16),
+        scratch_shapes=[pltpu.VMEM((g,), jnp.float32),
+                        pltpu.VMEM((g,), jnp.float32),
+                        pltpu.VMEM((g, hd), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*inputs)
+    return out.reshape(b, hq, hd)

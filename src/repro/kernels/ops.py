@@ -13,6 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ref
 from repro.kernels.backend import get_backend
 
 
@@ -44,3 +45,55 @@ def int8_matmul(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
     """(B, S, H, hd) causal MHA (equal q/kv heads; GQA folded by caller)."""
     return get_backend().flash_attention(q, k, v)
+
+
+# ------------------------------------------------------------- KV-cache attn
+def _cache_window(cache: dict, window: Optional[int]):
+    """Unpack a (possibly INT8) KV-cache dict into (k, v, k_s, v_s) views
+    restricted to the first ``window`` positions.
+
+    ``window`` is a STATIC int (or None = full buffer): callers bucket the
+    live sequence length up to a block multiple on the host, so the attend
+    reads O(window) bytes instead of O(max_seq). Visible-window contract:
+    ``window >= start + Sq`` for every row whose output is consumed —
+    positions beyond the window would have been masked to exp(-inf) = 0
+    exactly, which is why the windowed path is bit-identical to the
+    full-mask einsum (the tier-1 regression test)."""
+    if "k_q" in cache:
+        k, v, k_s, v_s = (cache["k_q"], cache["v_q"],
+                          cache["k_s"], cache["v_s"])
+    else:
+        k, v, k_s, v_s = cache["k"], cache["v"], None, None
+    if window is not None and window < k.shape[1]:
+        sl = lambda t: (None if t is None
+                        else jax.lax.slice_in_dim(t, 0, window, axis=1))
+        k, v, k_s, v_s = sl(k), sl(v), sl(k_s), sl(v_s)
+    return k, v, k_s, v_s
+
+
+def cached_attention(q: jax.Array, cache: dict, start: jax.Array,
+                     window: Optional[int] = None) -> jax.Array:
+    """Cache-continuation prefill: q (B, Sq, Hq, hd) at absolute positions
+    start..start+Sq-1 vs a cache holding [0, start+Sq). ``start`` scalar or
+    (B,). NOT backend-dispatched — this masked einsum (``kernels.ref``) is
+    the shared XLA fallback on every backend, and the numerics oracle the
+    ``decode_attention`` primitive must match."""
+    b = q.shape[0]
+    start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,))
+    return ref.cached_attention_ref(q, *_cache_window(cache, window),
+                                    start=start)
+
+
+def decode_attention(q: jax.Array, cache: dict, start: jax.Array,
+                     window: Optional[int] = None) -> jax.Array:
+    """Decode hot path: one new query per slot, backend-dispatched.
+
+    q: (B, 1, Hq, hd); ``start`` scalar or (B,) per-slot positions; returns
+    (B, 1, Hq, hd). The backend primitive works on the squeezed (B, Hq, hd)
+    layout — this wrapper owns the (B, 1, Hq, hd) <-> kernel-layout plumbing
+    and the static visible-window slice."""
+    b = q.shape[0]
+    start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,))
+    k, v, k_s, v_s = _cache_window(cache, window)
+    return get_backend().decode_attention(q[:, 0], k, v, k_s, v_s,
+                                          start)[:, None]

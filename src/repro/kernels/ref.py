@@ -6,6 +6,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+NEG_INF = -1e30
+
 
 def quantize_ref(x: jax.Array, axis: int = -1) -> Tuple[jax.Array, jax.Array]:
     """Symmetric per-channel INT8: returns (q, scale) with x ≈ q * scale.
@@ -48,16 +50,53 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return o.astype(q.dtype)
 
 
-def int8_decode_attention_ref(q: jax.Array, k_q: jax.Array, v_q: jax.Array,
-                              k_s: jax.Array, v_s: jax.Array,
-                              cur_len: jax.Array) -> jax.Array:
-    """Decode vs int8 KV cache. q: (B, H, hd); k_q/v_q: (B, S, H, hd) int8;
-    k_s/v_s: (B, S, H) f32 scales."""
-    kf = k_q.astype(jnp.float32) * k_s[..., None]
-    vf = v_q.astype(jnp.float32) * v_s[..., None]
-    hd = q.shape[-1]
-    s = jnp.einsum("bhd,bchd->bhc", q.astype(jnp.float32), kf) * hd ** -0.5
-    mask = jnp.arange(kf.shape[1])[None, None, :] < cur_len
-    s = jnp.where(mask, s, -1e30)
+def cached_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         k_s: Optional[jax.Array] = None,
+                         v_s: Optional[jax.Array] = None,
+                         start: jax.Array = None) -> jax.Array:
+    """Masked-einsum GQA attention over a slotted KV window — the canonical
+    XLA-fallback numerics shared by cache-continuation prefill and the ``xla``
+    backend's ``decode_attention`` (bit-identity between the two is what keeps
+    engine output token-identical to serial decode).
+
+    q: (B, Sq, Hq, hd) queries at absolute positions ``start..start+Sq-1``;
+    k, v: (B, W, Hkv, hd) float, or int8 with ``k_s``/``v_s`` (B, W, Hkv) f32
+    scales — for the INT8 cache the per-(pos, head) dequant is fused into the
+    score/probability matrices (size B·H·Sq·W) instead of the cache (size
+    B·H·W·hd): the cache itself is only ever read as int8. ``start``: (B,)
+    int32. W is the visible window: callers guarantee ``W >= start+Sq`` for
+    every row whose output is consumed. Returns (B, Sq, Hq, hd) bf16.
+    """
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = (q.reshape(b, sq, hkv, g, hd).astype(jnp.float32) * hd ** -0.5
+          ).astype(jnp.bfloat16)
+    s = jnp.einsum("bqhgd,bchd->bqhgc", qg, k.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32)
+    if k_s is not None:
+        s = s * jnp.transpose(k_s, (0, 2, 1))[:, None, :, None, :]
+    limit = start[:, None] + jnp.arange(sq)[None, :]          # (B, Sq)
+    mask = jnp.arange(skv)[None, None, :] <= limit[..., None]  # (B, Sq, W)
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhc,bchd->bhd", p, vf).astype(jnp.bfloat16)
+    if v_s is not None:
+        p = p * jnp.transpose(v_s, (0, 2, 1))[:, None, :, None, :]
+    out = jnp.einsum("bqhgc,bchd->bqhgd", p.astype(jnp.bfloat16),
+                     v.astype(jnp.bfloat16),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, hq, hd).astype(jnp.bfloat16)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         k_s: Optional[jax.Array] = None,
+                         v_s: Optional[jax.Array] = None,
+                         start: jax.Array = None) -> jax.Array:
+    """Single-query decode attention (the ``xla`` backend primitive).
+
+    q: (B, Hq, hd); k/v/k_s/v_s/start as ``cached_attention_ref``. Defined as
+    exactly the Sq=1 slice of the prefill einsum so decode and chunked
+    prefill share one set of numerics bit-for-bit."""
+    return cached_attention_ref(q[:, None], k, v, k_s, v_s, start)[:, 0]
+
+

@@ -154,7 +154,8 @@ def run_engine(params, cfg, ctx, args, log=print):
 
     eng = Engine(params, cfg, ctx=ctx, n_slots=args.engine_slots,
                  max_seq=args.max_seq,
-                 sched=SchedulerConfig(prefill_chunk=args.prefill_chunk))
+                 sched=SchedulerConfig(prefill_chunk=args.prefill_chunk,
+                                       decode_steps=args.decode_steps))
     t0 = time.monotonic()
     results = eng.run(reqs, arrivals_s=arrivals)
     wall = time.monotonic() - t0
@@ -171,7 +172,9 @@ def run_engine(params, cfg, ctx, args, log=print):
         f"{stats['latency_p95_ms']:.0f}ms, "
         f"ttft p50/p95 {stats['ttft_p50_ms']:.0f}/"
         f"{stats['ttft_p95_ms']:.0f}ms "
-        f"(ticks: {eng.stats['prefill_ticks']}p/{eng.stats['decode_ticks']}d)")
+        f"(ticks: {eng.stats['prefill_ticks']}p/{eng.stats['decode_ticks']}d, "
+        f"{eng.stats['device_steps']} device decode steps / "
+        f"{eng.stats['host_syncs']} host syncs)")
 
     verify = args.verify if args.verify is not None else args.smoke
     if verify:
@@ -214,6 +217,9 @@ def main(argv=None):
                          "single-batch lockstep loop")
     ap.add_argument("--engine-slots", type=int, default=4)
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--decode-steps", type=int, default=4,
+                    help="batched decode steps per device dispatch (the "
+                         "jitted lax.scan length; 1 = sync every token)")
     ap.add_argument("--trace", default=None,
                     help="JSONL request trace to replay (engine mode)")
     ap.add_argument("--verify", action="store_true", default=None,

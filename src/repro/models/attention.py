@@ -18,6 +18,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.models import layers as L
 
 NEG_INF = -1e30
@@ -152,7 +153,8 @@ def update_kv_cache(cache: dict, k_new: jax.Array, v_new: jax.Array,
     return {key: scatter(cache[key], new[key]) for key in cache}
 
 
-def cached_attention(q: jax.Array, cache: dict, start: jax.Array) -> jax.Array:
+def cached_attention(q: jax.Array, cache: dict, start: jax.Array,
+                     window: Optional[int] = None) -> jax.Array:
     """q: (B, Sq, Hq, hd) queries at absolute positions start..start+Sq-1,
     attending a cache that already holds positions [0, start+Sq).
 
@@ -162,38 +164,13 @@ def cached_attention(q: jax.Array, cache: dict, start: jax.Array) -> jax.Array:
     prefill therefore produces bit-identical logits to a whole-prompt prefill,
     which is what makes engine output token-identical to the serial path.
 
-    Masked full-cache einsum: O(S) memory traffic (the decode bottleneck the
-    INT8 cache halves). Softmax reductions over the (possibly model-sharded)
-    S axis lower to small cross-shard all-reduces.
-    """
-    b, sq, hq, hd = q.shape
-    quantized = "k_q" in cache
-    if quantized:
-        kf, vf = cache["k_q"], cache["v_q"]              # int8, dequant via scores
-    else:
-        kf, vf = cache["k"], cache["v"]
-    skv, hkv = kf.shape[1], kf.shape[2]
-    g = hq // hkv
-    qg = (q.reshape(b, sq, hkv, g, hd).astype(jnp.float32) * hd ** -0.5
-          ).astype(L.COMPUTE_DTYPE)
-    # scores: (B, Sq, Hkv, G, S). For the int8 cache the per-(pos,head) scale
-    # is applied to the score/probability matrices (size B·H·Sq·S) instead of
-    # the cache (size B·H·S·hd): the cache itself is only ever read as int8.
-    s = jnp.einsum("bqhgd,bchd->bqhgc", qg, kf.astype(L.COMPUTE_DTYPE),
-                   preferred_element_type=jnp.float32)
-    if quantized:
-        s = s * jnp.transpose(cache["k_s"], (0, 2, 1))[:, None, :, None, :]
-    limit = (jnp.broadcast_to(jnp.asarray(start), (b,))[:, None]
-             + jnp.arange(sq)[None, :])                  # (B, Sq) last visible
-    mask = jnp.arange(skv)[None, None, :] <= limit[..., None]   # (B, Sq, S)
-    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    if quantized:
-        p = p * jnp.transpose(cache["v_s"], (0, 2, 1))[:, None, :, None, :]
-    out = jnp.einsum("bqhgc,bchd->bqhgd", p.astype(L.COMPUTE_DTYPE),
-                     vf.astype(L.COMPUTE_DTYPE),
-                     preferred_element_type=jnp.float32)
-    return out.reshape(b, sq, hq, hd).astype(L.COMPUTE_DTYPE)
+    ``window`` (STATIC int, host-bucketed >= start+Sq, None = full buffer)
+    restricts the masked einsum (``kernels.ops.cached_attention``) to the
+    visible prefix, so traffic is O(window) instead of O(max_seq) — positions
+    past the window contribute exp(-inf) = 0 exactly, keeping the windowed
+    path bit-identical to the full-mask einsum. The INT8 cache is read as
+    int8; per-(pos,head) dequant rides on the score/probability matrices."""
+    return ops.cached_attention(q, cache, start, window)
 
 
 # ------------------------------------------------------------------ block fwd
@@ -220,11 +197,22 @@ def _context_parallel(q, k, v, ctx):
 def attention_forward(p: dict, cfg, x: jax.Array, positions: jax.Array,
                       cache: Optional[dict] = None,
                       cur_len: Optional[jax.Array] = None,
-                      ctx=None) -> Tuple[jax.Array, Optional[dict]]:
+                      ctx=None, window: Optional[int] = None,
+                      decode: Optional[bool] = None,
+                      ) -> Tuple[jax.Array, Optional[dict]]:
     """Full attention sub-block (no norm/residual — block owns those).
 
     Train/prefill: cache is None -> flash path (optionally returns nothing).
     Decode: cache given, x is (B, 1, d), cur_len = tokens already in cache.
+    ``window``: static visible-window bound (see ``cached_attention``) —
+    cache writes always hit the full buffer, only the attend is windowed.
+    ``decode``: static; True routes the attend to the backend
+    ``decode_attention`` primitive, False keeps the einsum, None infers
+    S==1. Prefill callers MUST pass False: a 1-token prefill tail chunk is
+    shape-indistinguishable from decode, but it must take the same einsum
+    path as whole-prompt prefill or the engine's token-identity contract
+    breaks on backends whose decode kernel is not bitwise the einsum
+    (pallas/ref online softmax).
     """
     hd = cfg.resolved_head_dim
     b, s, _ = x.shape
@@ -249,11 +237,18 @@ def attention_forward(p: dict, cfg, x: jax.Array, positions: jax.Array,
         o = flash_attention(q, k, v, causal=True, chunk_kv=cfg.attn_chunk_kv)
         new_cache = None
     else:
-        # cache-filling prefill (s > 1) and decode (s == 1) share one path:
-        # write K/V, then attend the cache with per-query causal limits.
-        # Chunked prefill continuation (cur_len > 0) needs the cache read —
-        # a local flash attend would miss the earlier chunks.
+        # cache-filling prefill (s > 1) and decode (s == 1) share the same
+        # semantics: write K/V, then attend the cache with per-query causal
+        # limits. Decode (single query) dispatches to the backend registry's
+        # ``decode_attention`` primitive (split-KV Pallas kernel on TPU; the
+        # xla fallback is the identical Sq=1 einsum). Chunked prefill
+        # continuation (cur_len > 0) needs the cache read — a local flash
+        # attend would miss the earlier chunks.
         new_cache = update_kv_cache(cache, k, v, cur_len)
-        o = cached_attention(q, new_cache, cur_len)
+        if (decode if decode is not None else s == 1):
+            assert s == 1, f"decode attend requires a single query, got {s}"
+            o = ops.decode_attention(q, new_cache, cur_len, window)
+        else:
+            o = cached_attention(q, new_cache, cur_len, window)
     out = L.dense(o.reshape(b, s, n_heads * hd), p["wo"])
     return out, new_cache

@@ -122,12 +122,14 @@ def _ffn_part(p: dict, cfg, x, is_moe: bool, ctx, with_aux: bool):
 
 
 def _block_forward(kind: str, is_moe: bool, p: dict, cfg, x, positions, ctx,
-                   cache=None, cur_len=None, with_aux: bool = False):
+                   cache=None, cur_len=None, with_aux: bool = False,
+                   window=None, decode=None):
     h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
     new_cache = cache
     if kind == "attn":
         a, new_cache = A.attention_forward(p["attn"], cfg, h, positions,
-                                           cache, cur_len, ctx)
+                                           cache, cur_len, ctx, window,
+                                           decode)
         x = x + a
         x, aux = _ffn_part(p, cfg, x, is_moe, ctx, with_aux)
     elif kind == "mamba":
@@ -307,7 +309,9 @@ def init_decode_state(cfg, batch: int, max_seq: int,
 
 def decode_step(params: dict, cfg, state: dict, tokens: jax.Array,
                 ctx: Optional[RunContext] = None,
-                embeds: Optional[jax.Array] = None) -> Tuple[jax.Array, dict]:
+                embeds: Optional[jax.Array] = None,
+                window: Optional[int] = None,
+                decode: Optional[bool] = None) -> Tuple[jax.Array, dict]:
     """tokens: (B, S_new) (S_new=1 for decode, >1 for cache-filling prefill).
 
     ``state["pos"]`` is a scalar (whole batch at one position — the serial
@@ -318,7 +322,18 @@ def decode_step(params: dict, cfg, state: dict, tokens: jax.Array,
     need no change.
 
     ``embeds``: optional precomputed frontend embeddings, prepended during
-    prefill (VLM patches / audio frames). Returns (logits, new state)."""
+    prefill (VLM patches / audio frames).
+
+    ``window``: STATIC visible-window bound on KV-cache attends (host-side
+    callers bucket ``max(pos)+S_new`` up to a block multiple — the engine's
+    length-aware path); None attends the whole ``max_seq`` buffer. Windowed
+    and full attends are bit-identical (masked positions contribute exact
+    zeros); jitted callers must mark ``window`` static.
+
+    ``decode``: STATIC decode-vs-prefill routing for the KV attend (None =
+    infer S_new==1). Cache-continuation *prefill* callers must pass False
+    even for 1-token tail chunks — see ``attention_forward``. Returns
+    (logits, new state)."""
     ctx = ctx or default_ctx()
     x = L.embed_lookup(params["embed"], tokens)
     if embeds is not None and cfg.frontend.kind != "none":
@@ -337,7 +352,8 @@ def decode_step(params: dict, cfg, state: dict, tokens: jax.Array,
         new_caches = []
         for j, (kind, is_moe) in enumerate(spec):
             x, nc, _ = _block_forward(kind, is_moe, block_params[j], cfg, x,
-                                      positions, ctx, caches[j], cur)
+                                      positions, ctx, caches[j], cur,
+                                      window=window, decode=decode)
             new_caches.append(nc)
         return x, tuple(new_caches)
 

@@ -8,22 +8,37 @@ request. All device work goes through exactly three jitted callables with a
 **static slot count**:
 
   _reset_fn  (pool, slot, template)          admission: zero one slot
-  _prefill_fn(params, pool, slot, chunk)     one prompt chunk into one slot
-  _decode_fn (params, pool, tokens, active)  one batched step, all live slots
+  _prefill_fn(params, pool, slot, chunk, window)
+                                             one prompt chunk into one slot
+  _decode_fn (params, pool, tokens, active, eos, budget, window)
+                                             ``decode_steps`` batched steps
+                                             entirely on device (lax.scan)
 
 so steady-state serving never retraces (prefill compiles once per distinct
-chunk length — the tail chunk keeps its exact size because padded prompt
-tokens would change outputs). The state pool is built on
-``init_decode_state(..., params=...)``: HQP-compacted artifacts size their
-own caches, and ``QuantizedLinear`` weights dispatch through the
-kernels/backend registry exactly as on the serial path.
+(chunk length, window bucket); decode once per window bucket). The state
+pool is built on ``init_decode_state(..., params=...)``: HQP-compacted
+artifacts size their own caches, and ``QuantizedLinear`` weights dispatch
+through the kernels/backend registry exactly as on the serial path.
+
+Two length-aware fast paths (DESIGN.md §10):
+
+  * every KV attend carries a STATIC ``window`` — the live sequence bound
+    bucketed to ``SchedulerConfig.window_block`` — so decode/prefill traffic
+    scales with actual sequence length, not cache capacity;
+  * decode runs ``SchedulerConfig.decode_steps`` greedy steps per dispatch
+    inside a jitted ``lax.scan``: on-device argmax, token feedback, and
+    per-slot EOS/length stop flags (stopped slots are select-masked frozen),
+    with ONE host sync per scan to harvest the emitted tokens — not one per
+    token (``stats["host_syncs"]`` vs ``stats["device_steps"]`` makes the
+    ratio observable).
 
 Token-identity contract: engine outputs are bit-identical to serial
 single-request decode because (a) every per-slot computation is independent
-across the batch axis, (b) chunked prefill attends the cache with the same
-``cached_attention`` masked einsum the serial path uses (chunking cannot
-change any logit), and (c) inactive slots are select-masked back to their
-pre-step state after every batched decode.
+across the batch axis, (b) chunked prefill and decode attend the cache with
+the same numerics the serial path uses — the masked einsum, windowed or not,
+yields bit-identical logits (out-of-window positions contribute exact
+zeros) — and (c) inactive/stopped slots are select-masked back to their
+pre-step state after every batched decode step, on device.
 """
 from __future__ import annotations
 
@@ -115,25 +130,55 @@ class Engine:
         self._uid = itertools.count()
         self.ticks = 0
         self.stats = {"prefill_ticks": 0, "decode_ticks": 0,
-                      "decode_slot_steps": 0, "prefill_tokens": 0}
+                      "decode_slot_steps": 0, "prefill_tokens": 0,
+                      "host_syncs": 0, "device_steps": 0}
 
         cfg_, ctx_ = self.cfg, self.ctx
+        decode_steps = self.scheduler.cfg.decode_steps
 
         def _reset(pool, slot, template):
             return sp.reset_slot(pool, slot, template)
 
-        def _prefill(params, pool, slot, chunk):
+        def _prefill(params, pool, slot, chunk, window):
             st = sp.gather_slot(pool, slot)
-            logits, new = lm.decode_step(params, cfg_, st, chunk, ctx_)
+            # decode=False: a 1-token tail chunk must take the same einsum
+            # path as serial whole-prompt prefill, not the decode kernel —
+            # on pallas/ref the kernel's online softmax is only
+            # tolerance-equal, which would break token identity
+            logits, new = lm.decode_step(params, cfg_, st, chunk, ctx_,
+                                         window=window, decode=False)
             return logits[:, -1], sp.scatter_slot(pool, slot, new)
 
-        def _decode(params, pool, tokens, active):
-            logits, new = lm.decode_step(params, cfg_, pool, tokens, ctx_)
-            return logits[:, -1], sp.select_slots(new, pool, active)
+        def _decode(params, pool, tokens, active, eos, budget, window):
+            """``decode_steps`` greedy steps on device. tokens (B, 1) i32 =
+            each live slot's last emitted token; active (B,) bool; eos (B,)
+            i32 (-1 = no EOS id); budget (B,) i32 = tokens the slot may
+            still emit. Returns (toks (K, B), emitted (K, B) bool, pool):
+            ``emitted[t, i]`` marks a real token — slots that hit EOS or
+            exhaust their budget mid-scan are frozen (select-masked) for the
+            remaining steps, exactly as the host's eviction logic would."""
+            def body(carry, _):
+                pool, tok, live, left = carry
+                logits, new = lm.decode_step(params, cfg_, pool, tok, ctx_,
+                                             window=window, decode=True)
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                pool = sp.select_slots(new, pool, live)
+                left = jnp.where(live, left - 1, left)
+                stop = ((eos >= 0) & (nxt == eos)) | (left <= 0)
+                return ((pool, jnp.where(live, nxt, tok[:, 0])[:, None],
+                         live & ~stop, left),
+                        (jnp.where(live, nxt, 0), live))
+
+            (pool, _, _, _), (toks, emitted) = jax.lax.scan(
+                body, (pool, tokens, active, budget), None,
+                length=decode_steps)
+            return toks, emitted, pool
 
         self._reset_fn = jax.jit(_reset, donate_argnums=(0,))
-        self._prefill_fn = jax.jit(_prefill, donate_argnums=(1,))
-        self._decode_fn = jax.jit(_decode, donate_argnums=(1,))
+        self._prefill_fn = jax.jit(_prefill, donate_argnums=(1,),
+                                   static_argnums=(4,))
+        self._decode_fn = jax.jit(_decode, donate_argnums=(1,),
+                                  static_argnums=(6,))
 
     # ------------------------------------------------------------- lifecycle
     def submit(self, request: Request) -> int:
@@ -202,9 +247,16 @@ class Engine:
             slot.stage = DECODE
 
     # ------------------------------------------------------------------ step
+    def _slot_pos(self, slot: _Slot) -> int:
+        """Cache position the slot's next decode step writes at (the engine's
+        host-side mirror of ``pool["pos"][slot.idx]``): the whole prompt plus
+        every emitted token except the newest (whose KV isn't written yet)."""
+        return int(slot.prompt.size) + len(slot.result.tokens) - 1
+
     def step(self) -> List[RequestResult]:
-        """One engine tick: admit, then run one scheduler action. Returns
-        requests that finished this tick."""
+        """One engine tick: admit, then run one scheduler action (a decode
+        action runs ``decode_steps`` device steps). Returns requests that
+        finished this tick."""
         self._admit()
         prefilling = [s.idx for s in self.slots if s.stage == PREFILL]
         decoding = [s.idx for s in self.slots if s.stage == DECODE]
@@ -216,28 +268,47 @@ class Engine:
             lo, hi = self.scheduler.chunk_bounds(slot.prompt.size,
                                                  slot.prefill_done)
             chunk = jnp.asarray(slot.prompt[None, lo:hi])
+            window = self.scheduler.visible_window(hi, self.max_seq)
             last_logits, self.pool = self._prefill_fn(
-                self.params, self.pool, jnp.int32(slot.idx), chunk)
+                self.params, self.pool, jnp.int32(slot.idx), chunk, window)
             slot.prefill_done = hi
             self.stats["prefill_ticks"] += 1
             self.stats["prefill_tokens"] += hi - lo
             if hi == slot.prompt.size:
                 tok = int(np.argmax(np.asarray(last_logits[0])))
+                self.stats["host_syncs"] += 1
                 self._emit(slot, tok, finished)
         elif action.kind == DECODE:
+            k_steps = self.scheduler.cfg.decode_steps
             tokens = np.zeros((self.n_slots, 1), np.int32)
             active = np.zeros((self.n_slots,), bool)
+            eos = np.full((self.n_slots,), -1, np.int32)
+            budget = np.ones((self.n_slots,), np.int32)
             for i in action.slots:
-                tokens[i, 0] = self.slots[i].last_token
+                slot = self.slots[i]
+                tokens[i, 0] = slot.last_token
                 active[i] = True
-            logits, self.pool = self._decode_fn(
+                if slot.eos_id is not None:
+                    eos[i] = slot.eos_id
+                budget[i] = slot.max_new_tokens - len(slot.result.tokens)
+            # the deepest live slot after k_steps attends positions
+            # <= max(pos) + k_steps - 1  ->  window covers max(pos) + k_steps
+            needed = max(self._slot_pos(self.slots[i])
+                         for i in action.slots) + k_steps
+            window = self.scheduler.visible_window(needed, self.max_seq)
+            toks, emitted, self.pool = self._decode_fn(
                 self.params, self.pool, jnp.asarray(tokens),
-                jnp.asarray(active))
-            toks = np.asarray(jnp.argmax(logits, axis=-1))
-            for i in action.slots:
-                self._emit(self.slots[i], int(toks[i]), finished)
+                jnp.asarray(active), jnp.asarray(eos), jnp.asarray(budget),
+                window)
+            toks, emitted = np.asarray(toks), np.asarray(emitted)
+            self.stats["host_syncs"] += 1
+            self.stats["device_steps"] += k_steps
+            for t in range(k_steps):
+                for i in action.slots:
+                    if emitted[t, i]:
+                        self._emit(self.slots[i], int(toks[t, i]), finished)
             self.stats["decode_ticks"] += 1
-            self.stats["decode_slot_steps"] += len(action.slots)
+            self.stats["decode_slot_steps"] += int(emitted.sum())
 
         self.ticks += 1
         return finished
@@ -278,7 +349,9 @@ class Engine:
                     results[uid_to_index[res.uid]] = res
             elif pending:
                 if by_wall:
-                    time.sleep(min(1e-3, max(0.0, pending[0][0] - now)))
+                    # idle engine: sleep until the next arrival is actually
+                    # due (a fixed cap here was a 1 ms busy-wait per loop)
+                    time.sleep(max(0.0, pending[0][0] - now))
                 else:
                     self.ticks += 1     # idle tick until the next arrival
         return results
@@ -288,7 +361,14 @@ class Engine:
 def summarize_results(results: Dict[int, RequestResult],
                       wall_s: float) -> Dict[str, float]:
     """Throughput + nearest-rank latency/TTFT percentiles over a finished
-    result set (shared by `serve --engine` and the serving bench)."""
+    result set (shared by `serve --engine` and the serving bench). An empty
+    result set (a bench variant whose requests all failed admission, or a
+    zero-request trace) yields a zeroed summary instead of an IndexError
+    from the nearest-rank lookup."""
+    if not results:
+        return {"n_requests": 0, "out_tokens": 0, "tokens_per_s": 0.0,
+                "latency_p50_ms": 0.0, "latency_p95_ms": 0.0,
+                "ttft_p50_ms": 0.0, "ttft_p95_ms": 0.0}
     lat = sorted(r.latency_s for r in results.values())
     ttft = sorted(r.ttft_s for r in results.values())
 

@@ -9,8 +9,12 @@ the next device action. Invariants (see DESIGN.md §9):
   * prefill has priority over decode (round-robin across prefilling slots),
     so a newly admitted request reaches its first token in
     ceil(prompt/chunk) ticks regardless of how many slots are decoding;
-  * decode is one batched step over *all* decoding slots — slots never run
-    separate decode dispatches;
+  * decode is one batched dispatch over *all* decoding slots — slots never
+    run separate decode dispatches — and each dispatch runs ``decode_steps``
+    device steps before syncing tokens back to the host;
+  * every KV attend carries a static visible window: the live length bound
+    bucketed up to ``window_block`` (``visible_window``), so attend traffic
+    and compile count both stay bounded;
   * admission is eager: a free slot + a waiting request always admits before
     the tick's action is chosen (the engine owns admission; the scheduler
     only sequences work already placed in slots).
@@ -28,6 +32,13 @@ IDLE = "idle"
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
     prefill_chunk: int = 16     # max prompt tokens per prefill dispatch
+    decode_steps: int = 4       # device decode steps per host sync (lax.scan
+                                # length inside Engine._decode_fn; 1 = the
+                                # per-tick-sync legacy behavior)
+    window_block: int = 16      # visible-window bucket: KV attends read
+                                # ceil(needed/window_block) blocks, and each
+                                # distinct bucket compiles one executable
+                                # (<= max_seq/window_block variants total)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,3 +75,10 @@ class Scheduler:
         lo = done
         hi = min(prompt_len, done + self.cfg.prefill_chunk)
         return lo, hi
+
+    def visible_window(self, needed: int, max_seq: int) -> int:
+        """Static KV-attend window for a dispatch that reads cache positions
+        [0, needed): ``needed`` bucketed up to a ``window_block`` multiple
+        (bounding recompiles) and clamped to the cache capacity."""
+        wb = self.cfg.window_block
+        return min(max_seq, max(wb, -(-needed // wb) * wb))

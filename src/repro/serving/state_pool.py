@@ -80,9 +80,12 @@ def select_slots(new: Dict[str, Any], old: Dict[str, Any],
                  active: jax.Array) -> Dict[str, Any]:
     """Per-slot select: keep ``new`` where ``active`` (B,) bool, else ``old``.
 
-    Applied after a batched decode step so inactive slots (free, or parked
-    mid-prefill) are bit-untouched — without this, the dummy tokens fed to
-    inactive slots would pollute their recurrent states and creep ``pos``."""
+    Applied after every batched decode step — including each iteration of
+    the engine's multi-step on-device ``lax.scan``, where ``active`` is the
+    live mask (slots that hit EOS or their token budget mid-scan freeze
+    here) — so inactive slots are bit-untouched: without this, the dummy
+    tokens fed to them would pollute their recurrent states and creep
+    ``pos``."""
     def sel(n, o):
         mask = active.reshape((1, -1) + (1,) * (n.ndim - 2))
         return jnp.where(mask, n, o)

@@ -1,0 +1,180 @@
+"""Length-aware decode/prefill attention: the windowed paths must be
+BIT-IDENTICAL to the full-mask einsum (out-of-window positions contribute
+exact zeros), and the ``decode_attention`` backend primitive must agree with
+that oracle on every registered backend — bitwise on ``xla`` (it is the same
+einsum), within f32 tolerance on ``ref`` (the Pallas split-KV kernel in
+interpret mode, online softmax). This is the regression suite behind the
+engine's token-identity contract under windowing + multi-step decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.backend import available, get_backend, set_backend
+from repro.models import attention as A
+
+B, HQ, HKV, HD = 3, 8, 4, 32
+BLOCK = 16
+
+
+def _cache(key, max_seq, quantized):
+    ks = jax.random.split(key, 4)
+    if quantized:
+        return {
+            "k_q": jax.random.randint(ks[0], (B, max_seq, HKV, HD),
+                                      -127, 128, jnp.int8),
+            "v_q": jax.random.randint(ks[1], (B, max_seq, HKV, HD),
+                                      -127, 128, jnp.int8),
+            "k_s": jax.random.uniform(ks[2], (B, max_seq, HKV),
+                                      jnp.float32, 0.01, 0.1),
+            "v_s": jax.random.uniform(ks[3], (B, max_seq, HKV),
+                                      jnp.float32, 0.01, 0.1),
+        }
+    return {"k": jax.random.normal(ks[0], (B, max_seq, HKV, HD),
+                                   jnp.bfloat16),
+            "v": jax.random.normal(ks[1], (B, max_seq, HKV, HD),
+                                   jnp.bfloat16)}
+
+
+def _starts(per_slot, sq, max_seq):
+    """Per-slot positions spread across the cache (or one scalar); the
+    deepest slot pins the window to a non-trivial fraction of max_seq."""
+    hi = max_seq // 2 - sq
+    if per_slot:
+        return jnp.asarray([1, hi // 2, hi], jnp.int32)
+    return jnp.int32(hi)
+
+
+def _window(start, sq, max_seq):
+    needed = int(jnp.max(jnp.asarray(start))) + sq
+    return min(max_seq, -(-needed // BLOCK) * BLOCK)
+
+
+@pytest.mark.parametrize("max_seq", [32, 64, 160])
+@pytest.mark.parametrize("sq", [1, 5])
+@pytest.mark.parametrize("per_slot", [False, True])
+@pytest.mark.parametrize("quantized", [False, True])
+def test_windowed_cached_attention_bit_identical(quantized, per_slot, sq,
+                                                 max_seq):
+    """cached_attention(window=W) == cached_attention(window=None) bitwise,
+    for W >= start+Sq: the length-aware slice may not change one ulp."""
+    key = jax.random.PRNGKey(max_seq * 7 + sq)
+    cache = _cache(key, max_seq, quantized)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, sq, HQ, HD),
+                          jnp.bfloat16)
+    start = _starts(per_slot, sq, max_seq)
+    full = A.cached_attention(q, cache, start)
+    win = _window(start, sq, max_seq)
+    assert win < max_seq or max_seq == 32   # the sweep must actually slice
+    windowed = A.cached_attention(q, cache, start, window=win)
+    np.testing.assert_array_equal(np.asarray(full, np.float32),
+                                  np.asarray(windowed, np.float32))
+
+
+@pytest.mark.parametrize("max_seq", [32, 96])
+@pytest.mark.parametrize("per_slot", [False, True])
+@pytest.mark.parametrize("quantized", [False, True])
+def test_decode_attention_xla_bitwise_vs_einsum(quantized, per_slot, max_seq):
+    """The xla backend's decode primitive is literally the Sq=1 slice of the
+    prefill einsum — bitwise, windowed or not. Token identity between the
+    engine (decode primitive) and serial decode hinges on this."""
+    key = jax.random.PRNGKey(max_seq)
+    cache = _cache(key, max_seq, quantized)
+    q = jax.random.normal(jax.random.fold_in(key, 2), (B, 1, HQ, HD),
+                          jnp.bfloat16)
+    start = _starts(per_slot, 1, max_seq)
+    oracle = A.cached_attention(q, cache, start)
+    prev = set_backend("xla")
+    try:
+        for win in (None, _window(start, 1, max_seq)):
+            out = ops.decode_attention(q, cache, start, window=win)
+            np.testing.assert_array_equal(np.asarray(oracle, np.float32),
+                                          np.asarray(out, np.float32))
+    finally:
+        set_backend(prev)
+
+
+@pytest.mark.parametrize("bk", [16, 64])
+@pytest.mark.parametrize("per_slot", [False, True])
+@pytest.mark.parametrize("quantized", [False, True])
+def test_decode_attention_ref_kernel_vs_einsum(quantized, per_slot, bk):
+    """Pallas split-KV kernel (interpret mode) vs the einsum oracle, f32
+    tolerance: exercises the per-slot block skip (slots at different depths),
+    the KV-tail padding mask, and the fused INT8 dequant epilogue."""
+    from repro.kernels.decode_attention import decode_attention_pallas
+    max_seq = 80                       # not a multiple of 64: padded tail
+    key = jax.random.PRNGKey(bk)
+    cache = _cache(key, max_seq, quantized)
+    q = jax.random.normal(jax.random.fold_in(key, 3), (B, 1, HQ, HD),
+                          jnp.bfloat16)
+    start = jnp.broadcast_to(_starts(per_slot, 1, max_seq), (B,))
+    oracle = A.cached_attention(q, cache, start)
+    if quantized:
+        args = (cache["k_q"], cache["v_q"], cache["k_s"], cache["v_s"])
+    else:
+        args = (cache["k"], cache["v"], None, None)
+    out = decode_attention_pallas(q[:, 0], *args, start, bk=bk,
+                                  interpret=True)
+    # int8 path: the oracle rounds probabilities AND dequantized V to bf16
+    # before its dot while the kernel accumulates f32 — values span ~±12
+    # (127 * 0.1 scale), so bf16 rounding alone is ~0.05 absolute
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(oracle[:, 0], np.float32),
+                               rtol=3e-2, atol=1e-1 if quantized else 3e-2)
+
+
+def test_one_token_prefill_chunk_stays_on_einsum_path():
+    """A 1-token cache-continuation prefill chunk is shape-identical to a
+    decode step, but it must be routed by the STATIC ``decode=False`` flag
+    to the einsum path: on the ref/pallas backends the decode kernel is only
+    tolerance-equal, and a tail chunk through it would break the engine's
+    bit-level token-identity contract vs serial whole-prompt prefill."""
+    from repro import configs
+    from repro.models import lm
+    cfg = configs.get_smoke_config("qwen3-0.6b")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 9), 0,
+                              cfg.vocab_size)
+    prev = set_backend("ref")       # backend whose decode kernel != einsum
+    try:
+        state = lm.init_decode_state(cfg, 1, 32)
+        full, _ = lm.decode_step(params, cfg, state, toks)
+        state2 = lm.init_decode_state(cfg, 1, 32)
+        _, state2 = lm.decode_step(params, cfg, state2, toks[:, :8],
+                                   decode=False)
+        last, _ = lm.decode_step(params, cfg, state2, toks[:, 8:],
+                                 decode=False)   # the 1-token tail chunk
+        np.testing.assert_array_equal(np.asarray(full[:, -1], np.float32),
+                                      np.asarray(last[:, 0], np.float32))
+    finally:
+        set_backend(prev)
+
+
+def test_decode_attention_registered_on_all_backends():
+    """Every registered backend exposes the decode primitive; every backend
+    that can execute on this platform (compiled `pallas` needs a real TPU;
+    `ref` runs the same kernel interpreted anywhere) produces a finite,
+    well-shaped result agreeing with `xla` within f32 tolerance."""
+    assert set(available()) == {"pallas", "xla", "ref"}
+    for name in available():
+        assert callable(get_backend(name).decode_attention)
+    key = jax.random.PRNGKey(9)
+    cache = _cache(key, 32, False)
+    q = jax.random.normal(key, (B, 1, HQ, HD), jnp.bfloat16)
+    start = jnp.asarray([0, 5, 31], jnp.int32)
+    # the compiled (non-interpret) pallas kernel only lowers on real TPU
+    run = ["xla", "ref"] + (["pallas"] if jax.default_backend() == "tpu"
+                            else [])
+    outs = {}
+    for name in run:
+        prev = set_backend(name)
+        try:
+            outs[name] = np.asarray(
+                ops.decode_attention(q, cache, start), np.float32)
+        finally:
+            set_backend(prev)
+        assert outs[name].shape == (B, 1, HQ, HD)
+        assert np.all(np.isfinite(outs[name]))
+        np.testing.assert_allclose(outs[name], outs["xla"],
+                                   rtol=3e-2, atol=3e-2)

@@ -133,6 +133,9 @@ def test_flash_attention_property(s, hd, seed):
 
 
 def test_int8_decode_attention_ref_close_to_fp():
+    """decode_attention_ref on a quantized KV cache (int8 + per-(pos,head)
+    scales, dequant fused on the score/probability side) must approximate
+    full-precision attention within quantization error."""
     key = jax.random.PRNGKey(11)
     ks = jax.random.split(key, 3)
     b, s, h, hd = 2, 64, 4, 32
@@ -142,8 +145,8 @@ def test_int8_decode_attention_ref_close_to_fp():
     from repro.models.attention import _quant_kv
     kq, ksc = _quant_kv(kc)
     vq, vsc = _quant_kv(vc)
-    out = ref.int8_decode_attention_ref(q, kq, vq, ksc, vsc,
-                                        jnp.asarray(s))
+    out = ref.decode_attention_ref(q, kq, vq, ksc, vsc,
+                                   jnp.full((b,), s - 1, jnp.int32))
     # fp reference via naive attention on last position
     scores = np.einsum("bhd,bshd->bhs", np.asarray(q), np.asarray(kc)) / np.sqrt(hd)
     p = np.exp(scores - scores.max(-1, keepdims=True))

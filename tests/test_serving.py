@@ -175,6 +175,54 @@ def test_run_twice_keeps_staggered_arrivals(setup):
     assert eng.ticks - ticks_after_warmup >= 500
 
 
+# ------------------------------------------------------------ multi-step
+def test_multi_step_decode_token_identical_and_fewer_syncs(setup):
+    """decode_steps=8: EOS and length stops land mid-scan (max_new_tokens=6
+    is not a multiple of 8), outputs stay token-identical to serial decode,
+    and the host syncs far less often than it runs device decode steps."""
+    cfg, params = setup
+    prompts = _prompts(cfg, [9, 5, 14], seed=7)
+    # make request 0 stop via EOS partway through its budget
+    eos_tok = serial_decode(params, cfg, prompts[0], 3, max_seq=64)[2]
+    eng = Engine(params, cfg, n_slots=3, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=4, decode_steps=8))
+    reqs = [Request(prompt=prompts[0], max_new_tokens=6, eos_id=eos_tok),
+            Request(prompt=prompts[1], max_new_tokens=6),
+            Request(prompt=prompts[2], max_new_tokens=6)]
+    results = eng.run(reqs)
+    for i, req in enumerate(reqs):
+        ref = serial_decode(params, cfg, req.prompt, req.max_new_tokens,
+                            max_seq=64, eos_id=req.eos_id)
+        assert results[i].tokens == ref, (i, results[i].tokens, ref)
+    assert results[0].finish_reason == "eos"
+    assert eng.stats["device_steps"] == 8 * eng.stats["decode_ticks"]
+    # the whole point: decode tokens arrive in far fewer syncs than steps
+    assert eng.stats["host_syncs"] < eng.stats["device_steps"]
+    assert eng.stats["decode_slot_steps"] <= eng.stats["device_steps"] * 3
+
+
+def test_decode_steps_one_matches_multi(setup):
+    """decode_steps=1 (the legacy per-token-sync regime) and the default
+    multi-step loop must produce identical tokens for identical loads."""
+    cfg, params = setup
+    prompts = _prompts(cfg, [7, 11], seed=8)
+    outs = []
+    for ds in (1, 4):
+        eng = Engine(params, cfg, n_slots=2, max_seq=64,
+                     sched=SchedulerConfig(prefill_chunk=4, decode_steps=ds))
+        res = eng.run([Request(prompt=p, max_new_tokens=5) for p in prompts])
+        outs.append({i: r.tokens for i, r in res.items()})
+    assert outs[0] == outs[1]
+
+
+def test_summarize_results_empty():
+    """A zero-request result set must summarize to zeros, not IndexError."""
+    from repro.serving import summarize_results
+    s = summarize_results({}, wall_s=1.0)
+    assert s["n_requests"] == 0 and s["tokens_per_s"] == 0.0
+    assert s["latency_p95_ms"] == 0.0 and s["ttft_p50_ms"] == 0.0
+
+
 # ----------------------------------------------------------------- launcher
 def test_load_artifact_serves_without_calibration(setup, tmp_path,
                                                   monkeypatch):

@@ -5,12 +5,19 @@
 Fails (exit 1) on: missing/unparseable file, wrong schema tag, zero rows,
 bench errors recorded, a serving payload with non-positive throughput /
 inverted percentiles / missing artifact bytes (variants with zero completed
-requests are tolerated — they report a zeroed summary, not a crash), or a
-``decode_attention/xla_win/*`` sweep whose ms/step grows more than
-DECODE_FLAT_MAX from the smallest to the largest ``max_seq`` — the windowed
-decode path must scale with live length, not cache capacity. CI uploads the
-file only after this gate passes, so the uploaded trajectory is never
-silently empty.
+requests are tolerated — they report a zeroed summary, not a crash), a
+``decode_attention/xla_win/*`` or ``prefill_attention/xla_win/*`` sweep
+whose ms/step (ms/chunk) grows more than FLAT_MAX from the smallest to the
+largest ``max_seq`` — the windowed attends must scale with live length, not
+cache capacity — or a prefill primitive costing more than
+PREFILL_RATIO_MAX x the WINDOWED einsum at every sweep point (the
+``xla_einsum`` rows time the windowed masked einsum — exactly the engine
+prefill hot path the primitive replaced; it may never be slower than what
+it replaced, judged at the least-noisy point since the comparison is
+length-independent on both sides). Gates read xla rows only; absent ``ref``
+rows (interpreter-overhead timings, or a bench subset that skipped them)
+are tolerated. CI uploads the file only after this gate passes, so the
+uploaded trajectory is never silently empty.
 """
 from __future__ import annotations
 
@@ -24,7 +31,10 @@ SERVING_SCHEMA = "repro-bench-serving/v1"
 SERVING_REQUIRED = ("tokens_per_s", "latency_p50_ms", "latency_p95_ms",
                     "ttft_p50_ms", "ttft_p95_ms", "param_bytes")
 DECODE_WIN_ROW = re.compile(r"^decode_attention/xla_win/S(\d+)$")
-DECODE_FLAT_MAX = 1.3
+PREFILL_WIN_ROW = re.compile(r"^prefill_attention/xla_win/S(\d+)$")
+PREFILL_EINSUM_ROW = re.compile(r"^prefill_attention/xla_einsum/S(\d+)$")
+FLAT_MAX = 1.3
+PREFILL_RATIO_MAX = 1.1
 
 
 def fail(msg: str) -> None:
@@ -54,30 +64,65 @@ def check_serving(s: dict) -> None:
             fail("hqp_int8 variant missing positive artifact_bytes")
 
 
-def check_decode_flat(rows: list) -> int:
-    """Windowed decode attention must be ~flat across the max_seq sweep: the
+def _sweep(rows: list, pattern) -> dict:
+    out = {}
+    for r in rows:
+        m = pattern.match(r.get("name", ""))
+        if m:
+            out[int(m.group(1))] = float(r["us_per_call"])
+    return out
+
+
+def check_flat(rows: list, pattern, label: str) -> int:
+    """A windowed KV attend must be ~flat across the max_seq sweep: the
     whole point of the length-aware path is that cost tracks the visible
     window, not cache capacity. Gated on the xla rows only (``ref`` rows are
     Pallas-interpreter overhead, not kernel speed)."""
-    win = {}
-    for r in rows:
-        m = DECODE_WIN_ROW.match(r.get("name", ""))
-        if m:
-            win[int(m.group(1))] = float(r["us_per_call"])
+    win = _sweep(rows, pattern)
     if not win:
         return 0
     if len(win) < 2:
-        fail(f"decode_attention sweep has {len(win)} xla_win row(s); "
+        fail(f"{label} sweep has {len(win)} xla_win row(s); "
              f"need >= 2 max_seq points to check flatness")
     lo, hi = min(win), max(win)
     ratio = win[hi] / max(win[lo], 1e-12)
-    if ratio > DECODE_FLAT_MAX:
-        fail(f"windowed decode attention is not length-aware: "
+    if ratio > FLAT_MAX:
+        fail(f"windowed {label} is not length-aware: "
              f"S{hi} costs {ratio:.2f}x S{lo} "
-             f"(limit {DECODE_FLAT_MAX}x; us={win})")
-    print(f"check_bench: decode_attention flat OK "
+             f"(limit {FLAT_MAX}x; us={win})")
+    print(f"check_bench: {label} flat OK "
           f"(S{lo}->S{hi}: {ratio:.2f}x over {len(win)} points)")
     return len(win)
+
+
+def check_prefill_ratio(rows: list) -> None:
+    """The prefill primitive replaced the WINDOWED masked einsum as the
+    engine's prefill hot path (``xla_einsum`` rows time that exact einsum,
+    same window — not the full-cache contrast row); the xla primitive may
+    cost at most PREFILL_RATIO_MAX x that baseline — anything more means
+    the swap made TTFT worse than what it replaced. Both sides are
+    window-fixed, so every max_seq sweep point measures the SAME
+    length-independent comparison; the gate takes the min ratio across
+    points (shared-runner noise only ever inflates one side of any single
+    point — the same reasoning as the benches' min-of-reps timer), while
+    genuine length-dependence is the flatness gate's job."""
+    win = _sweep(rows, PREFILL_WIN_ROW)
+    ein = _sweep(rows, PREFILL_EINSUM_ROW)
+    if not win and not ein:
+        return
+    common = sorted(set(win) & set(ein))
+    if not common:
+        fail("prefill_attention sweep has xla_win and xla_einsum rows with "
+             "no shared max_seq point to compare")
+    ratios = {s: win[s] / max(ein[s], 1e-12) for s in common}
+    s = min(ratios, key=ratios.get)
+    if ratios[s] > PREFILL_RATIO_MAX:
+        fail(f"prefill primitive is slower than the windowed einsum it "
+             f"replaced: best point {ratios[s]:.2f}x at S{s} (limit "
+             f"{PREFILL_RATIO_MAX}x; win_us={win} einsum_us={ein})")
+    print(f"check_bench: prefill kernel-vs-einsum OK "
+          f"(best {ratios[s]:.2f}x at S{s} over {len(common)} points, "
+          f"limit {PREFILL_RATIO_MAX}x)")
 
 
 def main(argv) -> int:
@@ -104,10 +149,13 @@ def main(argv) -> int:
         fail(f"bench errors: {doc['errors']}")
     if "serving" in doc:
         check_serving(doc["serving"])
-    n_decode = check_decode_flat(rows)
+    n_decode = check_flat(rows, DECODE_WIN_ROW, "decode_attention")
+    n_prefill = check_flat(rows, PREFILL_WIN_ROW, "prefill_attention")
+    check_prefill_ratio(rows)
     n_serving = sum(r["name"].startswith("serving/") for r in rows)
     print(f"check_bench: OK ({len(rows)} rows, {n_serving} serving, "
-          f"{n_decode} windowed-decode, benches={doc.get('benches')})")
+          f"{n_decode} windowed-decode, {n_prefill} windowed-prefill, "
+          f"benches={doc.get('benches')})")
     return 0
 
 

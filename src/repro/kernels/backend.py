@@ -35,12 +35,20 @@ class Backend:
                       (float, or int8 + (B, W, Hkv) f32 scales), (B,) int32
                       per-slot ``start`` -> (B, Hq, hd); the serving decode
                       hot path (split-KV flash decoding on pallas)
+    prefill_attention: (B, Sq, Hq, hd) q at absolute positions
+                      start..start+Sq-1 vs the same slotted KV window
+                      -> (B, Sq, Hq, hd); the serving chunked-prefill hot
+                      path (cache-continuation online-softmax kernel on
+                      pallas; on xla it IS ``cached_attention_ref`` — the
+                      token-identity hinge, exactly how ``decode_attention``
+                      landed)
     """
     name: str
     quantize_rowwise: Callable
     int8_matmul: Callable
     flash_attention: Callable
     decode_attention: Callable
+    prefill_attention: Callable
 
 
 _REGISTRY: Dict[str, Backend] = {}
@@ -90,6 +98,9 @@ def _xla_backend() -> Backend:
         flash_attention=lambda q, k, v: ref.flash_attention_ref(
             q, k, v, causal=True),
         decode_attention=ref.decode_attention_ref,
+        # verbatim the masked einsum: serial prefill, chunked engine prefill,
+        # and the Sq=1 decode slice all share one set of numerics bit-for-bit
+        prefill_attention=ref.cached_attention_ref,
     )
 
 
@@ -109,6 +120,7 @@ def _pallas_backend(interpret: bool) -> Backend:
     from repro.kernels.decode_attention import decode_attention_pallas
     from repro.kernels.flash_attention import flash_attention_pallas
     from repro.kernels.int8_matmul import int8_matmul_pallas
+    from repro.kernels.prefill_attention import prefill_attention_pallas
     from repro.kernels.quantize import quantize_rowwise_pallas
     return Backend(
         name="ref" if interpret else "pallas",
@@ -121,6 +133,9 @@ def _pallas_backend(interpret: bool) -> Backend:
         decode_attention=lambda q, k, v, k_s, v_s, start:
             decode_attention_pallas(q, k, v, k_s, v_s, start,
                                     interpret=interpret),
+        prefill_attention=lambda q, k, v, k_s, v_s, start:
+            prefill_attention_pallas(q, k, v, k_s, v_s, start,
+                                     interpret=interpret),
     )
 
 

@@ -32,11 +32,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# renamed across jax versions (TPUCompilerParams -> CompilerParams)
-_CompilerParams = getattr(pltpu, "CompilerParams",
-                          getattr(pltpu, "TPUCompilerParams", None))
-
-NEG_INF = -1e30
+from repro.kernels.kv_layout import (CompilerParams as _CompilerParams,
+                                     NEG_INF, pad_kv_blocks,
+                                     transpose_scales)
 
 
 def _kernel(start_ref, q_ref, k_ref, v_ref, *rest, bk: int, n_kv: int,
@@ -99,14 +97,7 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     s_len, hkv = k.shape[1], k.shape[2]
     g = hq // hkv
     bk = min(bk, s_len)
-    pk = (-s_len) % bk
-    if pk:                                   # padded tail masked by kv_pos
-        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
-        if k_s is not None:
-            k_s = jnp.pad(k_s, ((0, 0), (0, pk), (0, 0)))
-            v_s = jnp.pad(v_s, ((0, 0), (0, pk), (0, 0)))
-    n_kv = (s_len + pk) // bk
+    k, v, k_s, v_s, n_kv = pad_kv_blocks(k, v, k_s, v_s, bk)
     quantized = k_s is not None
 
     inputs = [jnp.reshape(start, (b, 1)).astype(jnp.int32),
@@ -118,9 +109,7 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
         pl.BlockSpec((1, bk, 1, hd), lambda bb, h, j: (bb, j, h, 0)),
     ]
     if quantized:
-        # scales transposed to (B, Hkv, S): the seq axis lands on lanes
-        inputs += [jnp.transpose(k_s, (0, 2, 1)),
-                   jnp.transpose(v_s, (0, 2, 1))]
+        inputs += list(transpose_scales(k_s, v_s))
         in_specs += [pl.BlockSpec((1, 1, bk), lambda bb, h, j: (bb, h, j)),
                      pl.BlockSpec((1, 1, bk), lambda bb, h, j: (bb, h, j))]
 

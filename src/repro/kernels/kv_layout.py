@@ -1,0 +1,46 @@
+"""Layout helpers shared by the cache-attention Pallas kernels.
+
+``decode_attention.py`` (Sq=1, split-KV) and ``prefill_attention.py``
+(Sq>1, cache continuation) read the same slotted (B, S, Hkv, hd) KV cache
+and share the plumbing that is easy to let drift: the jax-version compat
+shim for compiler params, the KV-tail block padding, and the INT8 scale
+transpose. Keeping these here means a jax rename or a scale-layout fix
+lands in both serving hot paths at once.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+# renamed across jax versions (TPUCompilerParams -> CompilerParams)
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+
+NEG_INF = -1e30
+
+
+def pad_kv_blocks(k: jax.Array, v: jax.Array, k_s: Optional[jax.Array],
+                  v_s: Optional[jax.Array], bk: int) -> Tuple:
+    """Zero-pad the KV sequence axis (axis 1) to a ``bk`` multiple.
+
+    The padded tail sits at positions beyond any real row's causal limit,
+    so the kernels' position masks neutralize it exactly (exp(-inf) = +0.0
+    contributions). Returns (k, v, k_s, v_s, n_kv_blocks)."""
+    s_len = k.shape[1]
+    pk = (-s_len) % bk
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        if k_s is not None:
+            k_s = jnp.pad(k_s, ((0, 0), (0, pk), (0, 0)))
+            v_s = jnp.pad(v_s, ((0, 0), (0, pk), (0, 0)))
+    return k, v, k_s, v_s, (s_len + pk) // bk
+
+
+def transpose_scales(k_s: jax.Array, v_s: jax.Array) -> Tuple:
+    """(B, S, Hkv) f32 dequant scales -> (B, Hkv, S): the sequence axis
+    lands on lanes, so a (1, 1, bk) block per grid step is contiguous."""
+    return jnp.transpose(k_s, (0, 2, 1)), jnp.transpose(v_s, (0, 2, 1))

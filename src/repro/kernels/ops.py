@@ -73,15 +73,37 @@ def _cache_window(cache: dict, window: Optional[int]):
 
 def cached_attention(q: jax.Array, cache: dict, start: jax.Array,
                      window: Optional[int] = None) -> jax.Array:
-    """Cache-continuation prefill: q (B, Sq, Hq, hd) at absolute positions
-    start..start+Sq-1 vs a cache holding [0, start+Sq). ``start`` scalar or
-    (B,). NOT backend-dispatched — this masked einsum (``kernels.ref``) is
-    the shared XLA fallback on every backend, and the numerics oracle the
-    ``decode_attention`` primitive must match."""
+    """Masked-einsum cache attention: q (B, Sq, Hq, hd) at absolute
+    positions start..start+Sq-1 vs a cache holding [0, start+Sq). ``start``
+    scalar or (B,). NOT backend-dispatched — this einsum (``kernels.ref``)
+    is the numerics oracle both the ``decode_attention`` and
+    ``prefill_attention`` primitives must match (and IS their ``xla``
+    registration); model code routes through those primitives, tests and
+    benches call this directly as ground truth."""
     b = q.shape[0]
     start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,))
     return ref.cached_attention_ref(q, *_cache_window(cache, window),
                                     start=start)
+
+
+def prefill_attention(q: jax.Array, cache: dict, start: jax.Array,
+                      window: Optional[int] = None) -> jax.Array:
+    """Chunked-prefill hot path: a chunk of queries per slot, backend-
+    dispatched.
+
+    q: (B, Sq, Hq, hd) at absolute positions start..start+Sq-1 vs a cache
+    holding [0, start+Sq); ``start`` scalar or (B,); returns (B, Sq, Hq, hd).
+    This wrapper owns cache-dict unpack, the static visible-window slice
+    (``window >= start + Sq`` for every consumed row), and start
+    broadcasting; ragged-chunk padding to the kernel's query-tile multiple
+    lives in the Pallas wrapper (the xla impl — ``cached_attention_ref``
+    verbatim — needs none). Sq == 1 is a legal chunk (a prompt's tail): it
+    stays on this primitive, NOT ``decode_attention``, so a tail chunk and a
+    whole-prompt prefill share bit-identical numerics on every backend."""
+    b = q.shape[0]
+    start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,))
+    k, v, k_s, v_s = _cache_window(cache, window)
+    return get_backend().prefill_attention(q, k, v, k_s, v_s, start)
 
 
 def decode_attention(q: jax.Array, cache: dict, start: jax.Array,

@@ -1,0 +1,157 @@
+"""Pallas TPU kernel: fused chunked-prefill (cache-continuation) attention.
+
+The Sq>1 generalization of ``decode_attention.py``: a chunk of Sq query
+tokens per slot attends the slotted KV cache laid out (B, W, Hkv, hd), where
+W is the static visible window the caller already sliced. Grid
+(B, Hkv, Sq/bq, W/bk) with the KV-sequence axis innermost: the online-softmax
+accumulators (m, l, acc) live in VMEM scratch across the KV loop per query
+tile, so no (B, Sq, Hkv, G, W) score tensor is ever materialized — the
+masked-einsum prefill this replaces was the engine's TTFT bottleneck
+precisely because it built that tensor per chunk.
+
+Causality is *absolute*, per slot: each batch row carries ``start`` (the
+chunk's first absolute position) and query i of the chunk sees exactly cache
+positions <= start + i. Because the limit depends only on the query's
+absolute position — never on the chunk boundaries, the query-tile size, or
+the window bucket — chunk N of a prompt attends chunks 0..N with the same
+per-row arithmetic as a whole-prompt prefill: KV blocks fully beyond a row's
+limit contribute exact no-ops (p == +0.0, corr == 1.0) when visited and are
+skipped entirely via ``pl.when`` when the whole tile is past them, so chunked
+and whole-prompt prefill are *bit-consistent* row for row.
+
+INT8 KV path: identical epilogue placement to the decode kernel — ``k``/``v``
+are read as int8, per-(pos, head) ``k_s`` scales the score tile after QK^T,
+``v_s`` scales the probability tile before PV, and the ``l`` normalizer
+accumulates unscaled probabilities. No dequantized KV tile ever exists.
+
+GQA: the G = Hq/Hkv query heads sharing a KV head are folded into the query
+tile's row axis — dots are (bq*G, hd)x(hd, bk) and (bq*G, bk)x(bk, hd), one
+KV block read per group per tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.kv_layout import (CompilerParams as _CompilerParams,
+                                     NEG_INF, pad_kv_blocks,
+                                     transpose_scales)
+
+
+def _kernel(start_ref, q_ref, k_ref, v_ref, *rest, bq: int, bk: int, g: int,
+            n_kv: int, scale: float, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    i, j = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start = start_ref[0, 0]              # this slot's chunk-start position
+
+    # skip KV blocks past the tile's deepest row (absolute causal limit of
+    # query i*bq + bq - 1); blocks partially beyond a row's own limit are
+    # exact no-ops for that row via the position mask below
+    @pl.when(j * bk <= start + (i + 1) * bq - 1)
+    def _compute():
+        q = q_ref[0, :, 0].astype(jnp.float32).reshape(bq * g, -1)
+        k = k_ref[0, :, 0].astype(jnp.float32)    # (bk, hd) — int8 read as-is
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if quantized:
+            s = s * ks_ref[0, 0][None, :]         # dequant on scores, not KV
+        # row r of the tile is query (i*bq + r//g) at absolute position
+        # start + i*bq + r//g; 3-D iota then reshape avoids an integer div
+        q_pos = (start + i * bq
+                 + jax.lax.broadcasted_iota(jnp.int32, (bq, g, bk), 0
+                                            ).reshape(bq * g, bk))
+        kv_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq * g, bk), 1)
+        s = jnp.where(kv_pos <= q_pos, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1)
+        if quantized:
+            p = p * vs_ref[0, 0][None, :]         # dequant on probabilities
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v_ref[0, :, 0].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        o_ref[0, :, 0] = (acc_ref[...]
+                          / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                          ).reshape(bq, g, acc_ref.shape[-1]
+                                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def prefill_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                             k_s: Optional[jax.Array] = None,
+                             v_s: Optional[jax.Array] = None,
+                             start: jax.Array = None, *, bq: int = 16,
+                             bk: int = 128,
+                             interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, Hq, hd) queries at absolute positions start..start+Sq-1;
+    k/v: (B, W, Hkv, hd) float or int8 (then k_s/v_s (B, W, Hkv) f32 scales);
+    start: (B,) int32 per-slot chunk-start positions. Callers guarantee
+    ``W >= start + Sq`` for every row whose output is consumed. Returns
+    (B, Sq, Hq, hd) bf16."""
+    b, sq, hq, hd = q.shape
+    w, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bq = min(bq, sq)
+    pq = (-sq) % bq                          # ragged chunk: padded query tail
+    if pq:                                   # rows are sliced off the output
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    n_q = (sq + pq) // bq
+    bk = min(bk, w)
+    k, v, k_s, v_s, n_kv = pad_kv_blocks(k, v, k_s, v_s, bk)
+    quantized = k_s is not None
+
+    inputs = [jnp.reshape(start, (b, 1)).astype(jnp.int32),
+              q.reshape(b, sq + pq, hkv, g, hd), k, v]
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda bb, h, i, j: (bb, 0)),
+        pl.BlockSpec((1, bq, 1, g, hd), lambda bb, h, i, j: (bb, i, h, 0, 0)),
+        pl.BlockSpec((1, bk, 1, hd), lambda bb, h, i, j: (bb, j, h, 0)),
+        pl.BlockSpec((1, bk, 1, hd), lambda bb, h, i, j: (bb, j, h, 0)),
+    ]
+    if quantized:
+        inputs += list(transpose_scales(k_s, v_s))
+        in_specs += [pl.BlockSpec((1, 1, bk), lambda bb, h, i, j: (bb, h, j)),
+                     pl.BlockSpec((1, 1, bk), lambda bb, h, i, j: (bb, h, j))]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, g=g, n_kv=n_kv,
+                          scale=hd ** -0.5, quantized=quantized),
+        grid=(b, hkv, n_q, n_kv),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bq, 1, g, hd),
+                               lambda bb, h, i, j: (bb, i, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq + pq, hkv, g, hd),
+                                       jnp.bfloat16),
+        scratch_shapes=[pltpu.VMEM((bq * g,), jnp.float32),
+                        pltpu.VMEM((bq * g,), jnp.float32),
+                        pltpu.VMEM((bq * g, hd), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(*inputs)
+    out = out.reshape(b, sq + pq, hq, hd)
+    return out[:, :sq] if pq else out

@@ -36,14 +36,26 @@ def int8_matmul_ref(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
-                        causal: bool = True) -> jax.Array:
-    """Naive (materialized-scores) MHA oracle. q,k,v: (B, S, H, hd)."""
+                        causal: bool = True, q_offset: int = 0) -> jax.Array:
+    """Naive (materialized-scores) MHA oracle. q,k,v: (B, S, H, hd).
+
+    Causality is ABSOLUTE-position: query i sits at position
+    ``q_offset + i`` and sees ``kv_pos <= q_offset + i`` — the single
+    Sq<Skv convention shared with ``models.attention.flash_attention`` and
+    the ``start`` argument of ``cached_attention_ref``
+    (``flash_attention_ref(q_offset=o) == cached_attention_ref(start=o)``
+    up to dtype staging). The default ``q_offset=0`` makes queries the
+    FIRST Sq positions. (This replaces an older ``tril(k=skv-sq)`` mask
+    that silently pinned queries to the LAST Sq positions — the opposite of
+    what the model's flash path assumed, a drift the prefill kernel would
+    otherwise have validated against.)"""
     b, sq, h, hd = q.shape
     skv = k.shape[1]
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * hd ** -0.5
     if causal:
-        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        q_pos = q_offset + jnp.arange(sq)
+        mask = jnp.arange(skv)[None, :] <= q_pos[:, None]      # (Sq, Skv)
         s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))

@@ -1,14 +1,17 @@
-"""GQA attention: chunked (flash-style) training/prefill path + decode path.
+"""GQA attention with three STATIC attend routes: train | prefill | decode.
 
-Training/prefill uses an online-softmax KV-chunked scan (pure jnp, XLA path —
-its FLOPs/bytes are visible to ``cost_analysis`` for the roofline). The Pallas
-TPU kernel in ``repro.kernels.flash_attention`` is the deployment hot path and
-is validated against this implementation.
+Train (no cache) uses an online-softmax KV-chunked scan (pure jnp, XLA path —
+its FLOPs/bytes are visible to ``cost_analysis`` for the roofline; the Pallas
+TPU kernel in ``repro.kernels.flash_attention`` is the deployment hot path
+validated against it).
 
-Decode attends a single new token against a (possibly INT8-quantized) KV cache
-laid out (B, S, Hkv, hd) so the sequence axis can be sharded across the
-``model`` mesh axis (flash-decoding style sequence parallelism: local partial
-softmax stats + tiny cross-shard reductions, inserted automatically by GSPMD).
+Prefill and decode attend a (possibly INT8-quantized) KV cache laid out
+(B, S, Hkv, hd) through the backend ``prefill_attention`` /
+``decode_attention`` primitives (Pallas cache-continuation / split-KV
+kernels on TPU; the masked einsum on xla). The sequence axis can be sharded
+across the ``model`` mesh axis (flash-decoding style sequence parallelism:
+local partial softmax stats + tiny cross-shard reductions, inserted
+automatically by GSPMD).
 """
 from __future__ import annotations
 
@@ -47,16 +50,28 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     q_offset: int = 0) -> jax.Array:
     """Online-softmax attention, KV-chunked.
 
-    q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd), Hq = G * Hkv.
-    Returns (B, Sq, Hq, hd). Scores and stats in f32.
+    q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd), Hq = G * Hkv. Skv may be
+    ragged (any length): K/V are zero-padded to a ``chunk_kv`` multiple and
+    the tail is masked by position. Returns (B, Sq, Hq, hd). Scores and
+    stats in f32.
+
+    Causal semantics are ABSOLUTE-position: query i sits at position
+    ``q_offset + i`` and sees ``kv_pos <= q_offset + i``. The default
+    ``q_offset=0`` means queries are the FIRST Sq positions — the same
+    convention as ``kernels.ref.flash_attention_ref`` and the ``start``
+    argument of the cache-attention primitives (there is exactly one
+    Sq<Skv convention in the repo; tests cross-check all three).
     """
     b, sq, hq, hd = q.shape
     _, skv, hkv, _ = k.shape
     g = hq // hkv
     scale = hd ** -0.5
     chunk_kv = min(chunk_kv, skv)
-    assert skv % chunk_kv == 0, (skv, chunk_kv)
-    n_chunks = skv // chunk_kv
+    pad_kv = (-skv) % chunk_kv        # ragged Skv (prime lengths, odd prompt
+    if pad_kv:                        # sizes): zero-pad, mask the tail below
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    n_chunks = (skv + pad_kv) // chunk_kv
 
     # bf16 operands, f32 accumulation (MXU native mode).
     qs = (q.astype(jnp.float32) * scale).astype(L.COMPUTE_DTYPE)
@@ -73,8 +88,12 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         # scores: (B, Sq, Hkv, G, Ckv)
         s = jnp.einsum("bqhgd,bchd->bqhgc", qs, k_j,
                        preferred_element_type=jnp.float32)
+        # padded tail positions are masked unconditionally (the causal limit
+        # alone would leave them visible to queries past skv-1)
+        mask = jnp.broadcast_to(kv_pos[None, :] < skv, (sq, chunk_kv))
         if causal:
-            mask = kv_pos[None, :] <= q_pos[:, None]           # (Sq, Ckv)
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])  # (Sq, Ckv)
+        if causal or pad_kv:
             s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
@@ -155,21 +174,23 @@ def update_kv_cache(cache: dict, k_new: jax.Array, v_new: jax.Array,
 
 def cached_attention(q: jax.Array, cache: dict, start: jax.Array,
                      window: Optional[int] = None) -> jax.Array:
-    """q: (B, Sq, Hq, hd) queries at absolute positions start..start+Sq-1,
-    attending a cache that already holds positions [0, start+Sq).
+    """Masked-einsum oracle for cache attention (NOT the hot path — the
+    ``prefill_attention``/``decode_attention`` backend primitives are; on
+    the ``xla`` backend they resolve to exactly this einsum).
 
-    ``start`` is scalar or (B,) (per-slot positions under continuous
-    batching). Query i attends cache positions <= start+i: exactly the decode
-    semantics for Sq=1 and cache-continuation prefill for Sq>1 — a chunked
-    prefill therefore produces bit-identical logits to a whole-prompt prefill,
-    which is what makes engine output token-identical to the serial path.
+    q: (B, Sq, Hq, hd) queries at absolute positions start..start+Sq-1,
+    attending a cache that already holds positions [0, start+Sq). ``start``
+    is scalar or (B,) (per-slot positions under continuous batching). Query
+    i attends cache positions <= start+i — the absolute causal limit every
+    attend route in the repo shares, which is why a chunked prefill produces
+    bit-identical logits to a whole-prompt prefill.
 
     ``window`` (STATIC int, host-bucketed >= start+Sq, None = full buffer)
-    restricts the masked einsum (``kernels.ops.cached_attention``) to the
-    visible prefix, so traffic is O(window) instead of O(max_seq) — positions
-    past the window contribute exp(-inf) = 0 exactly, keeping the windowed
-    path bit-identical to the full-mask einsum. The INT8 cache is read as
-    int8; per-(pos,head) dequant rides on the score/probability matrices."""
+    restricts the einsum to the visible prefix, so traffic is O(window)
+    instead of O(max_seq) — positions past the window contribute
+    exp(-inf) = 0 exactly, keeping the windowed path bit-identical to the
+    full-mask einsum. The INT8 cache is read as int8; per-(pos,head) dequant
+    rides on the score/probability matrices."""
     return ops.cached_attention(q, cache, start, window)
 
 
@@ -194,25 +215,40 @@ def _context_parallel(q, k, v, ctx):
     return q, k, v
 
 
+TRAIN, PREFILL, DECODE = "train", "prefill", "decode"
+ROUTES = (TRAIN, PREFILL, DECODE)
+
+
 def attention_forward(p: dict, cfg, x: jax.Array, positions: jax.Array,
                       cache: Optional[dict] = None,
                       cur_len: Optional[jax.Array] = None,
                       ctx=None, window: Optional[int] = None,
-                      decode: Optional[bool] = None,
+                      route: Optional[str] = None,
                       ) -> Tuple[jax.Array, Optional[dict]]:
     """Full attention sub-block (no norm/residual — block owns those).
 
-    Train/prefill: cache is None -> flash path (optionally returns nothing).
-    Decode: cache given, x is (B, 1, d), cur_len = tokens already in cache.
-    ``window``: static visible-window bound (see ``cached_attention``) —
-    cache writes always hit the full buffer, only the attend is windowed.
-    ``decode``: static; True routes the attend to the backend
-    ``decode_attention`` primitive, False keeps the einsum, None infers
-    S==1. Prefill callers MUST pass False: a 1-token prefill tail chunk is
-    shape-indistinguishable from decode, but it must take the same einsum
-    path as whole-prompt prefill or the engine's token-identity contract
-    breaks on backends whose decode kernel is not bitwise the einsum
-    (pallas/ref online softmax).
+    ``route`` is the STATIC attend route — ``"train" | "prefill" |
+    "decode"`` — replacing the old fragile boolean ``decode`` tri-state
+    (where a 1-token prefill tail chunk had to remember to pass
+    ``decode=False`` or silently take kernel numerics that break the
+    engine's token-identity contract). The three routes:
+
+      train    cache is None: local flash attention over the fresh K/V
+      prefill  cache given, x is (B, Sq, d): write K/V, attend the cache
+               through the backend ``prefill_attention`` primitive —
+               Sq == 1 (a prompt's tail chunk) is legal and STAYS here
+      decode   cache given, x is (B, 1, d): write K/V, attend through the
+               backend ``decode_attention`` primitive
+
+    ``route=None`` infers: no cache -> train; else S == 1 -> decode, S > 1
+    -> prefill. Engine/serving callers pass the route explicitly — the
+    inference is a convenience for serial/test code, and a tail chunk left
+    to inference would (correctly for serial, wrongly for chunked prefill)
+    land on decode, which is why the engine never relies on it.
+
+    ``window``: static visible-window bound (see ``ops``) — cache writes
+    always hit the full buffer, only the attend is windowed. ``cur_len`` =
+    tokens already in cache (scalar or (B,) per-slot).
     """
     hd = cfg.resolved_head_dim
     b, s, _ = x.shape
@@ -233,22 +269,27 @@ def attention_forward(p: dict, cfg, x: jax.Array, positions: jax.Array,
     if use_cp:
         q, k, v = _context_parallel(q, k, v, ctx)
 
+    assert route is None or route in ROUTES, route
     if cache is None:
+        assert route in (None, TRAIN), \
+            f"route {route!r} needs a cache; got none"
         o = flash_attention(q, k, v, causal=True, chunk_kv=cfg.attn_chunk_kv)
         new_cache = None
     else:
+        assert route != TRAIN, "train route cannot take a cache"
         # cache-filling prefill (s > 1) and decode (s == 1) share the same
         # semantics: write K/V, then attend the cache with per-query causal
-        # limits. Decode (single query) dispatches to the backend registry's
-        # ``decode_attention`` primitive (split-KV Pallas kernel on TPU; the
-        # xla fallback is the identical Sq=1 einsum). Chunked prefill
-        # continuation (cur_len > 0) needs the cache read — a local flash
-        # attend would miss the earlier chunks.
+        # limits — both through backend primitives (Pallas online-softmax
+        # kernels on TPU; the xla registration of either primitive is the
+        # identical masked einsum). Chunked prefill continuation
+        # (cur_len > 0) needs the cache read — a local flash attend would
+        # miss the earlier chunks.
         new_cache = update_kv_cache(cache, k, v, cur_len)
-        if (decode if decode is not None else s == 1):
+        r = route or (DECODE if s == 1 else PREFILL)
+        if r == DECODE:
             assert s == 1, f"decode attend requires a single query, got {s}"
             o = ops.decode_attention(q, new_cache, cur_len, window)
         else:
-            o = cached_attention(q, new_cache, cur_len, window)
+            o = ops.prefill_attention(q, new_cache, cur_len, window)
     out = L.dense(o.reshape(b, s, n_heads * hd), p["wo"])
     return out, new_cache

@@ -123,13 +123,13 @@ def _ffn_part(p: dict, cfg, x, is_moe: bool, ctx, with_aux: bool):
 
 def _block_forward(kind: str, is_moe: bool, p: dict, cfg, x, positions, ctx,
                    cache=None, cur_len=None, with_aux: bool = False,
-                   window=None, decode=None):
+                   window=None, route=None):
     h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
     new_cache = cache
     if kind == "attn":
         a, new_cache = A.attention_forward(p["attn"], cfg, h, positions,
                                            cache, cur_len, ctx, window,
-                                           decode)
+                                           route)
         x = x + a
         x, aux = _ffn_part(p, cfg, x, is_moe, ctx, with_aux)
     elif kind == "mamba":
@@ -311,7 +311,7 @@ def decode_step(params: dict, cfg, state: dict, tokens: jax.Array,
                 ctx: Optional[RunContext] = None,
                 embeds: Optional[jax.Array] = None,
                 window: Optional[int] = None,
-                decode: Optional[bool] = None) -> Tuple[jax.Array, dict]:
+                route: Optional[str] = None) -> Tuple[jax.Array, dict]:
     """tokens: (B, S_new) (S_new=1 for decode, >1 for cache-filling prefill).
 
     ``state["pos"]`` is a scalar (whole batch at one position — the serial
@@ -330,10 +330,12 @@ def decode_step(params: dict, cfg, state: dict, tokens: jax.Array,
     and full attends are bit-identical (masked positions contribute exact
     zeros); jitted callers must mark ``window`` static.
 
-    ``decode``: STATIC decode-vs-prefill routing for the KV attend (None =
-    infer S_new==1). Cache-continuation *prefill* callers must pass False
-    even for 1-token tail chunks — see ``attention_forward``. Returns
-    (logits, new state)."""
+    ``route``: STATIC attend route for the KV attend — ``"prefill"`` |
+    ``"decode"`` (None infers: S_new == 1 -> decode, else prefill). Chunked-
+    prefill callers (the engine) pass ``route="prefill"`` explicitly so a
+    1-token tail chunk stays on the ``prefill_attention`` primitive instead
+    of being shape-inferred onto the decode kernel — see
+    ``attention_forward``. Returns (logits, new state)."""
     ctx = ctx or default_ctx()
     x = L.embed_lookup(params["embed"], tokens)
     if embeds is not None and cfg.frontend.kind != "none":
@@ -353,7 +355,7 @@ def decode_step(params: dict, cfg, state: dict, tokens: jax.Array,
         for j, (kind, is_moe) in enumerate(spec):
             x, nc, _ = _block_forward(kind, is_moe, block_params[j], cfg, x,
                                       positions, ctx, caches[j], cur,
-                                      window=window, decode=decode)
+                                      window=window, route=route)
             new_caches.append(nc)
         return x, tuple(new_caches)
 

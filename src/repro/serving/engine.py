@@ -34,17 +34,25 @@ Two length-aware fast paths (DESIGN.md §10):
 
 Token-identity contract: engine outputs are bit-identical to serial
 single-request decode because (a) every per-slot computation is independent
-across the batch axis, (b) chunked prefill and decode attend the cache with
-the same numerics the serial path uses — the masked einsum, windowed or not,
-yields bit-identical logits (out-of-window positions contribute exact
-zeros) — and (c) inactive/stopped slots are select-masked back to their
-pre-step state after every batched decode step, on device.
+across the batch axis, (b) chunked prefill and decode attend the cache
+through the SAME backend primitives the serial path resolves to
+(``prefill_attention`` / ``decode_attention``), whose causal limits are
+absolute positions — so chunk boundaries, query-tile sizes, and window
+buckets all yield bit-identical logits (out-of-window/limit positions
+contribute exact zeros) — and (c) inactive/stopped slots are select-masked
+back to their pre-step state after every batched decode step, on device.
+
+``REPRO_DEBUG_WINDOW=1`` arms a host-side assert in ``step()`` that catches
+an undersized static window (< start + Sq) before dispatch — without it a
+miscomputed window silently truncates the visible cache and produces wrong
+tokens with no error.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import itertools
+import os
 import time
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -141,12 +149,14 @@ class Engine:
 
         def _prefill(params, pool, slot, chunk, window):
             st = sp.gather_slot(pool, slot)
-            # decode=False: a 1-token tail chunk must take the same einsum
-            # path as serial whole-prompt prefill, not the decode kernel —
-            # on pallas/ref the kernel's online softmax is only
-            # tolerance-equal, which would break token identity
+            # route="prefill": every chunk — the 1-token tail included —
+            # takes the backend prefill_attention primitive, the same
+            # primitive serial whole-prompt prefill resolves to, so chunked
+            # and whole-prompt prefill share bit-identical numerics on
+            # every backend (the route enum makes the old fragile
+            # "tail chunk must pass decode=False" contract unexpressible)
             logits, new = lm.decode_step(params, cfg_, st, chunk, ctx_,
-                                         window=window, decode=False)
+                                         window=window, route="prefill")
             return logits[:, -1], sp.scatter_slot(pool, slot, new)
 
         def _decode(params, pool, tokens, active, eos, budget, window):
@@ -160,7 +170,7 @@ class Engine:
             def body(carry, _):
                 pool, tok, live, left = carry
                 logits, new = lm.decode_step(params, cfg_, pool, tok, ctx_,
-                                             window=window, decode=True)
+                                             window=window, route="decode")
                 nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
                 pool = sp.select_slots(new, pool, live)
                 left = jnp.where(live, left - 1, left)
@@ -253,6 +263,24 @@ class Engine:
         every emitted token except the newest (whose KV isn't written yet)."""
         return int(slot.prompt.size) + len(slot.result.tokens) - 1
 
+    def _debug_check_window(self, window: int, required: int,
+                            kind: str) -> None:
+        """Opt-in (``REPRO_DEBUG_WINDOW=1``) host-side guard on the static
+        visible window, run before dispatch. An undersized window —
+        ``window < start + Sq`` for a consumed row — does NOT error on
+        device: the attend silently truncates the visible cache and the
+        engine emits wrong tokens. This assert turns that silent corruption
+        into an immediate host error; it is opt-in because it runs on every
+        dispatch in the hot loop."""
+        if os.environ.get("REPRO_DEBUG_WINDOW") != "1":
+            return
+        if window < min(required, self.max_seq):
+            raise AssertionError(
+                f"undersized visible window on {kind} dispatch: window="
+                f"{window} < required={min(required, self.max_seq)} — the "
+                f"attend would silently truncate the cache and emit wrong "
+                f"tokens (scheduler.visible_window miscomputed?)")
+
     def step(self) -> List[RequestResult]:
         """One engine tick: admit, then run one scheduler action (a decode
         action runs ``decode_steps`` device steps). Returns requests that
@@ -269,6 +297,8 @@ class Engine:
                                                  slot.prefill_done)
             chunk = jnp.asarray(slot.prompt[None, lo:hi])
             window = self.scheduler.visible_window(hi, self.max_seq)
+            # the chunk's last query sits at absolute position hi-1
+            self._debug_check_window(window, hi, "prefill")
             last_logits, self.pool = self._prefill_fn(
                 self.params, self.pool, jnp.int32(slot.idx), chunk, window)
             slot.prefill_done = hi
@@ -296,6 +326,7 @@ class Engine:
             needed = max(self._slot_pos(self.slots[i])
                          for i in action.slots) + k_steps
             window = self.scheduler.visible_window(needed, self.max_seq)
+            self._debug_check_window(window, needed, "decode")
             toks, emitted, self.pool = self._decode_fn(
                 self.params, self.pool, jnp.asarray(tokens),
                 jnp.asarray(active), jnp.asarray(eos), jnp.asarray(budget),

@@ -124,27 +124,30 @@ def test_decode_attention_ref_kernel_vs_einsum(quantized, per_slot, bk):
                                rtol=3e-2, atol=1e-1 if quantized else 3e-2)
 
 
-def test_one_token_prefill_chunk_stays_on_einsum_path():
+def test_one_token_prefill_chunk_stays_on_prefill_route():
     """A 1-token cache-continuation prefill chunk is shape-identical to a
-    decode step, but it must be routed by the STATIC ``decode=False`` flag
-    to the einsum path: on the ref/pallas backends the decode kernel is only
-    tolerance-equal, and a tail chunk through it would break the engine's
-    bit-level token-identity contract vs serial whole-prompt prefill."""
+    decode step, but the STATIC ``route="prefill"`` must keep it on the
+    ``prefill_attention`` primitive: on the ref/pallas backends the decode
+    kernel is only tolerance-equal to the prefill kernel, and a tail chunk
+    through it would break the engine's bit-level token-identity contract
+    vs serial whole-prompt prefill. Asserted bitwise on ``ref`` — the
+    prefill kernel's absolute causal limits make chunked == whole-prompt
+    bit-for-bit even through the Pallas online softmax."""
     from repro import configs
     from repro.models import lm
     cfg = configs.get_smoke_config("qwen3-0.6b")
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     toks = jax.random.randint(jax.random.PRNGKey(1), (1, 9), 0,
                               cfg.vocab_size)
-    prev = set_backend("ref")       # backend whose decode kernel != einsum
+    prev = set_backend("ref")       # backend whose decode kernel != prefill
     try:
         state = lm.init_decode_state(cfg, 1, 32)
         full, _ = lm.decode_step(params, cfg, state, toks)
         state2 = lm.init_decode_state(cfg, 1, 32)
         _, state2 = lm.decode_step(params, cfg, state2, toks[:, :8],
-                                   decode=False)
+                                   route="prefill")
         last, _ = lm.decode_step(params, cfg, state2, toks[:, 8:],
-                                 decode=False)   # the 1-token tail chunk
+                                 route="prefill")   # the 1-token tail chunk
         np.testing.assert_array_equal(np.asarray(full[:, -1], np.float32),
                                       np.asarray(last[:, 0], np.float32))
     finally:

@@ -132,6 +132,64 @@ def test_flash_attention_property(s, hd, seed):
     assert out.min() >= vmin - 1e-3 and out.max() <= vmax + 1e-3
 
 
+@pytest.mark.parametrize("skv,chunk_kv", [(97, 32), (13, 1024), (33, 32),
+                                          (127, 64)])
+def test_jnp_flash_ragged_lengths(skv, chunk_kv):
+    """Regression: ``flash_attention`` used to hard-crash
+    (``assert skv % chunk_kv == 0``) on any sequence length that wasn't a
+    chunk multiple. Ragged/prime lengths must now pad K/V to a block
+    multiple and mask the tail by position — matching the unchunked oracle
+    exactly in semantics, both causal and not."""
+    from repro.models.attention import flash_attention
+    key = jax.random.PRNGKey(skv)
+    ks = jax.random.split(key, 3)
+    b, hq, hkv, hd = 2, 4, 2, 32
+    q = jax.random.normal(ks[0], (b, skv, hq, hd), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, skv, hkv, hd), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, skv, hkv, hd), jnp.bfloat16)
+    kr, vr = (jnp.repeat(t, hq // hkv, axis=2) for t in (k, v))
+    for causal in (True, False):
+        out = flash_attention(q, k, v, causal=causal, chunk_kv=chunk_kv)
+        o_ref = ref.flash_attention_ref(q, kr, vr, causal=causal)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(o_ref, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+
+def test_causal_convention_absolute_positions_cross_shape():
+    """One Sq<Skv causal convention, everywhere: queries sit at absolute
+    positions ``q_offset + i`` (FIRST Sq by default) in
+    ``flash_attention_ref``, the model's chunked flash path, and the
+    cache-attention oracle (``start == q_offset``). The old oracle pinned
+    queries to the LAST Sq positions (``tril k=skv-sq``) while the model
+    assumed the first — a silent drift the prefill kernel would otherwise
+    have validated against."""
+    from repro.models.attention import flash_attention
+    key = jax.random.PRNGKey(21)
+    ks = jax.random.split(key, 3)
+    b, h, hd, sq, skv = 2, 4, 32, 5, 24
+    q = jax.random.normal(ks[0], (b, sq, h, hd), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, skv, h, hd), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, skv, h, hd), jnp.bfloat16)
+    for off in (0, 7, skv - sq):
+        o_flash = ref.flash_attention_ref(q, k, v, q_offset=off)
+        o_model = flash_attention(q, k, v, chunk_kv=8, q_offset=off)
+        o_cached = ref.cached_attention_ref(
+            q, k, v, start=jnp.full((b,), off, jnp.int32))
+        np.testing.assert_allclose(np.asarray(o_flash, np.float32),
+                                   np.asarray(o_cached, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+        np.testing.assert_allclose(np.asarray(o_model, np.float32),
+                                   np.asarray(o_cached, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+    # sharp semantic pin: with q_offset=0, query 0 sees ONLY kv position 0,
+    # so its output must be exactly v[:, 0] (a softmax over one score)
+    o0 = ref.flash_attention_ref(q, k, v, q_offset=0)
+    np.testing.assert_allclose(np.asarray(o0[:, 0], np.float32),
+                               np.asarray(v[:, 0], np.float32),
+                               rtol=1e-6, atol=1e-6)
+
+
 def test_int8_decode_attention_ref_close_to_fp():
     """decode_attention_ref on a quantized KV cache (int8 + per-(pos,head)
     scales, dequant fused on the score/probability side) must approximate

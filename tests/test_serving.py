@@ -215,6 +215,53 @@ def test_decode_steps_one_matches_multi(setup):
     assert outs[0] == outs[1]
 
 
+# --------------------------------------------------------- window debugging
+def test_undersized_prefill_window_caught_by_debug_check(setup, monkeypatch):
+    """A host caller that miscomputes the static window silently attends a
+    truncated cache and emits wrong tokens — REPRO_DEBUG_WINDOW=1 must turn
+    that into an immediate host-side error before the prefill dispatch."""
+    cfg, params = setup
+    eng = Engine(params, cfg, n_slots=1, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=8))
+    monkeypatch.setenv("REPRO_DEBUG_WINDOW", "1")
+    # sabotage: fixed 8-wide window, too small once prefill passes chunk 1
+    monkeypatch.setattr(eng.scheduler, "visible_window",
+                        lambda needed, max_seq: 8)
+    eng.submit(Request(prompt=list(range(1, 13)), max_new_tokens=2))
+    with pytest.raises(AssertionError, match="undersized visible window"):
+        while eng.has_work:
+            eng.step()
+
+
+def test_undersized_decode_window_caught_by_debug_check(setup, monkeypatch):
+    """Same guard on the decode dispatch: an 8-token prompt prefills fine
+    under a pinned 8-wide window, but the first decode step needs
+    pos + decode_steps = 12 visible positions."""
+    cfg, params = setup
+    eng = Engine(params, cfg, n_slots=1, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=8, decode_steps=4))
+    monkeypatch.setenv("REPRO_DEBUG_WINDOW", "1")
+    monkeypatch.setattr(eng.scheduler, "visible_window",
+                        lambda needed, max_seq: 8)
+    eng.submit(Request(prompt=list(range(1, 9)), max_new_tokens=4))
+    with pytest.raises(AssertionError, match="undersized visible window"):
+        while eng.has_work:
+            eng.step()
+
+
+def test_debug_window_check_passes_on_correct_windows(setup, monkeypatch):
+    """With the real scheduler the armed check must never fire, and outputs
+    stay token-identical to serial decode."""
+    cfg, params = setup
+    monkeypatch.setenv("REPRO_DEBUG_WINDOW", "1")
+    prompts = _prompts(cfg, [9, 17], seed=6)
+    eng = Engine(params, cfg, n_slots=2, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=5))
+    res = eng.run([Request(prompt=p, max_new_tokens=4) for p in prompts])
+    for i, p in enumerate(prompts):
+        assert res[i].tokens == serial_decode(params, cfg, p, 4, max_seq=64)
+
+
 def test_summarize_results_empty():
     """A zero-request result set must summarize to zeros, not IndexError."""
     from repro.serving import summarize_results

@@ -12,6 +12,7 @@ runs so this module is always executable on a bare CPU container.
   SV-E      (energy ratio == speedup)       -> bench_energy
   Fig. 2/3 analogue (LM fleet)              -> bench_lm_hqp_serving
   continuous-batching engine                -> bench_serving
+  self-speculative (HQP drafts, bf16 checks)-> bench_speculative
   decode attention (windowed vs full)       -> bench_decode_attention
   prefill attention (kernel vs einsum)      -> bench_prefill_attention
   kernels                                   -> bench_kernels
@@ -233,10 +234,7 @@ def bench_serving(out_path: str = "BENCH_serving.json") -> List[Row]:
     prompts = [rng.randint(0, cfg.vocab_size, 8 + (5 * i) % 13).tolist()
                for i in range(n_req)]
 
-    payload = {"schema": SERVING_SCHEMA, "arch": cfg.name,
-               "n_requests": n_req, "n_slots": n_slots,
-               "prefill_chunk": chunk, "max_new_tokens": new_tok,
-               "decode_steps": dsteps, "variants": {}}
+    payload = _serving_payload(cfg, n_req, n_slots, chunk, new_tok, dsteps)
     rows: List[Row] = []
     for name, p, qkv, ds in [("bf16", params, False, dsteps),
                              ("bf16_sync1", params, False, 1),
@@ -247,15 +245,7 @@ def bench_serving(out_path: str = "BENCH_serving.json") -> List[Row]:
                                            decode_steps=ds))
         reqs = [Request(prompt=pr, max_new_tokens=new_tok) for pr in prompts]
         arrivals = [2 * i for i in range(n_req)]
-        # warmup with the FULL request set: every prefill tail-chunk shape
-        # and visible-window bucket compiles here, so the timed pass below
-        # measures steady-state serving, not XLA compilation
-        eng.run(reqs, arrival_ticks=arrivals)
-        for k in eng.stats:
-            eng.stats[k] = 0
-        t0 = time.perf_counter()
-        results = eng.run(reqs, arrival_ticks=arrivals)
-        wall = time.perf_counter() - t0
+        results, wall = _timed_engine_run(eng, reqs, arrivals)
         v = {
             **summarize_results(results, wall),
             "param_bytes": int(param_bytes(p)),
@@ -269,6 +259,7 @@ def bench_serving(out_path: str = "BENCH_serving.json") -> List[Row]:
             v["artifact_bytes"] = art.manifest.bytes_after
             v["bytes_before"] = art.manifest.bytes_before
         payload["variants"][name] = v
+        payload["expected_variants"].append(name)
         rows.append((f"serving/{name}", wall / max(v["out_tokens"], 1) * 1e6,
                      f"tok_s={v['tokens_per_s']:.1f} "
                      f"p50={v['latency_p50_ms']:.0f}ms "
@@ -276,8 +267,172 @@ def bench_serving(out_path: str = "BENCH_serving.json") -> List[Row]:
                      f"syncs={v['host_syncs']} dsteps={v['device_steps']} "
                      f"bytes={v['param_bytes']}"))
 
+    if out_path:
+        pathlib.Path(out_path).write_text(json.dumps(payload, indent=1))
+    return rows
+
+
+def _serving_payload(cfg, n_req, n_slots, chunk, new_tok, dsteps) -> dict:
+    """The shared BENCH_serving.json payload: ``bench_serving`` and
+    ``bench_speculative`` both merge their variants into ``_LAST_SERVING``
+    (and re-write the file), so one schema-tagged document carries the full
+    bf16 / int8 / speculative comparison regardless of which benches a
+    ``--only`` subset selected. ``expected_variants`` records every variant
+    a bench in this process INTENDED to produce — ``check_bench`` fails
+    with a named-variant message if one is missing from the final file."""
     global _LAST_SERVING
-    _LAST_SERVING = payload
+    if not _LAST_SERVING:
+        _LAST_SERVING = {"schema": SERVING_SCHEMA, "arch": cfg.name,
+                         "n_requests": n_req, "n_slots": n_slots,
+                         "prefill_chunk": chunk, "max_new_tokens": new_tok,
+                         "decode_steps": dsteps, "variants": {},
+                         "expected_variants": []}
+    _LAST_SERVING.setdefault("expected_variants", [])
+    return _LAST_SERVING
+
+
+def _timed_engine_run(eng, reqs, arrivals, best_of: int = 2):
+    """Warmup run (compiles every tail-chunk shape and window bucket), then
+    ``best_of`` timed runs keeping the fastest — shared-runner noise only
+    ever ADDS time, and the serving gates compare variants against each
+    other. Returns (results, wall_s) from the fastest run; ``eng.stats``
+    holds exactly one run's counters (zeroed before each timed run)."""
+    eng.run(reqs, arrival_ticks=arrivals)
+    best = None
+    for _ in range(best_of):
+        for k in eng.stats:
+            eng.stats[k] = 0
+        t0 = time.perf_counter()
+        results = eng.run(reqs, arrival_ticks=arrivals)
+        wall = time.perf_counter() - t0
+        if best is None or wall < best[1]:
+            best = (results, wall)
+    return best
+
+
+def bench_speculative(out_path: str = "BENCH_serving.json") -> List[Row]:
+    """Self-speculative serving (HQP artifact drafts, bf16 parent verifies)
+    vs the bf16 ``decode_steps=4`` baseline it must beat, CI-gated by
+    ``check_bench``:
+
+      * ``acceptance_rate`` (accepted drafts / drafted tokens, straight
+        from ``Engine.stats``) must clear the 0.7 floor — HQP's Δacc bound
+        is what makes the compressed artifact a high-acceptance drafter,
+        so acceptance IS the quality-vs-speed headline (Ps&Qs: quantization
+        as a latency tool);
+      * speculative tokens/s must beat the ``spec_baseline`` variant —
+        greedy speculative output is bit-identical to serial bf16, so that
+        delta is free wall-clock, not a quality trade.
+
+    The workload is SINGLE-STREAM and DECODE-HEAVY (one slot, 48 generated
+    tokens per request) — the paper's ultra-low-latency edge regime, and
+    speculation's: at batch 1 a multi-position verify pass costs about one
+    decode step (op overhead dominates, measured flat in Sq), so k drafts
+    + 1 verify buy up to k+1 tokens for ~k+1 invocation-equivalents of the
+    CHEAPER drafter, and the per-request p50 latency drops ~2x. (At batch
+    4 the verify pass scales with Sq on CPU and the advantage shrinks to
+    ~parity — the batched numbers stay visible in ``bench_serving``.)
+    Fairness guards: the baseline runs the SAME prompts/arrivals/slots/
+    chunking under the default ``decode_steps=4`` scan, and both engines
+    are timed in interleaved passes (min per engine) so machine drift
+    during the bench cannot bias the ratio — the same discipline as
+    ``bench_prefill_attention``."""
+    import dataclasses as dc
+    import jax
+    from repro import configs
+    from repro.compress import compress
+    from repro.core.pruning import param_bytes
+    from repro.models import lm
+    from repro.serving import (Engine, Request, SchedulerConfig,
+                               summarize_results)
+    from repro.sharding.ctx import default_ctx
+
+    cfg = configs.get_smoke_config("qwen3-0.6b")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    art = compress(params, cfg, log=lambda s: None)
+    rng = np.random.RandomState(0)
+    n_req, new_tok, n_slots, chunk = 6, 48, 1, 16
+    max_seq, dsteps, spec_k, spec_cycles = 128, 4, 4, 4
+    prompts = [rng.randint(0, cfg.vocab_size, 8 + (5 * i) % 13).tolist()
+               for i in range(n_req)]
+    reqs = [Request(prompt=pr, max_new_tokens=new_tok) for pr in prompts]
+    arrivals = [0] * n_req
+
+    payload = _serving_payload(cfg, n_req, n_slots, chunk, new_tok, dsteps)
+    rows: List[Row] = []
+
+    ctx_q = dc.replace(default_ctx(), quantized_kv=True)
+    base_eng = Engine(params, cfg, ctx=default_ctx(), n_slots=n_slots,
+                      max_seq=max_seq,
+                      sched=SchedulerConfig(prefill_chunk=chunk,
+                                            decode_steps=dsteps))
+    spec_eng = Engine(params, cfg, ctx=default_ctx(), n_slots=n_slots,
+                      max_seq=max_seq,
+                      sched=SchedulerConfig(prefill_chunk=chunk,
+                                            decode_steps=dsteps),
+                      draft_params=art.params, spec_k=spec_k,
+                      spec_cycles=spec_cycles, draft_ctx=ctx_q,
+                      draft_manifest=art.manifest)
+    best = {}
+    for name, eng in (("base", base_eng), ("spec", spec_eng)):
+        eng.run(reqs, arrival_ticks=arrivals)      # warmup: compile all
+    for _ in range(3):                             # interleaved timed passes
+        for name, eng in (("base", base_eng), ("spec", spec_eng)):
+            for k in eng.stats:
+                eng.stats[k] = 0
+            t0 = time.perf_counter()
+            results = eng.run(reqs, arrival_ticks=arrivals)
+            wall = time.perf_counter() - t0
+            if name not in best or wall < best[name][1]:
+                best[name] = (results, wall, dict(eng.stats))
+
+    base_res, base_wall, base_stats = best["base"]
+    base_sum = summarize_results(base_res, base_wall)
+    results, wall, st = best["spec"]
+    accept = st["accepted_tokens"] / max(st["drafted_tokens"], 1)
+    v = {
+        **summarize_results(results, wall),
+        "param_bytes": int(param_bytes(params)),
+        "artifact_bytes": art.manifest.bytes_after,
+        "spec_k": spec_k,
+        "spec_cycles": spec_cycles,
+        "max_new_tokens": new_tok,
+        "decode_ticks": st["decode_ticks"],
+        "prefill_ticks": st["prefill_ticks"],
+        "host_syncs": st["host_syncs"],
+        "device_steps": st["device_steps"],
+        "drafted_tokens": st["drafted_tokens"],
+        "accepted_tokens": st["accepted_tokens"],
+        "acceptance_rate": accept,
+        "baseline_tokens_per_s": base_sum["tokens_per_s"],
+    }
+    v["speedup_vs_bf16"] = (v["tokens_per_s"]
+                            / max(base_sum["tokens_per_s"], 1e-9))
+    payload["variants"]["speculative"] = v
+    # the baseline lives as its own variant: same workload, so the gate
+    # compares like with like (bench_serving's "bf16" variant times a
+    # different, prefill-heavier workload)
+    payload["variants"]["spec_baseline"] = {
+        **base_sum,
+        "param_bytes": int(param_bytes(params)),
+        "decode_steps": dsteps,
+        "max_new_tokens": new_tok,
+        "host_syncs": base_stats["host_syncs"],
+        "device_steps": base_stats["device_steps"],
+    }
+    payload["expected_variants"] += ["speculative", "spec_baseline"]
+    rows.append((
+        "serving/speculative", wall / max(v["out_tokens"], 1) * 1e6,
+        f"tok_s={v['tokens_per_s']:.1f} accept={accept:.2f} "
+        f"speedup_vs_bf16={v['speedup_vs_bf16']:.2f}x k={spec_k} "
+        f"c={spec_cycles} syncs={v['host_syncs']} "
+        f"drafted={v['drafted_tokens']}"))
+    rows.append((
+        "serving/spec_baseline",
+        base_wall / max(base_sum["out_tokens"], 1) * 1e6,
+        f"tok_s={base_sum['tokens_per_s']:.1f} decode_steps={dsteps} "
+        f"(same workload as serving/speculative)"))
+
     if out_path:
         pathlib.Path(out_path).write_text(json.dumps(payload, indent=1))
     return rows
@@ -475,6 +630,7 @@ BENCHES = [
     bench_energy,
     bench_lm_hqp_serving,
     bench_serving,
+    bench_speculative,
     bench_decode_attention,
     bench_prefill_attention,
     bench_kernels,

@@ -3,12 +3,24 @@ artifact, with per-request latency stats and a token-identity check against
 serial single-request decode.
 
   PYTHONPATH=src python examples/serve_engine.py [--arch stablelm-1.6b]
+  PYTHONPATH=src python examples/serve_engine.py --spec-k 4     # speculative
+  PYTHONPATH=src python examples/serve_engine.py --temperature 0.8 \\
+      --top-k 16 --seed 7                                       # sampling
 
 Shows the Engine API directly (launch/serve.py --engine wraps the same thing
 behind trace replay): submit staggered requests, step the engine, read
-per-request results.
+per-request results. Three modes share one code path:
+
+  default          the INT8 HQP artifact serves greedily
+  --temperature    seeded temperature/top-k sampling — same seed => same
+                   tokens, engine and serial alike (checked below)
+  --spec-k K       self-speculative: the artifact DRAFTS K tokens per
+                   cycle, its bf16 parent VERIFIES — greedy output is
+                   bit-identical to serial bf16 decode, and the stats line
+                   reports the acceptance rate
 """
 import argparse
+import dataclasses
 import sys
 
 sys.path.insert(0, "src")
@@ -19,7 +31,9 @@ import numpy as np
 from repro import configs
 from repro.compress import compress
 from repro.models import lm
-from repro.serving import Engine, Request, SchedulerConfig, serial_decode
+from repro.serving import (Engine, Request, SamplingConfig, SchedulerConfig,
+                           serial_decode)
+from repro.sharding.ctx import default_ctx
 
 
 def main():
@@ -27,36 +41,67 @@ def main():
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--n-requests", type=int, default=5)
     ap.add_argument("--tokens", type=int, default=12)
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative draft length (0 = off)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config(args.arch)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     art = compress(params, cfg, log=lambda s: None)    # PTQ-only INT8 artifact
     print(art.manifest.summary())
+    sampling = SamplingConfig(temperature=args.temperature,
+                              top_k=args.top_k, seed=args.seed)
 
     rng = np.random.RandomState(0)
     prompts = [rng.randint(0, cfg.vocab_size, 8 + (3 * i) % 9).tolist()
                for i in range(args.n_requests)]
     reqs = [Request(prompt=p, max_new_tokens=args.tokens) for p in prompts]
 
-    eng = Engine(art.params, cfg, n_slots=3, max_seq=64,
-                 sched=SchedulerConfig(prefill_chunk=8))
+    if args.spec_k:
+        # artifact = drafter, bf16 parent = verifier: output must be
+        # bit-identical to serial decode of the PARENT (greedy mode)
+        ctx_q = dataclasses.replace(default_ctx(), quantized_kv=True)
+        eng = Engine(params, cfg, n_slots=3, max_seq=64,
+                     sched=SchedulerConfig(prefill_chunk=8),
+                     sampling=sampling, draft_params=art.params,
+                     spec_k=args.spec_k, spec_cycles=2, draft_ctx=ctx_q,
+                     draft_manifest=art.manifest)
+        ref_params = params
+    else:
+        eng = Engine(art.params, cfg, n_slots=3, max_seq=64,
+                     sched=SchedulerConfig(prefill_chunk=8),
+                     sampling=sampling)
+        ref_params = art.params
     # requests arrive over time: one new request every 2 engine ticks
     results = eng.run(reqs, arrival_ticks=[2 * i for i in range(len(reqs))])
 
+    check = sampling.is_greedy or not args.spec_k
     for i, res in sorted(results.items()):
-        ref = serial_decode(art.params, cfg, prompts[i], args.tokens,
-                            max_seq=64)
-        tag = "OK " if res.tokens == ref else "MISMATCH"
+        if check:
+            # greedy always verifies; plain-engine sampling verifies too
+            # (same seed => same tokens); speculative sampling matches the
+            # verifier's distribution, not its sequence
+            ref = serial_decode(ref_params, cfg, prompts[i], args.tokens,
+                                max_seq=64, sampling=sampling)
+            tag = "OK " if res.tokens == ref else "MISMATCH"
+        else:
+            tag = "SPL"
         print(f"[{tag}] req{i} prompt={res.prompt_len:2d}t "
               f"-> {len(res.tokens)} tokens, ttft {res.ttft_s*1e3:6.1f}ms, "
               f"latency {res.latency_s*1e3:6.1f}ms: {res.tokens[:8]}...")
+    accept = (eng.stats["accepted_tokens"]
+              / max(eng.stats["drafted_tokens"], 1))
     print(f"engine ticks: {eng.ticks} "
           f"({eng.stats['prefill_ticks']} prefill / "
           f"{eng.stats['decode_ticks']} decode, "
           f"{eng.stats['decode_slot_steps']} slot-steps, "
           f"{eng.stats['device_steps']} device decode steps in "
-          f"{eng.stats['host_syncs']} host syncs)")
+          f"{eng.stats['host_syncs']} host syncs, "
+          f"{eng.stats['accepted_tokens']}/{eng.stats['drafted_tokens']} "
+          f"drafts accepted = {accept:.2f})")
 
 
 if __name__ == "__main__":

@@ -6,10 +6,16 @@ Fails (exit 1) on: missing/unparseable file, wrong schema tag, zero rows,
 bench errors recorded, a serving payload with non-positive throughput /
 inverted percentiles / missing artifact bytes (variants with zero completed
 requests are tolerated — they report a zeroed summary, not a crash), a
-``decode_attention/xla_win/*`` or ``prefill_attention/xla_win/*`` sweep
-whose ms/step (ms/chunk) grows more than FLAT_MAX from the smallest to the
-largest ``max_seq`` — the windowed attends must scale with live length, not
-cache capacity — or a prefill primitive costing more than
+serving payload missing a variant its benches declared in
+``expected_variants`` (a NAMED failure, not a KeyError), a ``speculative``
+variant whose acceptance rate falls below SPEC_ACCEPT_MIN or whose
+tokens/s does not beat its same-workload bf16 ``decode_steps=4`` baseline
+(HQP's Δacc bound is what makes the artifact a high-acceptance drafter —
+acceptance and the bit-identical-output speedup are the two headline
+numbers), a ``decode_attention/xla_win/*`` or ``prefill_attention/xla_win/*``
+sweep whose ms/step (ms/chunk) grows more than FLAT_MAX from the smallest
+to the largest ``max_seq`` — the windowed attends must scale with live
+length, not cache capacity — or a prefill primitive costing more than
 PREFILL_RATIO_MAX x the WINDOWED einsum at every sweep point (the
 ``xla_einsum`` rows time the windowed masked einsum — exactly the engine
 prefill hot path the primitive replaced; it may never be slower than what
@@ -30,11 +36,14 @@ BENCH_SCHEMA = "repro-bench/v1"
 SERVING_SCHEMA = "repro-bench-serving/v1"
 SERVING_REQUIRED = ("tokens_per_s", "latency_p50_ms", "latency_p95_ms",
                     "ttft_p50_ms", "ttft_p95_ms", "param_bytes")
+SPEC_REQUIRED = ("acceptance_rate", "drafted_tokens", "accepted_tokens",
+                 "baseline_tokens_per_s")
 DECODE_WIN_ROW = re.compile(r"^decode_attention/xla_win/S(\d+)$")
 PREFILL_WIN_ROW = re.compile(r"^prefill_attention/xla_win/S(\d+)$")
 PREFILL_EINSUM_ROW = re.compile(r"^prefill_attention/xla_einsum/S(\d+)$")
 FLAT_MAX = 1.3
 PREFILL_RATIO_MAX = 1.1
+SPEC_ACCEPT_MIN = 0.7
 
 
 def fail(msg: str) -> None:
@@ -48,6 +57,11 @@ def check_serving(s: dict) -> None:
     variants = s.get("variants") or {}
     if not variants:
         fail("serving payload has no variants")
+    for name in s.get("expected_variants") or []:
+        if name not in variants:
+            fail(f"serving payload missing expected variant {name!r} "
+                 f"(have: {sorted(variants)}) — a bench declared it but "
+                 f"never wrote it")
     for name, v in variants.items():
         for key in SERVING_REQUIRED:
             if not isinstance(v.get(key), (int, float)):
@@ -62,6 +76,48 @@ def check_serving(s: dict) -> None:
         ab = variants["hqp_int8"].get("artifact_bytes")
         if not isinstance(ab, int) or ab <= 0:
             fail("hqp_int8 variant missing positive artifact_bytes")
+    if "speculative" in variants:
+        check_speculative(variants)
+
+
+def check_speculative(variants: dict) -> None:
+    """The two headline speculative numbers, gated:
+
+    * acceptance rate >= SPEC_ACCEPT_MIN — the drafter is only useful
+      because HQP's quality bound keeps it agreeing with its bf16 parent;
+      a collapse here means the artifact regressed as a drafter even if
+      raw tokens/s looks fine;
+    * tokens/s > the bf16 ``decode_steps=4`` baseline timed on the SAME
+      workload in the same interleaved bench run (the ``spec_baseline``
+      variant when present, else the recorded ``baseline_tokens_per_s``)
+      — greedy speculative output is bit-identical to serial bf16, so
+      anything short of a strict win means the subsystem is pure
+      overhead."""
+    v = variants["speculative"]
+    if v.get("n_requests") == 0:
+        fail("speculative variant completed zero requests")
+    for key in SPEC_REQUIRED:
+        if not isinstance(v.get(key), (int, float)):
+            fail(f"speculative variant missing numeric {key!r}")
+    if v["acceptance_rate"] < SPEC_ACCEPT_MIN:
+        fail(f"speculative acceptance rate {v['acceptance_rate']:.3f} < "
+             f"{SPEC_ACCEPT_MIN} floor ({v['accepted_tokens']}/"
+             f"{v['drafted_tokens']} drafts accepted) — the HQP drafter "
+             f"no longer tracks its bf16 parent")
+    base = variants.get("spec_baseline") or {}
+    base_tok_s = (base.get("tokens_per_s")
+                  if isinstance(base.get("tokens_per_s"), (int, float))
+                  and base.get("n_requests") else
+                  v["baseline_tokens_per_s"])
+    if v["tokens_per_s"] <= base_tok_s:
+        fail(f"speculative tokens/s {v['tokens_per_s']:.1f} does not beat "
+             f"the bf16 decode_steps=4 baseline {base_tok_s:.1f} on the "
+             f"same workload — speculation must be a strict win, its "
+             f"greedy output is bit-identical")
+    print(f"check_bench: speculative OK (accept="
+          f"{v['acceptance_rate']:.2f} >= {SPEC_ACCEPT_MIN}, "
+          f"{v['tokens_per_s']:.0f} tok/s vs bf16 {base_tok_s:.0f}, "
+          f"{v['tokens_per_s'] / max(base_tok_s, 1e-9):.2f}x)")
 
 
 def _sweep(rows: list, pattern) -> dict:

@@ -7,7 +7,8 @@
 See DESIGN.md §Compression-artifact for the format and invariants.
 """
 from repro.compress.artifact import (HQPArtifact, HQPManifest,  # noqa: F401
-                                     compress, spec_to_tree, tree_to_spec)
+                                     arch_fingerprint, compress, spec_to_tree,
+                                     tree_to_spec)
 from repro.compress.qtypes import (QuantizedLinear, is_quantized,  # noqa: F401
                                    linear_bytes, linear_kernel, out_features)
 from repro.compress.quantize import (EPS, QUANT_LINEAR_KEYS,  # noqa: F401
@@ -17,7 +18,8 @@ from repro.compress.quantize import (EPS, QUANT_LINEAR_KEYS,  # noqa: F401
                                      symmetric_quantize)
 
 __all__ = [
-    "HQPArtifact", "HQPManifest", "compress", "spec_to_tree",
+    "HQPArtifact", "HQPManifest", "arch_fingerprint", "compress",
+    "spec_to_tree",
     "tree_to_spec", "QuantizedLinear", "is_quantized", "linear_bytes",
     "linear_kernel", "out_features", "EPS", "QUANT_LINEAR_KEYS",
     "fake_quant", "fake_quant_tree", "model_bytes", "quant_error",

@@ -17,12 +17,39 @@ adds the atomic-commit envelope).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
 from repro.compress import quantize as cq
 from repro.compress.qtypes import QuantizedLinear
+
+
+def arch_fingerprint(cfg) -> str:
+    """Stable hash of the architecture identity a speculative drafter must
+    share with its verifier: same tokenizer space (vocab), same positional
+    scheme, same layer pattern. Pruning may shrink member widths (the
+    artifact's caches size themselves from param shapes), so widths like
+    ``n_kv_heads``/``d_ff`` are deliberately EXCLUDED — a compacted artifact
+    keeps its parent's fingerprint. Recorded in the HQP manifest so
+    ``serving.speculative`` can refuse a drafter built for a different
+    model family before any device work runs."""
+    ident = {
+        "name": getattr(cfg, "name", None) or getattr(cfg, "arch", "?"),
+        "vocab_size": getattr(cfg, "vocab_size", None),
+        "n_layers": getattr(cfg, "n_layers", None),
+        "d_model": getattr(cfg, "d_model", None),
+        "head_dim": (cfg.resolved_head_dim
+                     if hasattr(cfg, "resolved_head_dim") else None),
+        "pattern": list(getattr(cfg, "pattern", ())),
+        "qk_norm": getattr(cfg, "qk_norm", None),
+        "rope_theta": getattr(cfg, "rope_theta", None),
+        "tie_embeddings": getattr(cfg, "tie_embeddings", None),
+    }
+    blob = json.dumps(ident, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
 
 
 # ------------------------------------------------------------------ manifest
@@ -42,6 +69,11 @@ class HQPManifest:
     a_baseline: Optional[float]
     a_final: Optional[float]
     history: List[dict]               # accept/reject audit of Algorithm 1
+    # drafter-compatibility record (defaults keep pre-speculative artifacts
+    # loadable): vocab + arch-identity hash a speculative verifier checks
+    # before accepting this artifact as its drafter
+    vocab_size: Optional[int] = None
+    arch_hash: Optional[str] = None
 
     def summary(self) -> str:
         lines = [
@@ -139,7 +171,9 @@ def compress(params: Any, cfg, sq_grads: Any = None,
         theta_by_family=theta_by_family,
         a_baseline=None if a_baseline is None else float(a_baseline),
         a_final=None if a_final is None else float(a_final),
-        history=history)
+        history=history,
+        vocab_size=getattr(cfg, "vocab_size", None),
+        arch_hash=arch_fingerprint(cfg))
     return HQPArtifact(params=deploy, manifest=manifest)
 
 

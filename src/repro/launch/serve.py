@@ -14,12 +14,21 @@ Two serving paths:
                With ``--verify`` (default under ``--smoke``) every engine
                output is checked token-identical against serial decode.
 
+``--temperature/--top-k/--seed`` drive seeded sampling on every decode
+surface (default greedy). ``--spec-k N`` (engine mode, with ``--hqp`` or
+``--load-artifact``) turns on self-speculative serving: the HQP artifact
+drafts N tokens per cycle, the bf16 parent verifies — greedy output stays
+bit-identical to serial bf16 decode (``--verify`` checks exactly that).
+
   python -m repro.launch.serve --arch qwen3-0.6b --smoke --hqp --tokens 32
   python -m repro.launch.serve --arch qwen3-0.6b --smoke --engine
+  python -m repro.launch.serve --arch qwen3-0.6b --smoke --engine --hqp \\
+      --spec-k 4
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -70,6 +79,11 @@ def acquire_params(args, cfg, ctx, log=print):
                    saved artifact already paid for its calibration
     --hqp          init + full pipeline (optionally --save-artifact)
     plain          fresh bf16 init
+
+    Returns ``(params, manifest, parent)``: ``manifest`` is the HQP
+    manifest when ``params`` is an artifact (else None); ``parent`` is the
+    full-precision pytree the artifact was compressed from when it exists
+    in-process (the --hqp path) — the speculative verifier.
     """
     if args.load_artifact:
         from repro.launch.checkpoint import load_artifact
@@ -79,17 +93,17 @@ def acquire_params(args, cfg, ctx, log=print):
                 f"artifact was built for {art.manifest.arch!r}, requested "
                 f"config is {cfg.name!r} — pass the matching --arch/--smoke")
         log(art.manifest.summary())
-        return art.params
+        return art.params, art.manifest, None
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     if args.hqp:
         art = build_artifact(params, cfg, ctx, args.prune_steps, log=log)
         log(art.manifest.summary())
-        params = art.params
         if args.save_artifact:
             from repro.launch.checkpoint import save_artifact
             log(f"[serve] artifact saved to "
                 f"{save_artifact(args.save_artifact, art)}")
-    return params
+        return art.params, art.manifest, params
+    return params, None, None
 
 
 # ------------------------------------------------------------------ engine
@@ -136,7 +150,12 @@ def synth_requests(cfg, n: int, prompt_len: int, max_new_tokens: int,
     return reqs, [i * gap_s for i in range(n)]
 
 
-def run_engine(params, cfg, ctx, args, log=print):
+def run_engine(params, cfg, ctx, args, log=print, sampling=None, draft=None):
+    """``draft`` = (draft_params, draft_ctx, manifest) switches the engine
+    into speculative mode: ``params`` is then the bf16 VERIFIER and the
+    drafter is the HQP artifact. ``--verify`` still compares against serial
+    decode of ``params`` — in speculative greedy mode that is exactly the
+    bit-identity guarantee (the artifact only ever proposes)."""
     from repro.serving import (Engine, SchedulerConfig, serial_decode,
                                summarize_results)
     if args.trace:
@@ -152,10 +171,16 @@ def run_engine(params, cfg, ctx, args, log=print):
     if need > args.max_seq:
         raise SystemExit(f"trace needs max-seq >= {need}, got {args.max_seq}")
 
+    spec_kw = {}
+    if draft is not None:
+        draft_params, draft_ctx, manifest = draft
+        spec_kw = dict(draft_params=draft_params, draft_ctx=draft_ctx,
+                       spec_k=args.spec_k, draft_manifest=manifest)
     eng = Engine(params, cfg, ctx=ctx, n_slots=args.engine_slots,
                  max_seq=args.max_seq,
                  sched=SchedulerConfig(prefill_chunk=args.prefill_chunk,
-                                       decode_steps=args.decode_steps))
+                                       decode_steps=args.decode_steps),
+                 sampling=sampling, **spec_kw)
     t0 = time.monotonic()
     results = eng.run(reqs, arrivals_s=arrivals)
     wall = time.monotonic() - t0
@@ -166,6 +191,9 @@ def run_engine(params, cfg, ctx, args, log=print):
         "prefill_chunk": args.prefill_chunk,
         **eng.stats,
     }
+    accept = (eng.stats["accepted_tokens"] /
+              max(eng.stats["drafted_tokens"], 1))
+    stats["acceptance_rate"] = accept
     log(f"[engine] {stats['n_requests']} requests in {wall*1000:.0f}ms: "
         f"{stats['tokens_per_s']:.1f} tok/s, "
         f"latency p50/p95 {stats['latency_p50_ms']:.0f}/"
@@ -174,16 +202,24 @@ def run_engine(params, cfg, ctx, args, log=print):
         f"{stats['ttft_p95_ms']:.0f}ms "
         f"(ticks: {eng.stats['prefill_ticks']}p/{eng.stats['decode_ticks']}d, "
         f"{eng.stats['device_steps']} device decode steps / "
-        f"{eng.stats['host_syncs']} host syncs)")
+        f"{eng.stats['host_syncs']} host syncs"
+        + (f", spec acceptance {accept:.2f}" if draft is not None else "")
+        + ")")
 
     verify = args.verify if args.verify is not None else args.smoke
+    if verify and draft is not None and sampling is not None \
+            and not sampling.is_greedy:
+        log("[engine] verify skipped: speculative sampling matches the "
+            "verifier's DISTRIBUTION, not its token sequence (greedy "
+            "speculative mode is token-identical and verifiable)")
+        verify = False
     if verify:
         bad = []
         for i, res in sorted(results.items()):
             req = reqs[i]
             ref = serial_decode(params, cfg, req.prompt, req.max_new_tokens,
                                 ctx=ctx, max_seq=args.max_seq,
-                                eos_id=req.eos_id)
+                                eos_id=req.eos_id, sampling=sampling)
             if res.tokens != ref:
                 bad.append(i)
         if bad:
@@ -220,6 +256,18 @@ def main(argv=None):
     ap.add_argument("--decode-steps", type=int, default=4,
                     help="batched decode steps per device dispatch (the "
                          "jitted lax.scan length; 1 = sync every token)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative draft length: the HQP artifact drafts "
+                         "K tokens per cycle, the bf16 parent verifies "
+                         "(engine mode, requires --hqp or --load-artifact; "
+                         "0 = off)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy, the default)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k sampling cutoff (0 = full vocabulary)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling seed; same seed => same tokens, engine "
+                         "and serial alike")
     ap.add_argument("--trace", default=None,
                     help="JSONL request trace to replay (engine mode)")
     ap.add_argument("--verify", action="store_true", default=None,
@@ -232,18 +280,50 @@ def main(argv=None):
     if args.save_artifact and args.load_artifact:
         ap.error("--save-artifact with --load-artifact would just copy the "
                  "artifact; use the filesystem for that")
+    use_hqp = args.hqp or args.load_artifact is not None
+    if args.spec_k:
+        if not args.engine:
+            ap.error("--spec-k needs --engine (speculation is an engine "
+                     "decode mode)")
+        if not use_hqp:
+            ap.error("--spec-k needs a drafter: pass --hqp (build one) or "
+                     "--load-artifact")
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
     mesh = make_host_mesh()
-    use_hqp = args.hqp or args.load_artifact is not None
     ctx = make_ctx(mesh, batch_sharded=False, quantized_kv=use_hqp)
 
-    params = acquire_params(args, cfg, ctx)
+    params, manifest, parent = acquire_params(args, cfg, ctx)
+    from repro.serving import SamplingConfig
+    sampling = SamplingConfig(temperature=args.temperature,
+                              top_k=args.top_k, seed=args.seed)
 
     if args.engine:
+        draft = None
+        if args.spec_k:
+            if parent is None:
+                # --load-artifact path: the artifact's parent weights are
+                # not in the checkpoint; re-init the deterministic seed-0
+                # parent (manifest arch-hash still guards arch mismatch).
+                # Loud on purpose: if the artifact came from ANY other
+                # weights (different seed, trained checkpoint), this
+                # verifier is an unrelated model — output stays
+                # verifier-faithful but acceptance collapses.
+                print("[serve] WARNING: --spec-k with --load-artifact "
+                      "re-initializes the seed-0 bf16 parent as the "
+                      "verifier; if the artifact was built from other "
+                      "weights, expect near-zero acceptance (pass --hqp "
+                      "to build drafter and verifier from the same "
+                      "params)")
+                parent = lm.init_params(jax.random.PRNGKey(0), cfg)
+            draft_ctx = ctx                  # quantized_kv=True: INT8 KV
+            ctx = dataclasses.replace(ctx, quantized_kv=False)  # verifier
+            draft = (params, draft_ctx, manifest)
+            params = parent
         with mesh:
-            _, stats = run_engine(params, cfg, ctx, args)
+            _, stats = run_engine(params, cfg, ctx, args, sampling=sampling,
+                                  draft=draft)
         return stats
 
     serve_step = jax.jit(make_serve_step(cfg, ctx), donate_argnums=(1,))
@@ -265,12 +345,21 @@ def main(argv=None):
         jax.block_until_ready(logits)
         t_prefill = time.time() - t0
 
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        # sampling on the lockstep path shares the engine's key rule (seed x
+        # absolute position); greedy stays on the original argmax
+        from repro.serving import sampling as smp
+        base = smp.base_key(sampling)
+        pick = jax.jit(lambda lg, pos: smp.sample_batch(
+            lg[:, -1], sampling, base,
+            jnp.full((lg.shape[0],), pos, jnp.int32))[:, None])
+        pos = args.prompt_len
+        tok = pick(logits, pos)
         outputs = [tok]
         t0 = time.time()
         for _ in range(args.tokens - 1):
             logits, state = serve_step(params, state, tok)
-            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            pos += 1
+            tok = pick(logits, pos)
             outputs.append(tok)
         jax.block_until_ready(tok)
         t_decode = time.time() - t0

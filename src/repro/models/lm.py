@@ -364,3 +364,29 @@ def decode_step(params: dict, cfg, state: dict, tokens: jax.Array,
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = logits_fn(params, cfg, x)
     return logits, {"caches": new_caches, "pos": cur + s}
+
+
+def verify_step(params: dict, cfg, state: dict, tokens: jax.Array,
+                ctx: Optional[RunContext] = None,
+                window: Optional[int] = None) -> Tuple[jax.Array, dict]:
+    """Multi-position verification scoring for speculative decoding.
+
+    ``tokens`` is the (B, K+1) candidate chunk ``[t0, d1..dK]`` — the last
+    accepted token followed by the drafter's K proposals. One
+    ``route="prefill"`` pass scores ALL K+1 positions: ``logits[:, i]`` is
+    the verifier's next-token distribution after consuming ``tokens[:, i]``,
+    i.e. the target distribution draft ``d_{i+1}`` is judged against (and
+    ``logits[:, K]`` is the bonus-token distribution when every draft
+    accepts). Because the prefill route shares the serial decode route's
+    absolute-position causal semantics (DESIGN.md §10), position ``i`` of
+    this chunk is bit-identical to what a serial one-token-at-a-time decode
+    of the same prefix would produce — the hinge of the speculative greedy
+    token-identity guarantee.
+
+    The returned state has advanced ``pos`` by K+1 and written KV for every
+    candidate; the caller (``serving.speculative``) rolls ``pos`` back to
+    the accepted length — stale KV past the rolled-back ``pos`` is masked
+    by the absolute causal limit of every later attend and overwritten
+    before it can become visible, exactly like slot reuse in the pool."""
+    return decode_step(params, cfg, state, tokens, ctx, window=window,
+                       route="prefill")

@@ -1,15 +1,21 @@
-"""Continuous-batching serving subsystem (DESIGN.md §9).
+"""Continuous-batching serving subsystem (DESIGN.md §9, §11).
 
 ``Engine`` owns a slot-based batch over a per-slot decode-state pool;
 ``Scheduler`` interleaves chunked prefill with batched decode. Everything
 dispatches through the existing model/kernels stack, so HQP artifacts
-(``QuantizedLinear`` leaves, INT8 KV) serve unchanged.
+(``QuantizedLinear`` leaves, INT8 KV) serve unchanged. ``SamplingConfig``
+drives temperature/top-k/seeded sampling on every decode surface, and
+``SpecDecoder`` adds the self-speculative mode: the HQP artifact drafts,
+the bf16 parent verifies (greedy output bit-identical to serial bf16).
 """
 from repro.serving.engine import (Engine, Request, RequestResult,
                                   serial_decode, summarize_results)
+from repro.serving.sampling import GREEDY, SamplingConfig
 from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.serving.speculative import SpecDecoder, check_drafter_compat
 from repro.serving.state_pool import init_pool, init_slot_template
 
 __all__ = ["Engine", "Request", "RequestResult", "serial_decode",
            "summarize_results", "Scheduler", "SchedulerConfig", "init_pool",
-           "init_slot_template"]
+           "init_slot_template", "GREEDY", "SamplingConfig", "SpecDecoder",
+           "check_drafter_compat"]

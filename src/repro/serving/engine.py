@@ -4,8 +4,8 @@ The ``Engine`` owns a slot-based batch of ``n_slots`` concurrent requests.
 Requests are admitted into free slots on arrival, prefilled in chunks
 interleaved with batched decode steps (``serving.scheduler`` owns the
 policy), and evicted on EOS / length — freeing the slot for the next waiting
-request. All device work goes through exactly three jitted callables with a
-**static slot count**:
+request. All device work goes through a fixed set of jitted callables with
+a **static slot count**:
 
   _reset_fn  (pool, slot, template)          admission: zero one slot
   _prefill_fn(params, pool, slot, chunk, window)
@@ -13,6 +13,9 @@ request. All device work goes through exactly three jitted callables with a
   _decode_fn (params, pool, tokens, active, eos, budget, window)
                                              ``decode_steps`` batched steps
                                              entirely on device (lax.scan)
+  _spec_prefill_fn / SpecDecoder.spec_fn     the speculative mode's fused
+                                             dual-pool prefill and
+                                             draft->verify cycles (§11)
 
 so steady-state serving never retraces (prefill compiles once per distinct
 (chunk length, window bucket); decode once per window bucket). The state
@@ -42,6 +45,15 @@ buckets all yield bit-identical logits (out-of-window/limit positions
 contribute exact zeros) — and (c) inactive/stopped slots are select-masked
 back to their pre-step state after every batched decode step, on device.
 
+Beyond greedy lockstep, the engine carries two optional modes (both
+preserving the identity contract in their greedy forms): seeded
+temperature/top-k sampling (``serving.sampling`` — keys derive from seed x
+absolute position, so engine and serial draws coincide) and SELF-
+SPECULATIVE decoding (``serving.speculative``, DESIGN.md §11 — the HQP
+artifact drafts ``spec_k`` tokens per cycle over its own compacted pool,
+the bf16 parent verifies all of them in one ``prefill``-route pass, and
+greedy output stays bit-identical to serial bf16 decode).
+
 ``REPRO_DEBUG_WINDOW=1`` arms a host-side assert in ``step()`` that catches
 an undersized static window (< start + Sq) before dispatch — without it a
 miscomputed window silently truncates the visible cache and produces wrong
@@ -61,9 +73,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm
+from repro.serving import sampling as smp
 from repro.serving import state_pool as sp
 from repro.serving.scheduler import (DECODE, PREFILL, Scheduler,
                                      SchedulerConfig)
+from repro.serving.speculative import SpecDecoder
 from repro.sharding.ctx import RunContext, default_ctx
 
 FREE = "free"
@@ -108,6 +122,8 @@ class _Slot:
     prompt: Optional[np.ndarray] = None
     prefill_done: int = 0
     last_token: int = 0
+    prev_token: int = 0               # token at pos-1 (speculative healing
+                                      # chunk re-feeds [prev, last])
     result: Optional[RequestResult] = None
     eos_id: Optional[int] = None
     max_new_tokens: int = 0
@@ -118,7 +134,24 @@ class Engine:
 
     def __init__(self, params: Any, cfg, ctx: Optional[RunContext] = None,
                  n_slots: int = 4, max_seq: int = 128,
-                 sched: Optional[SchedulerConfig] = None):
+                 sched: Optional[SchedulerConfig] = None,
+                 sampling: Optional[smp.SamplingConfig] = None,
+                 draft_params: Any = None, spec_k: int = 4,
+                 spec_cycles: int = 1,
+                 draft_ctx: Optional[RunContext] = None,
+                 draft_manifest=None):
+        """``sampling``: temperature/top-k/seeded sampling for every decode
+        surface (None = greedy, the bit-identical-to-serial default).
+
+        ``draft_params`` switches on SPECULATIVE mode: ``params`` becomes
+        the verifier (bf16 parent), ``draft_params`` the drafter (the HQP
+        artifact), and each decode dispatch runs ``spec_cycles`` speculative
+        cycles — ``spec_k`` draft steps + one multi-position verify each —
+        instead of ``decode_steps`` verifier steps. ``draft_ctx`` sizes the
+        drafter's
+        own pool (INT8 KV for an artifact drafter); ``draft_manifest``
+        (the artifact's ``HQPManifest``) is checked for vocab/arch
+        compatibility before any device work."""
         if cfg.frontend.kind != "none":
             raise NotImplementedError(
                 "Engine v1 serves token-only archs; frontend (VLM/audio) "
@@ -129,19 +162,42 @@ class Engine:
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.scheduler = Scheduler(sched)
+        self.sampling = sampling or smp.GREEDY
         self.pool = sp.init_pool(cfg, n_slots, max_seq, self.ctx,
                                  params=params)
         self._template = sp.init_slot_template(cfg, max_seq, self.ctx,
                                                params=params)
+        self.spec: Optional[SpecDecoder] = None
+        if draft_params is not None:
+            self.spec = SpecDecoder(cfg, draft_params, params, ctx=self.ctx,
+                                    draft_ctx=draft_ctx, k=spec_k,
+                                    cycles=spec_cycles,
+                                    sampling=self.sampling,
+                                    draft_manifest=draft_manifest)
+            dctx = self.spec.draft_ctx
+            self.draft_pool = sp.init_pool(cfg, n_slots, max_seq, dctx,
+                                           params=draft_params)
+            self._draft_template = sp.init_slot_template(cfg, max_seq, dctx,
+                                                         params=draft_params)
         self.slots = [_Slot(i) for i in range(n_slots)]
         self.waiting: List[Request] = []
         self._uid = itertools.count()
         self.ticks = 0
+        # drafted_tokens counts every candidate the device produced for a
+        # slot that was live at dispatch (speculative drafts, or plain-mode
+        # scan steps — including steps burned on slots that froze mid-scan,
+        # the device work the old stats under-counted); accepted_tokens
+        # counts the candidates that became emitted request tokens
+        # (speculative corrections are emitted but NOT accepted drafts), so
+        # acceptance rate = accepted_tokens / drafted_tokens from stats
+        # alone, in both modes.
         self.stats = {"prefill_ticks": 0, "decode_ticks": 0,
                       "decode_slot_steps": 0, "prefill_tokens": 0,
-                      "host_syncs": 0, "device_steps": 0}
+                      "host_syncs": 0, "device_steps": 0,
+                      "drafted_tokens": 0, "accepted_tokens": 0}
 
         cfg_, ctx_ = self.cfg, self.ctx
+        scfg, base_key = self.sampling, smp.base_key(self.sampling)
         decode_steps = self.scheduler.cfg.decode_steps
 
         def _reset(pool, slot, template):
@@ -159,6 +215,21 @@ class Engine:
                                          window=window, route="prefill")
             return logits[:, -1], sp.scatter_slot(pool, slot, new)
 
+        def _spec_prefill(dparams, vparams, dpool, vpool, slot, chunk,
+                          window):
+            # speculative mode prefills BOTH pools from one dispatch (the
+            # drafter's chunk logits are never consumed — the first token
+            # always comes from the verifier); fusing halves the per-chunk
+            # dispatch overhead vs two _prefill_fn calls
+            vst = sp.gather_slot(vpool, slot)
+            vlogits, vnew = lm.decode_step(vparams, cfg_, vst, chunk, ctx_,
+                                           window=window, route="prefill")
+            dst = sp.gather_slot(dpool, slot)
+            _, dnew = lm.decode_step(dparams, cfg_, dst, chunk, ctx_,
+                                     window=window, route="prefill")
+            return (vlogits[:, -1], sp.scatter_slot(dpool, slot, dnew),
+                    sp.scatter_slot(vpool, slot, vnew))
+
         def _decode(params, pool, tokens, active, eos, budget, window):
             """``decode_steps`` greedy steps on device. tokens (B, 1) i32 =
             each live slot's last emitted token; active (B,) bool; eos (B,)
@@ -171,7 +242,13 @@ class Engine:
                 pool, tok, live, left = carry
                 logits, new = lm.decode_step(params, cfg_, pool, tok, ctx_,
                                              window=window, route="decode")
-                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                # per-slot key derives from the sampled token's absolute
+                # position (new pos), never slot/tick — so engine sampling
+                # reproduces serial sampling token-for-token per seed;
+                # greedy is a static argmax branch (no keys, bit-identical
+                # to the pre-sampling engine)
+                nxt = smp.sample_batch(logits[:, -1], scfg, base_key,
+                                       new["pos"])
                 pool = sp.select_slots(new, pool, live)
                 left = jnp.where(live, left - 1, left)
                 stop = ((eos >= 0) & (nxt == eos)) | (left <= 0)
@@ -189,6 +266,20 @@ class Engine:
                                    static_argnums=(4,))
         self._decode_fn = jax.jit(_decode, donate_argnums=(1,),
                                   static_argnums=(6,))
+        self._spec_prefill_fn = jax.jit(_spec_prefill, donate_argnums=(2, 3),
+                                        static_argnums=(6,))
+        self._sample_fn = jax.jit(lambda lg, p: smp.sample(
+            lg, scfg, smp.token_key(base_key, p)))
+
+    def _first_token(self, logits_row, pos: int) -> int:
+        """Token emitted from a prefill tail chunk's last-position logits.
+        ``pos`` is the prompt length — the position the token's KV will be
+        written at, the key-derivation rule every sampling surface shares.
+        Greedy stays on host ``np.argmax`` (the pre-sampling bitwise
+        path)."""
+        if self.sampling.is_greedy:
+            return int(np.argmax(np.asarray(logits_row)))
+        return int(self._sample_fn(logits_row, jnp.int32(pos)))
 
     # ------------------------------------------------------------- lifecycle
     def submit(self, request: Request) -> int:
@@ -227,6 +318,10 @@ class Engine:
             req = self.waiting.pop(0)
             self.pool = self._reset_fn(self.pool, jnp.int32(slot.idx),
                                        self._template)
+            if self.spec is not None:
+                self.draft_pool = self._reset_fn(
+                    self.draft_pool, jnp.int32(slot.idx),
+                    self._draft_template)
             slot.stage = PREFILL
             slot.prompt = req.prompt
             slot.prefill_done = 0
@@ -299,15 +394,27 @@ class Engine:
             window = self.scheduler.visible_window(hi, self.max_seq)
             # the chunk's last query sits at absolute position hi-1
             self._debug_check_window(window, hi, "prefill")
-            last_logits, self.pool = self._prefill_fn(
-                self.params, self.pool, jnp.int32(slot.idx), chunk, window)
+            if self.spec is not None:
+                last_logits, self.draft_pool, self.pool = \
+                    self._spec_prefill_fn(
+                        self.spec.draft_params, self.params, self.draft_pool,
+                        self.pool, jnp.int32(slot.idx), chunk, window)
+            else:
+                last_logits, self.pool = self._prefill_fn(
+                    self.params, self.pool, jnp.int32(slot.idx), chunk,
+                    window)
             slot.prefill_done = hi
             self.stats["prefill_ticks"] += 1
             self.stats["prefill_tokens"] += hi - lo
             if hi == slot.prompt.size:
-                tok = int(np.argmax(np.asarray(last_logits[0])))
+                tok = self._first_token(last_logits[0], hi)
                 self.stats["host_syncs"] += 1
+                # the speculative healing chunk re-feeds [prev, last]: after
+                # prefill, pos-1 holds the last prompt token
+                slot.prev_token = int(slot.prompt[-1])
                 self._emit(slot, tok, finished)
+        elif action.kind == DECODE and self.spec is not None:
+            finished = self._spec_decode(action, finished)
         elif action.kind == DECODE:
             k_steps = self.scheduler.cfg.decode_steps
             tokens = np.zeros((self.n_slots, 1), np.int32)
@@ -334,6 +441,11 @@ class Engine:
             toks, emitted = np.asarray(toks), np.asarray(emitted)
             self.stats["host_syncs"] += 1
             self.stats["device_steps"] += k_steps
+            # every slot live at dispatch burns all k_steps device steps —
+            # slots that freeze mid-scan included (the previously
+            # under-counted device work); emitted is what actually landed
+            self.stats["drafted_tokens"] += k_steps * len(action.slots)
+            self.stats["accepted_tokens"] += int(emitted.sum())
             for t in range(k_steps):
                 for i in action.slots:
                     if emitted[t, i]:
@@ -342,6 +454,58 @@ class Engine:
             self.stats["decode_slot_steps"] += int(emitted.sum())
 
         self.ticks += 1
+        return finished
+
+    def _spec_decode(self, action, finished: List[RequestResult]
+                     ) -> List[RequestResult]:
+        """``c_eff`` speculative cycles over all decoding slots — k_eff
+        draft steps on the drafter pool, one multi-position verify on the
+        verifier pool, on-device acceptance + rollback each — with ONE host
+        sync at the end. ``SpecDecoder.plan`` caps (k, cycles) so the
+        deepest slot's verify writes stay inside the cache (the vmapped KV
+        scatter clamps out-of-range starts, which would corrupt valid
+        history)."""
+        prev = np.zeros((self.n_slots, 1), np.int32)
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        active = np.zeros((self.n_slots,), bool)
+        eos = np.full((self.n_slots,), -1, np.int32)
+        budget = np.ones((self.n_slots,), np.int32)
+        for i in action.slots:
+            slot = self.slots[i]
+            prev[i, 0] = slot.prev_token
+            tokens[i, 0] = slot.last_token
+            active[i] = True
+            if slot.eos_id is not None:
+                eos[i] = slot.eos_id
+            budget[i] = slot.max_new_tokens - len(slot.result.tokens)
+        max_pos = max(self._slot_pos(self.slots[i]) for i in action.slots)
+        k_eff, c_eff = self.spec.plan(max_pos, self.max_seq,
+                                      int(budget[active].max()))
+        # deepest attend: the last cycle's verify chunk tail
+        needed = max_pos + c_eff * (k_eff + 1)
+        window = self.scheduler.visible_window(needed, self.max_seq)
+        self._debug_check_window(window, needed, "speculative")
+        toks, emitted, n_acc, n_drafted, self.draft_pool, self.pool = \
+            self.spec.spec_fn(
+                self.spec.draft_params, self.params, self.draft_pool,
+                self.pool, jnp.asarray(prev), jnp.asarray(tokens),
+                jnp.asarray(active), jnp.asarray(eos), jnp.asarray(budget),
+                k_eff, c_eff, window)
+        toks, emitted = np.asarray(toks), np.asarray(emitted)
+        self.stats["host_syncs"] += 1
+        # k_eff drafter invocations (healing chunk included) + 1 verify
+        # per cycle
+        self.stats["device_steps"] += c_eff * (k_eff + 1)
+        self.stats["drafted_tokens"] += int(np.asarray(n_drafted).sum())
+        self.stats["accepted_tokens"] += int(np.asarray(n_acc).sum())
+        # nonzero is row-major (t ascending), so per-slot emission order is
+        # preserved without scanning all c*(k+1) x n_slots cells in Python
+        for t, i in zip(*np.nonzero(emitted)):
+            slot = self.slots[i]
+            slot.prev_token = slot.last_token
+            self._emit(slot, int(toks[t, i]), finished)
+        self.stats["decode_ticks"] += 1
+        self.stats["decode_slot_steps"] += int(emitted.sum())
         return finished
 
     # ------------------------------------------------------------------- run
@@ -427,22 +591,42 @@ def _serial_step(cfg, ctx):
     return jax.jit(lambda p, st, t: lm.decode_step(p, cfg, st, t, ctx))
 
 
+@functools.lru_cache(maxsize=8)
+def _serial_sampler(scfg: smp.SamplingConfig):
+    """Jitted (logits, pos) -> token for one SamplingConfig — the SAME key
+    rule (seed x absolute position) the engine's batched scan uses, so a
+    fixed seed yields identical tokens serial vs engine."""
+    base = smp.base_key(scfg)
+    return jax.jit(lambda lg, p: smp.sample(lg, scfg, smp.token_key(base, p)))
+
+
 def serial_decode(params, cfg, prompt: Sequence[int], max_new_tokens: int,
                   ctx: Optional[RunContext] = None, max_seq: int = 128,
-                  eos_id: Optional[int] = None) -> List[int]:
-    """The serial single-request greedy path the engine must match
-    token-for-token: whole-prompt prefill, then one decode step per token."""
+                  eos_id: Optional[int] = None,
+                  sampling: Optional[smp.SamplingConfig] = None) -> List[int]:
+    """The serial single-request path the engine must match token-for-token:
+    whole-prompt prefill, then one decode step per token. Greedy by default;
+    a non-greedy ``sampling`` draws each token with the shared
+    position-derived key rule."""
     ctx = ctx or default_ctx()
+    scfg = sampling or smp.GREEDY
     prompt = np.asarray(prompt, np.int32)
     state = lm.init_decode_state(cfg, 1, max_seq, ctx, params=params)
     step = _serial_step(cfg, ctx)
+    sampler = None if scfg.is_greedy else _serial_sampler(scfg)
+
+    def pick(logits_row, pos: int) -> int:
+        if sampler is None:
+            return int(np.argmax(np.asarray(logits_row)))
+        return int(sampler(logits_row, jnp.int32(pos)))
+
     logits, state = step(params, state, jnp.asarray(prompt[None]))
     out: List[int] = []
-    tok = int(np.argmax(np.asarray(logits[0, -1])))
+    tok = pick(logits[0, -1], int(prompt.size))
     while True:
         out.append(tok)
         if tok == eos_id or len(out) >= max_new_tokens:
             return out
         logits, state = step(params, state,
                              jnp.full((1, 1), tok, jnp.int32))
-        tok = int(np.argmax(np.asarray(logits[0, -1])))
+        tok = pick(logits[0, -1], int(prompt.size) + len(out))

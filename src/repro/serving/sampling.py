@@ -1,0 +1,105 @@
+"""Token sampling for the serving stack (greedy / temperature / top-k).
+
+One ``SamplingConfig`` drives every decode surface — the serial reference
+path (``engine.serial_decode``), the launcher's lockstep loop, the engine's
+on-device multi-step decode scan, and the speculative drafter — so "same
+seed => same tokens" holds across all of them by construction.
+
+Determinism contract: the token emitted at absolute sequence position ``p``
+(the position its KV will be written at) is sampled with
+``token_key(base_key(cfg), p)``. The key depends only on (seed, position) —
+never on slot index, engine tick, or dispatch batching — so the engine's
+batched scan and the serial per-token loop draw identical randomness for
+identical requests. A deliberate consequence: two requests with the SAME
+prompt under the SAME seed emit byte-identical samples (reproducible
+serving — the batch composition can never perturb a request's output);
+callers wanting diverse samples for duplicate prompts vary ``seed`` per
+request. Speculative decoding reserves two extra key *lanes* (acceptance
+uniforms, residual resampling) so its rejection sampler never reuses a
+draft key.
+
+``temperature == 0`` is greedy: callers branch STATICALLY on
+``SamplingConfig.is_greedy`` and take a pure ``argmax`` path with no keys,
+keeping the default serving mode bit-identical to the pre-sampling engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# key lanes: every speculative phase folds its lane first, so draft tokens,
+# acceptance uniforms, and residual resamples never share randomness
+LANE_TOKEN = 0        # ordinary next-token sampling (serial, engine, drafts)
+LANE_ACCEPT = 1       # speculative acceptance uniforms
+LANE_RESIDUAL = 2     # speculative rejection resampling
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    """``temperature=0`` => greedy argmax (keys unused); ``top_k=0`` => the
+    full vocabulary. Frozen/hashable so jitted callables can close over it
+    statically."""
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingConfig()
+
+
+def base_key(cfg: SamplingConfig) -> jax.Array:
+    return jax.random.PRNGKey(cfg.seed)
+
+
+def token_key(base: jax.Array, pos, lane: int = LANE_TOKEN) -> jax.Array:
+    """Key for the token at absolute position ``pos`` (scalar or traced)."""
+    return jax.random.fold_in(jax.random.fold_in(base, lane), pos)
+
+
+def warp_logits(logits: jax.Array, cfg: SamplingConfig) -> jax.Array:
+    """Top-k mask + temperature scale on the last axis, in f32.
+
+    Masked entries go to -inf, so downstream ``softmax``/``categorical``
+    assign them exactly zero probability. Ties at the top-k boundary resolve
+    by ``jax.lax.top_k``'s stable (lowest-index-first) order — deterministic,
+    matching across the batched and serial paths."""
+    lg = logits.astype(jnp.float32)
+    if cfg.top_k > 0 and cfg.top_k < lg.shape[-1]:
+        kth = jax.lax.top_k(lg, cfg.top_k)[0][..., -1:]
+        lg = jnp.where(lg >= kth, lg, -jnp.inf)
+    if not cfg.is_greedy:
+        lg = lg / cfg.temperature
+    return lg
+
+
+def probs(logits: jax.Array, cfg: SamplingConfig) -> jax.Array:
+    """Post-warp probabilities (f32) — the p/q distributions speculative
+    rejection sampling compares must be the EXACT distributions the drafter
+    sampled from and the verifier would sample from."""
+    return jax.nn.softmax(warp_logits(logits, cfg), axis=-1)
+
+
+def sample(logits: jax.Array, cfg: SamplingConfig, key: jax.Array) -> jax.Array:
+    """One token from a single (V,) logits row. Greedy ignores ``key``."""
+    if cfg.is_greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, warp_logits(logits, cfg)).astype(
+        jnp.int32)
+
+
+def sample_batch(logits: jax.Array, cfg: SamplingConfig, base: jax.Array,
+                 pos: jax.Array, lane: int = LANE_TOKEN) -> jax.Array:
+    """Per-slot sampling for the engine's batched scan: ``logits`` (B, V),
+    ``pos`` (B,) absolute positions. Each row draws with its own
+    position-derived key, so a slot's tokens are independent of which other
+    slots happen to share its dispatch."""
+    if cfg.is_greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    keys = jax.vmap(lambda p: token_key(base, p, lane))(pos)
+    return jax.vmap(lambda lg, k: sample(lg, cfg, k))(logits, keys)

@@ -1,0 +1,334 @@
+"""Self-speculative decoding: the HQP artifact drafts, bf16 verifies.
+
+HQP's quality bound (Δacc ≤ 1.5% vs the dense parent) is exactly what makes
+the compressed artifact a high-acceptance *drafter* for its own
+full-precision parent: the drafter proposes K cheap tokens, the verifier
+scores all K+1 positions in ONE ``route="prefill"`` pass, and rejection
+sampling keeps every emitted token distributed exactly as the verifier
+alone would have produced — in greedy mode, bit-identically (``serve
+--engine --spec-k 4 --verify`` self-checks against serial bf16 decode).
+
+One speculative cycle per engine decode dispatch, entirely on device
+(ONE host sync per cycle, emitting 1..K+1 tokens):
+
+  draft    K drafter ``decode`` steps in a ``lax.scan`` over the drafter's
+           own compacted pool (PR 3's per-slot machinery), plus one
+           write-only step so the drafter cache has no KV gap when every
+           draft accepts;
+  verify   one verifier pass over the (B, K+1) chunk ``[t0, d1..dK]``
+           through ``lm.verify_step`` (the ``prefill`` route — PR 4's
+           absolute causal limits make position i of the chunk
+           bit-identical to a serial decode of the same prefix);
+  accept   greedy: longest prefix with ``d_{i+1} == argmax(verifier_i)``,
+           then the verifier's own token as correction/bonus.
+           sampling: standard modified rejection sampling — accept
+           ``d_{i+1}`` with prob ``min(1, p_i(d)/q_i(d))``, resample
+           rejections from ``normalize(max(p - q, 0))``;
+  rollback both pools' ``pos`` drop to the accepted length
+           (``state_pool.rollback_slots``) — stale candidate KV past the
+           new ``pos`` is masked by the absolute causal limit of every
+           later attend and overwritten before it can become visible, the
+           same invariant that makes slot reuse safe.
+
+Restriction: rollback-by-``pos`` only exists for position-indexed KV
+caches, so speculative mode refuses layer patterns with recurrent state
+(Mamba/xLSTM) at construction.
+
+The dual pools may have DIFFERENT cache shapes: the drafter pool sizes
+itself from the compacted artifact's params (pruned KV heads, INT8 KV),
+the verifier pool from the bf16 parent — ``Engine`` owns both and passes
+them per dispatch.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.serving import sampling as smp
+from repro.serving import state_pool as sp
+from repro.sharding.ctx import RunContext, default_ctx
+
+
+def check_drafter_compat(cfg, manifest) -> None:
+    """Refuse a drafter artifact built for a different model family before
+    any device work runs. ``manifest`` is an ``HQPManifest`` (or None to
+    skip — e.g. a drafter built in-process from the verifier's own params).
+    Pre-speculative artifacts (no recorded hash) pass with a vocab check
+    only when they recorded one."""
+    if manifest is None:
+        return
+    from repro.compress import arch_fingerprint
+    want = arch_fingerprint(cfg)
+    if manifest.arch_hash is not None and manifest.arch_hash != want:
+        raise ValueError(
+            f"drafter artifact arch_hash {manifest.arch_hash!r} (built for "
+            f"{manifest.arch!r}) does not match the verifier config "
+            f"{getattr(cfg, 'name', '?')!r} (fingerprint {want!r}) — a "
+            f"speculative drafter must share its verifier's vocab/arch")
+    if (manifest.vocab_size is not None
+            and manifest.vocab_size != getattr(cfg, "vocab_size", None)):
+        raise ValueError(
+            f"drafter artifact vocab_size {manifest.vocab_size} != verifier "
+            f"vocab_size {getattr(cfg, 'vocab_size', None)} — draft token "
+            f"ids would not be verifier token ids")
+
+
+class SpecDecoder:
+    """Holds the two parameter sets and the fused speculative device step.
+
+    ``spec_fn(draft_params, verify_params, draft_pool, verify_pool, prev,
+    tokens, active, eos, budget, k, cycles, window)`` is jitted with STATIC
+    ``(k, cycles, window)`` and donated pools; it runs ``cycles``
+    draft→verify cycles before the single host sync and returns ``(toks
+    (cycles*(k+1), B), emitted (cycles*(k+1), B), n_acc_emit (B,),
+    n_drafted (B,), draft_pool, verify_pool)`` where ``emitted[t, i]``
+    marks a real token for slot i in emission order, ``n_acc_emit`` counts
+    how many of slot i's emitted tokens were accepted drafts (the
+    acceptance-rate numerator; corrections/bonus tokens are emitted but
+    not "accepted"), and ``n_drafted`` the drafts proposed to it while
+    live (the denominator)."""
+
+    def __init__(self, cfg, draft_params: Any, verify_params: Any,
+                 ctx: Optional[RunContext] = None,
+                 draft_ctx: Optional[RunContext] = None, k: int = 4,
+                 cycles: int = 1,
+                 sampling: Optional[smp.SamplingConfig] = None,
+                 draft_manifest=None):
+        if k < 1:
+            raise ValueError(f"spec k must be >= 1, got {k}")
+        if cycles < 1:
+            raise ValueError(f"spec cycles must be >= 1, got {cycles}")
+        kinds = {kind for kind, _ in lm.layer_specs(cfg)}
+        if kinds - {"attn"}:
+            raise NotImplementedError(
+                f"speculative decoding rolls caches back by pos, which only "
+                f"position-indexed KV caches support; pattern has recurrent "
+                f"blocks {sorted(kinds - {'attn'})} whose state cannot "
+                f"rewind")
+        check_drafter_compat(cfg, draft_manifest)
+        self.cfg = cfg
+        self.k = k
+        self.cycles = cycles
+        self.draft_params = draft_params
+        self.verify_params = verify_params
+        self.ctx = ctx or default_ctx()
+        self.draft_ctx = draft_ctx or self.ctx
+        self.sampling = sampling or smp.GREEDY
+        self.spec_fn = jax.jit(self._build_spec(),
+                               static_argnums=(9, 10, 11),
+                               donate_argnums=(2, 3))
+
+    def plan(self, max_pos: int, max_seq: int,
+             max_budget: int) -> Tuple[int, int]:
+        """Per-dispatch ``(k_eff, cycles_eff)``, capped two ways:
+
+        * in-bounds: the vmapped ``dynamic_update_slice`` KV write CLAMPS
+          an out-of-range start — silently overwriting valid history — so
+          no chunk may write past ``max_seq``; C cycles write at most
+          ``C*(k+1)`` positions past ``max_pos``;
+        * right-sized: ``max_budget`` (the largest remaining token budget
+          over the live slots) bounds useful work — a request two tokens
+          from its length cap must not pay for k drafts, so the endgame
+          dispatch shrinks instead of drafting tokens nobody can emit.
+
+        ``k_eff`` is always >= 1: a live slot has budget >= 1, and
+        ``submit`` bounds prompt+budget by ``max_seq``."""
+        avail = max_seq - 1 - max_pos
+        k_eff = max(1, min(self.k, avail, max_budget))
+        cyc = max(1, min(self.cycles,
+                         (avail + 1) // (k_eff + 1),
+                         -(-max_budget // (k_eff + 1))))
+        return k_eff, cyc
+
+    def _build_spec(self):
+        cfg, dctx, vctx = self.cfg, self.draft_ctx, self.ctx
+        scfg = self.sampling
+        greedy = scfg.is_greedy
+        base = smp.base_key(scfg)
+
+        def cycle(dparams, vparams, dpool, vpool, prev, tokens, live, eos,
+                  budget, k, window):
+            """One draft→verify→accept→rollback cycle. ``live`` (B,) bool is
+            the slots still running THIS dispatch (slots that stopped in an
+            earlier cycle stay frozen: their pos never moves, so their cycle
+            work deterministically REWRITES the same cache positions with
+            identical bits — idempotent, and the host evicts them anyway).
+            """
+            b = tokens.shape[0]
+            pos_c = vpool["pos"]                         # (B,) — == dpool's
+                                                         # for live slots
+
+            # ---- draft: one 2-token healing chunk + k-1 decode steps ---
+            # The first draft invocation prefills [prev, t0] at positions
+            # pos-1..pos: position pos-1 is REWRITTEN with bit-identical KV
+            # (same token, same absolute position, same cached prefix) —
+            # except after a fully-accepted cycle, where d_k's KV was never
+            # drafted and this chunk heals the one-position gap. That folds
+            # the old trailing "write-only" drafter step into the next
+            # cycle's first invocation: k draft tokens cost k invocations,
+            # not k+1.
+            chunk2 = jnp.concatenate([prev, tokens], axis=1)      # (B, 2)
+            dlogits, dpool = lm.decode_step(
+                dparams, cfg, {"caches": dpool["caches"],
+                               "pos": dpool["pos"] - 1},
+                chunk2, dctx, window=window, route="prefill")
+            lg0 = dlogits[:, -1]
+            if greedy:
+                d1 = jnp.argmax(lg0, axis=-1).astype(jnp.int32)
+                q1 = jnp.zeros((), jnp.float32)          # unused in greedy
+            else:
+                q1 = smp.probs(lg0, scfg)
+                d1 = smp.sample_batch(lg0, scfg, base, dpool["pos"])
+
+            def body(carry, _):
+                dpool, tok = carry
+                logits, new = lm.decode_step(dparams, cfg, dpool, tok, dctx,
+                                             window=window, route="decode")
+                lg = logits[:, -1]
+                if greedy:
+                    nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                    q = jnp.zeros((), jnp.float32)
+                else:
+                    q = smp.probs(lg, scfg)
+                    nxt = smp.sample_batch(lg, scfg, base, new["pos"])
+                tok = jnp.where(live, nxt, tok[:, 0])[:, None]
+                return (new, tok), (nxt, q)
+
+            (dpool, _), (drafts, qprobs) = jax.lax.scan(
+                body, (dpool, jnp.where(live, d1, tokens[:, 0])[:, None]),
+                None, length=k - 1)
+            d_bk = jnp.concatenate(
+                [d1[:, None], jnp.moveaxis(drafts, 0, 1)], axis=1)  # (B, k)
+            if not greedy:
+                qprobs = jnp.concatenate(
+                    [q1[:, None], jnp.moveaxis(qprobs, 0, 1)], axis=1)
+
+            # ---- verify: ONE multi-position pass on the verifier -------
+            chunk = jnp.concatenate([tokens, d_bk], axis=1)   # (B, k+1)
+            vlogits, vpool = lm.verify_step(vparams, cfg, vpool, chunk, vctx,
+                                            window=window)
+
+            # ---- accept ------------------------------------------------
+            if greedy:
+                v = jnp.argmax(vlogits, axis=-1).astype(jnp.int32)  # (B,k+1)
+                match = (d_bk == v[:, :k]).astype(jnp.int32)
+                n_acc = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+                corr = v          # correction at index i is the verifier's
+                                  # own greedy token — serial-identical
+            else:
+                p = smp.probs(vlogits, scfg)             # (B, k+1, V)
+                q = qprobs                               # (B, k, V)
+                dpos = pos_c[:, None] + 1 + jnp.arange(k)[None, :]
+                ukey = jax.vmap(jax.vmap(
+                    lambda pp: smp.token_key(base, pp, smp.LANE_ACCEPT)))(dpos)
+                u = jax.vmap(jax.vmap(jax.random.uniform))(ukey)
+                p_d = jnp.take_along_axis(p[:, :k], d_bk[..., None],
+                                          axis=-1)[..., 0]
+                q_d = jnp.take_along_axis(q, d_bk[..., None],
+                                          axis=-1)[..., 0]
+                accept = (u * q_d <= p_d).astype(jnp.int32)   # u <= p/q
+                n_acc = jnp.sum(jnp.cumprod(accept, axis=1), axis=1)
+                # corrections: residual max(p-q, 0) normalized at i < k (the
+                # rejected position's leftover verifier mass); the bonus at
+                # i == k samples the verifier distribution directly. A zero
+                # residual (p == q exactly) falls back to p — that lane is
+                # only read when a rejection happened, but NaNs from 0/0
+                # must not exist even masked.
+                res = jnp.maximum(p[:, :k] - q, 0.0)
+                rsum = jnp.sum(res, axis=-1, keepdims=True)
+                res = jnp.where(rsum > 0, res / jnp.maximum(rsum, 1e-30),
+                                p[:, :k])
+                cdist = jnp.concatenate([res, p[:, k:]], axis=1)  # (B,k+1,V)
+                cpos = pos_c[:, None] + 1 + jnp.arange(k + 1)[None, :]
+                ckey = jax.vmap(jax.vmap(
+                    lambda pp: smp.token_key(base, pp, smp.LANE_RESIDUAL)))(
+                        cpos)
+                corr = jax.vmap(jax.vmap(
+                    lambda kk, d: jax.random.categorical(kk, jnp.log(d))))(
+                        ckey, cdist).astype(jnp.int32)
+
+            # ---- emit with EOS/budget truncation (host semantics) ------
+            # Emission is a PREFIX of the k+1 candidate positions: index i
+            # emits iff i <= n_acc (accepted drafts + one correction/bonus),
+            # i < budget, and no earlier emitted token hit EOS — so every
+            # gate is a vectorized prefix mask, no per-position unroll.
+            i_idx = jnp.arange(k + 1)[None, :]                    # (1, k+1)
+            d_pad = jnp.concatenate(
+                [d_bk, jnp.zeros((b, 1), jnp.int32)], axis=1)
+            cand = jnp.where(i_idx < n_acc[:, None], d_pad, corr)  # (B, k+1)
+            prefix = (live[:, None] & (i_idx <= n_acc[:, None])
+                      & (i_idx < budget[:, None]))
+            eos_hit = (eos[:, None] >= 0) & (cand == eos[:, None]) & prefix
+            eos_before = jnp.cumsum(eos_hit, axis=1) - eos_hit    # exclusive
+            emit = prefix & (eos_before == 0)
+            n_emit = jnp.sum(emit, axis=1).astype(jnp.int32)
+            n_acc_emit = jnp.sum(emit & (i_idx < n_acc[:, None]),
+                                 axis=1).astype(jnp.int32)
+
+            # ---- per-cycle rollback + next-cycle carries ---------------
+            # pos drops to the accepted length; non-live rows have
+            # n_emit == 0, but their pos still advanced k+1 inside this
+            # cycle's model calls, so the rollback mask must cover EVERY
+            # row (frozen and mid-prefill included), not just live ones
+            pos_new = pos_c + n_emit
+            every = jnp.ones_like(live)
+            dpool = sp.rollback_slots(dpool, pos_new, every)
+            vpool = sp.rollback_slots(vpool, pos_new, every)
+            last_i = jnp.clip(n_emit - 1, 0, k)[:, None]
+            prev_i = jnp.clip(n_emit - 2, 0, k)[:, None]
+            new_last = jnp.take_along_axis(cand, last_i, axis=1)[:, 0]
+            new_prev = jnp.take_along_axis(cand, prev_i, axis=1)[:, 0]
+            tokens2 = jnp.where(n_emit >= 1, new_last, tokens[:, 0])[:, None]
+            prev2 = jnp.where(n_emit >= 2, new_prev,
+                              jnp.where(n_emit == 1, tokens[:, 0],
+                                        prev[:, 0]))[:, None]
+            stopped = jnp.any(eos_hit & emit, axis=1) | (budget - n_emit <= 0)
+            live2 = live & ~stopped
+            budget2 = budget - n_emit
+            drafted = jnp.where(live, k, 0).astype(jnp.int32)
+            return (dpool, vpool, prev2, tokens2, live2, budget2,
+                    jnp.where(emit, cand, 0), emit, n_acc_emit, drafted)
+
+        def spec(dparams, vparams, dpool, vpool, prev, tokens, active, eos,
+                 budget, k, cycles, window):
+            """prev/tokens (B, 1) i32: the two newest emitted tokens per
+            slot (``prev`` at position pos-1, ``tokens`` pending at pos);
+            active (B,) bool; eos (B,) i32 (-1 = none); budget (B,) i32
+            remaining tokens. Runs ``cycles`` draft→verify cycles before
+            the single host sync; slots stopping mid-dispatch freeze.
+
+            Slots are NOT select-masked per model invocation (the plain
+            decode scan must freeze mid-scan stoppers bit-exactly; here
+            frozen slots' work is idempotent and mid-prefill slots are
+            restored wholesale below) — two full-pool selects per dispatch
+            instead of per-step."""
+            dpool0, vpool0 = dpool, vpool
+
+            def step(carry, _):
+                dpool, vpool, prev, tokens, live, eos_, budget = carry
+                (dpool, vpool, prev, tokens, live, budget,
+                 outs, emit, n_acc, drafted) = cycle(
+                    dparams, vparams, dpool, vpool, prev, tokens, live,
+                    eos_, budget, k, window)
+                return ((dpool, vpool, prev, tokens, live, eos_, budget),
+                        (outs, emit, n_acc, drafted))
+
+            ((dpool, vpool, _, _, _, _, _),
+             (outs, emits, n_accs, drafteds)) = jax.lax.scan(
+                step, (dpool, vpool, prev, tokens, active, eos, budget),
+                None, length=cycles)
+
+            # restore slots that were inactive at dispatch (mid-prefill /
+            # free): their cycle work wrote garbage at their own positions
+            dpool = sp.select_slots(dpool, dpool0, active)
+            vpool = sp.select_slots(vpool, vpool0, active)
+            # (C, B, k+1) -> (C*(k+1), B) in per-slot emission order
+            outs = jnp.moveaxis(outs, 2, 1).reshape(cycles * (k + 1), -1)
+            emits = jnp.moveaxis(emits, 2, 1).reshape(cycles * (k + 1), -1)
+            return (outs, emits, jnp.sum(n_accs, axis=0),
+                    jnp.sum(drafteds, axis=0), dpool, vpool)
+
+        return spec

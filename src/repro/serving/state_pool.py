@@ -76,6 +76,23 @@ def reset_slot(pool: Dict[str, Any], slot: jax.Array,
     return scatter_slot(pool, slot, template)
 
 
+def rollback_slots(pool: Dict[str, Any], pos: jax.Array,
+                   active: jax.Array) -> Dict[str, Any]:
+    """Roll each active slot's decode position back to ``pos`` (B,) after a
+    speculative verify pass over-wrote K+1 candidate positions.
+
+    Only ``pos`` moves — the cache buffers keep the rejected candidates'
+    stale KV, which is safe for the same reason slot reuse is: every later
+    attend masks by the absolute causal limit (``kv_pos <= start + i``), so
+    positions at or past the rolled-back ``pos`` are invisible until a later
+    write replaces them, and writes always precede the attend that could
+    first see them. This only holds for position-indexed (KV) caches;
+    recurrent Mamba/xLSTM states advance irreversibly, which is why the
+    speculative decoder refuses non-attention patterns."""
+    return {"caches": pool["caches"],
+            "pos": jnp.where(active, pos.astype(jnp.int32), pool["pos"])}
+
+
 def select_slots(new: Dict[str, Any], old: Dict[str, Any],
                  active: jax.Array) -> Dict[str, Any]:
     """Per-slot select: keep ``new`` where ``active`` (B,) bool, else ``old``.

@@ -1,0 +1,317 @@
+"""Self-speculative serving: the HQP artifact drafts, bf16 verifies.
+
+Load-bearing guarantees:
+  * GREEDY speculative engine output is TOKEN-IDENTICAL to serial bf16
+    decode — the drafter can only ever propose, never change a token
+    (prompt lengths x spec-K x cycles x KV dtype, incl. EOS/budget stops
+    landing mid-cycle and the cache-capacity k_eff cap);
+  * sampling is seed-deterministic: same seed => same tokens, engine vs
+    serial (plain mode) and run vs run (speculative mode);
+  * ``Engine.stats`` alone suffice to compute acceptance rate, in both
+    plain and speculative modes (drafted/accepted token counters);
+  * the artifact manifest records drafter compatibility (vocab/arch hash)
+    and ``SpecDecoder`` refuses mismatched or recurrent-state drafters;
+  * ``scripts/check_bench.py`` fails by NAME on a missing expected variant
+    and gates the speculative acceptance-rate floor.
+"""
+import dataclasses
+import importlib.util
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # bare container: skip property tests
+    from _hypothesis_stub import given, settings, st
+
+from repro import configs
+from repro.compress import arch_fingerprint, compress
+from repro.models import lm
+from repro.serving import (Engine, Request, SamplingConfig, SchedulerConfig,
+                           SpecDecoder, check_drafter_compat, serial_decode)
+from repro.sharding.ctx import default_ctx
+
+ARCH = "qwen3-0.6b"
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get_smoke_config(ARCH)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    art = compress(params, cfg, log=lambda s: None)   # PTQ-only artifact
+    return cfg, params, art
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, n).tolist() for n in lens]
+
+
+def _spec_engine(cfg, params, art, *, quantized_kv=True, k=4, cycles=1,
+                 n_slots=3, max_seq=64, chunk=5, sampling=None):
+    ctx_q = dataclasses.replace(default_ctx(), quantized_kv=quantized_kv)
+    return Engine(params, cfg, n_slots=n_slots, max_seq=max_seq,
+                  sched=SchedulerConfig(prefill_chunk=chunk),
+                  sampling=sampling, draft_params=art.params, spec_k=k,
+                  spec_cycles=cycles, draft_ctx=ctx_q,
+                  draft_manifest=art.manifest)
+
+
+# ----------------------------------------------------------- greedy identity
+@pytest.mark.parametrize("quantized_kv", [True, False])
+def test_spec_greedy_token_identical(setup, quantized_kv):
+    """Staggered requests through the speculative engine == serial bf16
+    greedy decode, token for token — the drafter (INT8 weights, either KV
+    dtype) only ever proposes."""
+    cfg, params, art = setup
+    prompts = _prompts(cfg, [9, 13, 5], seed=2)
+    eng = _spec_engine(cfg, params, art, quantized_kv=quantized_kv,
+                       k=4, cycles=2)
+    res = eng.run([Request(prompt=p, max_new_tokens=8) for p in prompts],
+                  arrival_ticks=[0, 2, 4])
+    for i, p in enumerate(prompts):
+        ref = serial_decode(params, cfg, p, 8, max_seq=64)
+        assert res[i].tokens == ref, (i, res[i].tokens, ref)
+    assert eng.stats["drafted_tokens"] > 0
+    assert 0 < eng.stats["accepted_tokens"] <= eng.stats["drafted_tokens"]
+
+
+def test_spec_eos_mid_cycle(setup):
+    """An EOS landing inside an accepted draft run must truncate the
+    emission, roll the caches back, and finish the request — identically
+    to serial decode with the same EOS id."""
+    cfg, params, art = setup
+    prompt = _prompts(cfg, [9], seed=3)[0]
+    eos_tok = serial_decode(params, cfg, prompt, 5, max_seq=64)[2]
+    eng = _spec_engine(cfg, params, art, k=4, cycles=2, n_slots=1)
+    res = eng.run([Request(prompt=prompt, max_new_tokens=10,
+                           eos_id=eos_tok)])
+    ref = serial_decode(params, cfg, prompt, 10, max_seq=64, eos_id=eos_tok)
+    assert res[0].tokens == ref
+    assert res[0].finish_reason == "eos"
+
+
+def test_spec_cache_capacity_caps_draft_length(setup):
+    """A slot near the cache end must shrink k_eff (the verify chunk's
+    writes CLAMP out of range, silently corrupting history) — output stays
+    identical with a prompt that leaves less than spec_k+1 headroom."""
+    cfg, params, art = setup
+    prompt = _prompts(cfg, [24], seed=4)[0]
+    eng = _spec_engine(cfg, params, art, k=8, cycles=2, n_slots=1,
+                       max_seq=32, chunk=8)
+    res = eng.run([Request(prompt=prompt, max_new_tokens=7)])
+    assert res[0].tokens == serial_decode(params, cfg, prompt, 7, max_seq=32)
+
+
+@given(lens=st.lists(st.integers(1, 24), min_size=1, max_size=2),
+       k=st.integers(1, 6), cycles=st.integers(1, 3),
+       quantized=st.booleans())
+@settings(max_examples=5, deadline=None)
+def test_spec_greedy_identity_property(lens, k, cycles, quantized):
+    """Property sweep: ANY prompt lengths x spec-K x cycle count x KV dtype
+    keep speculative greedy output == serial bf16 greedy decode."""
+    cfg = configs.get_smoke_config(ARCH)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    art = compress(params, cfg, log=lambda s: None)
+    prompts = _prompts(cfg, lens, seed=sum(lens) + k + cycles)
+    eng = _spec_engine(cfg, params, art, quantized_kv=quantized, k=k,
+                       cycles=cycles, n_slots=2)
+    res = eng.run([Request(prompt=p, max_new_tokens=6) for p in prompts],
+                  arrival_ticks=[2 * i for i in range(len(prompts))])
+    for i, p in enumerate(prompts):
+        ref = serial_decode(params, cfg, p, 6, max_seq=64)
+        assert res[i].tokens == ref, (lens, k, cycles, quantized,
+                                      res[i].tokens, ref)
+
+
+# ----------------------------------------------------------------- sampling
+def test_sampling_determinism_engine_vs_serial(setup):
+    """Fixed seed => the engine's batched sampled decode equals serial
+    sampled decode token-for-token (the shared seed x position key rule),
+    and genuinely differs from greedy."""
+    cfg, params, _ = setup
+    scfg = SamplingConfig(temperature=0.8, top_k=8, seed=7)
+    prompts = _prompts(cfg, [9, 13], seed=5)
+    eng = Engine(params, cfg, n_slots=2, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=5), sampling=scfg)
+    res = eng.run([Request(prompt=p, max_new_tokens=8) for p in prompts])
+    diff_from_greedy = False
+    for i, p in enumerate(prompts):
+        ref = serial_decode(params, cfg, p, 8, max_seq=64, sampling=scfg)
+        assert res[i].tokens == ref, (i, res[i].tokens, ref)
+        diff_from_greedy |= (res[i].tokens
+                            != serial_decode(params, cfg, p, 8, max_seq=64))
+    assert diff_from_greedy, "temperature sampling never left the argmax"
+
+
+def test_spec_sampling_fixed_seed_deterministic(setup):
+    """Speculative sampling (rejection-sampled) is run-to-run deterministic
+    for a fixed seed, and temperature=0 sampling collapses to the greedy
+    (serial-identical) path."""
+    cfg, params, art = setup
+    prompts = _prompts(cfg, [9, 13], seed=6)
+    scfg = SamplingConfig(temperature=0.8, top_k=8, seed=11)
+    outs = []
+    for _ in range(2):
+        eng = _spec_engine(cfg, params, art, k=4, cycles=2, n_slots=2,
+                           sampling=scfg)
+        res = eng.run([Request(prompt=p, max_new_tokens=6) for p in prompts])
+        outs.append({i: r.tokens for i, r in res.items()})
+    assert outs[0] == outs[1]
+    eng = _spec_engine(cfg, params, art, k=4, cycles=2, n_slots=2,
+                       sampling=SamplingConfig(temperature=0.0, seed=11))
+    res = eng.run([Request(prompt=p, max_new_tokens=6) for p in prompts])
+    for i, p in enumerate(prompts):
+        assert res[i].tokens == serial_decode(params, cfg, p, 6, max_seq=64)
+
+
+# -------------------------------------------------------------------- stats
+def test_stats_acceptance_computable_plain_mode(setup):
+    """Plain multi-step decode: drafted_tokens counts EVERY device
+    candidate for slots live at dispatch (mid-scan freezes included — the
+    device work the old stats under-counted), accepted_tokens the ones
+    that landed, so acceptance rate falls out of stats alone."""
+    cfg, params, _ = setup
+    prompts = _prompts(cfg, [9, 5], seed=7)
+    # request 0 stops via EOS partway through a decode_steps=8 scan
+    eos_tok = serial_decode(params, cfg, prompts[0], 3, max_seq=64)[2]
+    eng = Engine(params, cfg, n_slots=2, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=4, decode_steps=8))
+    res = eng.run([Request(prompt=prompts[0], max_new_tokens=6,
+                           eos_id=eos_tok),
+                   Request(prompt=prompts[1], max_new_tokens=6)])
+    emitted_decode = sum(len(r.tokens) for r in res.values()) - 2  # prefill
+    assert eng.stats["accepted_tokens"] == emitted_decode
+    # the EOS'd slot burned full scans while frozen: strictly more drafted
+    assert eng.stats["drafted_tokens"] > eng.stats["accepted_tokens"]
+    rate = eng.stats["accepted_tokens"] / eng.stats["drafted_tokens"]
+    assert 0 < rate < 1
+
+
+def test_stats_acceptance_computable_spec_mode(setup):
+    """Speculative stats: acceptance = accepted/drafted from stats alone;
+    corrections are emitted but never counted as accepted drafts."""
+    cfg, params, art = setup
+    prompts = _prompts(cfg, [9, 13], seed=8)
+    eng = _spec_engine(cfg, params, art, k=4, cycles=2, n_slots=2)
+    res = eng.run([Request(prompt=p, max_new_tokens=8) for p in prompts])
+    emitted_decode = sum(len(r.tokens) for r in res.values()) - 2
+    assert eng.stats["accepted_tokens"] <= eng.stats["drafted_tokens"]
+    # every decode-emitted token is an accepted draft or a correction;
+    # corrections = emitted - accepted >= number of decode dispatches' 1
+    assert eng.stats["accepted_tokens"] < emitted_decode
+    rate = eng.stats["accepted_tokens"] / eng.stats["drafted_tokens"]
+    assert 0 < rate <= 1
+
+
+# ----------------------------------------------------- manifest / construction
+def test_manifest_records_drafter_compat(setup):
+    cfg, _, art = setup
+    assert art.manifest.vocab_size == cfg.vocab_size
+    assert art.manifest.arch_hash == arch_fingerprint(cfg)
+    check_drafter_compat(cfg, art.manifest)      # must not raise
+
+    bad = dataclasses.replace(art.manifest, arch_hash="deadbeef00000000")
+    with pytest.raises(ValueError, match="arch_hash"):
+        check_drafter_compat(cfg, bad)
+    bad2 = dataclasses.replace(art.manifest,
+                               vocab_size=cfg.vocab_size + 1)
+    with pytest.raises(ValueError, match="vocab_size"):
+        check_drafter_compat(cfg, bad2)
+    # pre-speculative artifacts (no recorded hash) still load
+    legacy = dataclasses.replace(art.manifest, arch_hash=None,
+                                 vocab_size=None)
+    check_drafter_compat(cfg, legacy)
+
+
+def test_spec_rejects_recurrent_patterns():
+    """Rollback-by-pos only exists for KV caches: recurrent (xLSTM/Mamba)
+    patterns must be refused at construction, before any device work."""
+    cfg = configs.get_smoke_config("xlstm-1.3b")
+    with pytest.raises(NotImplementedError, match="rewind"):
+        SpecDecoder(cfg, draft_params=None, verify_params=None)
+
+
+# -------------------------------------------------------------- check_bench
+def _load_check_bench():
+    path = (pathlib.Path(__file__).resolve().parents[1] / "scripts"
+            / "check_bench.py")
+    spec = importlib.util.spec_from_file_location("check_bench", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _bench_doc(tmp_path, serving):
+    doc = {"schema": "repro-bench/v1",
+           "rows": [{"name": "serving/x", "us_per_call": 1.0,
+                     "derived": "ok"}],
+           "errors": [], "serving": serving}
+    p = tmp_path / "BENCH_pr.json"
+    p.write_text(json.dumps(doc))
+    return p
+
+
+def _variant(**kw):
+    v = {"n_requests": 3, "tokens_per_s": 100.0, "latency_p50_ms": 1.0,
+         "latency_p95_ms": 2.0, "ttft_p50_ms": 1.0, "ttft_p95_ms": 2.0,
+         "param_bytes": 10, "out_tokens": 30}
+    v.update(kw)
+    return v
+
+
+def test_check_bench_names_missing_variant(tmp_path, capsys):
+    cb = _load_check_bench()
+    path = _bench_doc(tmp_path, {
+        "schema": "repro-bench-serving/v1",
+        "expected_variants": ["bf16", "speculative"],
+        "variants": {"bf16": _variant()}})
+    with pytest.raises(SystemExit):
+        cb.main([str(path)])
+    out = capsys.readouterr().out
+    assert "missing expected variant 'speculative'" in out
+
+
+def test_check_bench_gates_acceptance_floor(tmp_path, capsys):
+    cb = _load_check_bench()
+    spec = _variant(acceptance_rate=0.5, drafted_tokens=100,
+                    accepted_tokens=50, baseline_tokens_per_s=50.0)
+    path = _bench_doc(tmp_path, {
+        "schema": "repro-bench-serving/v1",
+        "expected_variants": ["speculative"],
+        "variants": {"speculative": spec}})
+    with pytest.raises(SystemExit):
+        cb.main([str(path)])
+    out = capsys.readouterr().out
+    assert "acceptance rate" in out and "0.7" in out
+
+
+def test_check_bench_gates_speculative_speedup(tmp_path, capsys):
+    cb = _load_check_bench()
+    spec = _variant(acceptance_rate=0.9, drafted_tokens=100,
+                    accepted_tokens=90, baseline_tokens_per_s=50.0,
+                    tokens_per_s=40.0)
+    path = _bench_doc(tmp_path, {
+        "schema": "repro-bench-serving/v1",
+        "expected_variants": ["speculative"],
+        "variants": {"speculative": spec,
+                     "spec_baseline": _variant(tokens_per_s=50.0)}})
+    with pytest.raises(SystemExit):
+        cb.main([str(path)])
+    assert "does not beat" in capsys.readouterr().out
+
+
+def test_check_bench_accepts_healthy_speculative(tmp_path):
+    cb = _load_check_bench()
+    spec = _variant(acceptance_rate=0.85, drafted_tokens=100,
+                    accepted_tokens=85, baseline_tokens_per_s=50.0,
+                    tokens_per_s=80.0)
+    path = _bench_doc(tmp_path, {
+        "schema": "repro-bench-serving/v1",
+        "expected_variants": ["speculative", "spec_baseline"],
+        "variants": {"speculative": spec,
+                     "spec_baseline": _variant(tokens_per_s=50.0)}})
+    assert cb.main([str(path)]) == 0

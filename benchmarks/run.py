@@ -13,6 +13,7 @@ runs so this module is always executable on a bare CPU container.
   Fig. 2/3 analogue (LM fleet)              -> bench_lm_hqp_serving
   continuous-batching engine                -> bench_serving
   self-speculative (HQP drafts, bf16 checks)-> bench_speculative
+  paged KV + shared-prefix reuse            -> bench_paged
   decode attention (windowed vs full)       -> bench_decode_attention
   prefill attention (kernel vs einsum)      -> bench_prefill_attention
   kernels                                   -> bench_kernels
@@ -438,6 +439,150 @@ def bench_speculative(out_path: str = "BENCH_serving.json") -> List[Row]:
     return rows
 
 
+def bench_paged(out_path: str = "BENCH_serving.json") -> List[Row]:
+    """Paged KV cache vs the contiguous pool it replaced, CI-gated by
+    ``check_bench``:
+
+      * ``paged`` vs ``paged_baseline`` — the SAME no-sharing workload
+        (distinct random prompts long enough to cross page boundaries) on a
+        page_size=16 engine vs a contiguous engine, timed in interleaved
+        passes (min per engine, the ``bench_speculative`` discipline so
+        machine drift cannot bias the ratio). Paging is pure bookkeeping —
+        same kernels, one extra page-table gather — so paged tokens/s must
+        stay >= 0.95x contiguous. page_size == window_block here so both
+        engines attend IDENTICAL visible windows at every dispatch and the
+        ratio isolates pure indirection cost (a page size above the window
+        block additionally rounds windows up to whole pages — a real cost,
+        but a window-bucketing effect, measured by the attention sweeps,
+        not a page-table one; it vanishes as max_seq/page grows while this
+        smoke cache is only 2 pages deep). The prefix cache is OFF because
+        this variant measures overhead, not reuse.
+      * ``paged_shared`` — the repeated-system-prompt workload paging
+        exists for: every request shares a 64-token (one-page) head, so
+        after the warmup run populates the hash-keyed prefix cache, every
+        timed admission maps the shared page copy-free (refcount++) and
+        prefills only the tail. Gates: >= 1 prefix hit, prefilled tokens <
+        total prompt tokens, and ``kv_bytes_peak`` <= 0.6x the contiguous
+        footprint for the same (n_slots, max_seq) — the arena only holds
+        pages that are actually mapped, while a contiguous pool pays
+        n_slots * max_seq up front."""
+    import jax
+    from repro import configs
+    from repro.core.pruning import param_bytes
+    from repro.models import lm
+    from repro.serving import (Engine, Request, SchedulerConfig,
+                               summarize_results)
+
+    cfg = configs.get_smoke_config("qwen3-0.6b")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    pbytes = int(param_bytes(params))
+    rng = np.random.RandomState(0)
+    n_req, new_tok, n_slots, chunk, dsteps = 6, 16, 4, 16, 4
+    max_seq, page_size = 128, 64
+    parity_ps = 16                    # == window_block: identical windows
+    # 96..108-token prompts + 16 generated: every slot's KV spans 7-8
+    # pages at the parity page size
+    prompts = [rng.randint(0, cfg.vocab_size, 96 + (5 * i) % 13).tolist()
+               for i in range(n_req)]
+    reqs = [Request(prompt=pr, max_new_tokens=new_tok) for pr in prompts]
+    arrivals = [0] * n_req
+
+    payload = _serving_payload(cfg, n_req, n_slots, chunk, new_tok, dsteps)
+    rows: List[Row] = []
+    sched = SchedulerConfig(prefill_chunk=chunk, decode_steps=dsteps)
+    cont_eng = Engine(params, cfg, n_slots=n_slots, max_seq=max_seq,
+                      sched=sched)
+    paged_eng = Engine(params, cfg, n_slots=n_slots, max_seq=max_seq,
+                       sched=sched, page_size=parity_ps, prefix_cache=False)
+    # contiguous engines report their static footprint once at init; the
+    # timed-run stat zeroing would lose it (paged engines re-track via the
+    # page gauges), so snapshot it here
+    cont_kv_bytes = cont_eng.stats["kv_bytes_peak"]
+    best = {}
+    for name, eng in (("cont", cont_eng), ("paged", paged_eng)):
+        eng.run(reqs, arrival_ticks=arrivals)      # warmup: compile all
+    for _ in range(3):                             # interleaved timed passes
+        for name, eng in (("cont", cont_eng), ("paged", paged_eng)):
+            for k in eng.stats:
+                eng.stats[k] = 0
+            t0 = time.perf_counter()
+            results = eng.run(reqs, arrival_ticks=arrivals)
+            wall = time.perf_counter() - t0
+            if name not in best or wall < best[name][1]:
+                best[name] = (results, wall, dict(eng.stats))
+
+    for vname, key in (("paged", "paged"), ("paged_baseline", "cont")):
+        results, wall, st = best[key]
+        v = {
+            **summarize_results(results, wall),
+            "param_bytes": pbytes,
+            "page_size": parity_ps if key == "paged" else 0,
+            "decode_steps": dsteps,
+            "host_syncs": st["host_syncs"],
+            "device_steps": st["device_steps"],
+            "kv_bytes_peak": (st["kv_bytes_peak"] if key == "paged"
+                              else cont_kv_bytes),
+        }
+        if key == "paged":
+            v.update(pages_peak=st["pages_peak"], prefix_cache=False)
+        payload["variants"][vname] = v
+        payload["expected_variants"].append(vname)
+        rows.append((f"serving/{vname}",
+                     wall / max(v["out_tokens"], 1) * 1e6,
+                     f"tok_s={v['tokens_per_s']:.1f} "
+                     f"p50={v['latency_p50_ms']:.0f}ms "
+                     f"p95={v['latency_p95_ms']:.0f}ms "
+                     f"page_size={v['page_size']} "
+                     f"kv_peak={v['kv_bytes_peak']}"))
+    ratio = (payload["variants"]["paged"]["tokens_per_s"]
+             / max(payload["variants"]["paged_baseline"]["tokens_per_s"],
+                   1e-9))
+    rows[-2] = (rows[-2][0], rows[-2][1],
+                rows[-2][2] + f" vs_contiguous={ratio:.2f}x")
+
+    # --- shared-prefix workload: one 64-token system prompt, distinct tails
+    head = rng.randint(0, cfg.vocab_size, page_size).tolist()
+    sh_reqs = [Request(prompt=head
+                       + rng.randint(0, cfg.vocab_size, 8 + (3 * i) % 9)
+                       .tolist(),
+                       max_new_tokens=new_tok) for i in range(n_req)]
+    sh_max_seq = 192
+    eng = Engine(params, cfg, n_slots=n_slots, max_seq=sh_max_seq,
+                 sched=sched, page_size=page_size)
+    results, wall = _timed_engine_run(eng, sh_reqs, [0] * n_req)
+    st = eng.stats
+    prompt_tokens = sum(len(r.prompt) for r in sh_reqs)
+    # what a contiguous pool would pin for the same slots/capacity
+    contiguous_bytes = eng._kv_page_bytes * n_slots * eng.max_pages
+    v = {
+        **summarize_results(results, wall),
+        "param_bytes": pbytes,
+        "page_size": page_size,
+        "max_seq": sh_max_seq,
+        "prefix_hits": st["prefix_hits"],
+        "prefix_hit_tokens": st["prefix_hit_tokens"],
+        "bytes_saved": st["bytes_saved"],
+        "cow_copies": st["cow_copies"],
+        "prefill_tokens": st["prefill_tokens"],
+        "prompt_tokens": prompt_tokens,
+        "pages_peak": st["pages_peak"],
+        "kv_bytes_peak": st["kv_bytes_peak"],
+        "contiguous_kv_bytes": contiguous_bytes,
+    }
+    payload["variants"]["paged_shared"] = v
+    payload["expected_variants"].append("paged_shared")
+    rows.append((
+        "serving/paged_shared", wall / max(v["out_tokens"], 1) * 1e6,
+        f"tok_s={v['tokens_per_s']:.1f} hits={v['prefix_hits']} "
+        f"prefilled={v['prefill_tokens']}/{prompt_tokens} "
+        f"kv_peak={v['kv_bytes_peak']}/{contiguous_bytes} "
+        f"({v['kv_bytes_peak'] / contiguous_bytes:.2f}x contiguous)"))
+
+    if out_path:
+        pathlib.Path(out_path).write_text(json.dumps(payload, indent=1))
+    return rows
+
+
 def bench_decode_attention() -> List[Row]:
     """Decode-attention ms/step vs cache capacity (``max_seq`` sweep).
 
@@ -631,6 +776,7 @@ BENCHES = [
     bench_lm_hqp_serving,
     bench_serving,
     bench_speculative,
+    bench_paged,
     bench_decode_attention,
     bench_prefill_attention,
     bench_kernels,

@@ -1,0 +1,80 @@
+"""Warn-only diff of a fresh bench run against the committed baseline.
+
+  python scripts/bench_diff.py BENCH_pr.json /tmp/baseline.json
+
+CI generates BENCH_pr.json in the workspace (overwriting the checked-out
+copy), extracts the committed copy via ``git show HEAD:BENCH_pr.json``, and
+runs this to surface regressions as GitHub warning annotations — NEVER as
+failures. The hard perf gates live in ``check_bench.py``; this script is
+the trajectory view: it flags serving variants whose tokens/s dropped more
+than TOK_S_WARN and rows whose us_per_call grew more than US_WARN relative
+to the committed numbers, so a PR that legally passes the gates but quietly
+costs 20% still shows up in the checks tab. Exit code is always 0 (a
+missing or unparseable baseline just means there is nothing to diff —
+first PR after the bench landed, or a force-push history edit).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+TOK_S_WARN = 0.85   # serving variant tokens/s below this fraction of base
+US_WARN = 1.25      # row us_per_call above this multiple of base
+
+
+def _load(path: str):
+    try:
+        return json.loads(pathlib.Path(path).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_diff: cannot read {path} ({e}); nothing to diff")
+        return None
+
+
+def main(argv) -> int:
+    if len(argv) != 2:
+        print("usage: bench_diff.py NEW.json BASELINE.json")
+        return 0
+    new, base = _load(argv[0]), _load(argv[1])
+    if not new or not base:
+        return 0
+    warned = 0
+
+    nv = (new.get("serving") or {}).get("variants") or {}
+    bv = (base.get("serving") or {}).get("variants") or {}
+    for name in sorted(set(nv) & set(bv)):
+        n_tok = nv[name].get("tokens_per_s")
+        b_tok = bv[name].get("tokens_per_s")
+        if not (isinstance(n_tok, (int, float))
+                and isinstance(b_tok, (int, float)) and b_tok > 0):
+            continue
+        frac = n_tok / b_tok
+        if frac < TOK_S_WARN:
+            print(f"::warning::serving/{name} tokens/s regressed: "
+                  f"{b_tok:.1f} -> {n_tok:.1f} ({frac:.2f}x baseline)")
+            warned += 1
+
+    n_rows = {r["name"]: r for r in new.get("rows") or []
+              if isinstance(r.get("us_per_call"), (int, float))}
+    b_rows = {r["name"]: r for r in base.get("rows") or []
+              if isinstance(r.get("us_per_call"), (int, float))}
+    for name in sorted(set(n_rows) & set(b_rows)):
+        b_us = b_rows[name]["us_per_call"]
+        n_us = n_rows[name]["us_per_call"]
+        if b_us > 0 and n_us / b_us > US_WARN:
+            print(f"::warning::{name} slowed: {b_us:.1f}us -> {n_us:.1f}us "
+                  f"({n_us / b_us:.2f}x baseline)")
+            warned += 1
+
+    if warned:
+        print(f"bench_diff: {warned} regression warning(s) vs committed "
+              f"baseline (informational; hard gates are check_bench.py)")
+    else:
+        print(f"bench_diff: no regressions vs baseline "
+              f"({len(set(n_rows) & set(b_rows))} comparable rows, "
+              f"{len(set(nv) & set(bv))} serving variants)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -12,7 +12,11 @@ variant whose acceptance rate falls below SPEC_ACCEPT_MIN or whose
 tokens/s does not beat its same-workload bf16 ``decode_steps=4`` baseline
 (HQP's Δacc bound is what makes the artifact a high-acceptance drafter —
 acceptance and the bit-identical-output speedup are the two headline
-numbers), a ``decode_attention/xla_win/*`` or ``prefill_attention/xla_win/*``
+numbers), a ``paged`` variant slower than PAGED_MIN_RATIO x its contiguous
+``paged_baseline`` or a ``paged_shared`` variant whose peak cache bytes
+exceed PAGED_BYTES_MAX x the contiguous footprint / whose prefix cache
+never hit (paging must be free when nothing is shared and a strict memory
+win when a system prompt repeats), a ``decode_attention/xla_win/*`` or ``prefill_attention/xla_win/*``
 sweep whose ms/step (ms/chunk) grows more than FLAT_MAX from the smallest
 to the largest ``max_seq`` — the windowed attends must scale with live
 length, not cache capacity — or a prefill primitive costing more than
@@ -44,6 +48,8 @@ PREFILL_EINSUM_ROW = re.compile(r"^prefill_attention/xla_einsum/S(\d+)$")
 FLAT_MAX = 1.3
 PREFILL_RATIO_MAX = 1.1
 SPEC_ACCEPT_MIN = 0.7
+PAGED_MIN_RATIO = 0.95
+PAGED_BYTES_MAX = 0.6
 
 
 def fail(msg: str) -> None:
@@ -78,6 +84,8 @@ def check_serving(s: dict) -> None:
             fail("hqp_int8 variant missing positive artifact_bytes")
     if "speculative" in variants:
         check_speculative(variants)
+    if "paged" in variants or "paged_shared" in variants:
+        check_paged(variants)
 
 
 def check_speculative(variants: dict) -> None:
@@ -118,6 +126,58 @@ def check_speculative(variants: dict) -> None:
           f"{v['acceptance_rate']:.2f} >= {SPEC_ACCEPT_MIN}, "
           f"{v['tokens_per_s']:.0f} tok/s vs bf16 {base_tok_s:.0f}, "
           f"{v['tokens_per_s'] / max(base_tok_s, 1e-9):.2f}x)")
+
+
+def check_paged(variants: dict) -> None:
+    """The two paged-KV headline numbers, gated:
+
+    * throughput parity — paging is bookkeeping (same kernels, one extra
+      page-table gather), so the ``paged`` variant's tokens/s on the
+      NO-SHARING workload must stay >= PAGED_MIN_RATIO x its contiguous
+      ``paged_baseline`` timed in the same interleaved bench run; anything
+      worse means the indirection leaked into the hot path;
+    * memory win — on the repeated-system-prompt workload the arena only
+      holds mapped pages and the shared head is mapped ONCE, so
+      ``paged_shared``'s ``kv_bytes_peak`` must be <= PAGED_BYTES_MAX x the
+      contiguous footprint for the same (n_slots, max_seq), and the prefix
+      cache must actually fire (>= 1 hit, prefilled < total prompt
+      tokens) — a silent cache miss would still pass the throughput gate."""
+    for name in ("paged", "paged_baseline", "paged_shared"):
+        if name not in variants:
+            fail(f"paged gate needs variant {name!r} "
+                 f"(have: {sorted(variants)}) — bench_paged writes all "
+                 f"three; a partial payload means the bench died mid-run")
+    v, base = variants["paged"], variants["paged_baseline"]
+    if v.get("n_requests") == 0:
+        fail("paged variant completed zero requests")
+    ratio = v["tokens_per_s"] / max(base["tokens_per_s"], 1e-9)
+    if ratio < PAGED_MIN_RATIO:
+        fail(f"paged tokens/s {v['tokens_per_s']:.1f} is {ratio:.3f}x the "
+             f"contiguous baseline {base['tokens_per_s']:.1f} (floor "
+             f"{PAGED_MIN_RATIO}x) — the page-table gather is no longer "
+             f"free")
+    s = variants["paged_shared"]
+    for key in ("prefix_hits", "prefill_tokens", "prompt_tokens",
+                "kv_bytes_peak", "contiguous_kv_bytes"):
+        if not isinstance(s.get(key), (int, float)):
+            fail(f"paged_shared variant missing numeric {key!r}")
+    if s["prefix_hits"] < 1:
+        fail("paged_shared recorded zero prefix hits — every timed request "
+             "repeats the system prompt, the warm cache must hit")
+    if s["prefill_tokens"] >= s["prompt_tokens"]:
+        fail(f"paged_shared prefilled {s['prefill_tokens']} of "
+             f"{s['prompt_tokens']} prompt tokens — prefix reuse saved "
+             f"nothing")
+    bratio = s["kv_bytes_peak"] / max(s["contiguous_kv_bytes"], 1e-9)
+    if bratio > PAGED_BYTES_MAX:
+        fail(f"paged_shared kv_bytes_peak {s['kv_bytes_peak']} is "
+             f"{bratio:.2f}x the contiguous footprint "
+             f"{s['contiguous_kv_bytes']} (limit {PAGED_BYTES_MAX}x) — "
+             f"shared pages are being duplicated or never freed")
+    print(f"check_bench: paged OK (throughput {ratio:.2f}x contiguous >= "
+          f"{PAGED_MIN_RATIO}, shared-prefix bytes {bratio:.2f}x <= "
+          f"{PAGED_BYTES_MAX}, hits={s['prefix_hits']}, "
+          f"prefilled {s['prefill_tokens']}/{s['prompt_tokens']})")
 
 
 def _sweep(rows: list, pattern) -> dict:

@@ -42,6 +42,16 @@ class Backend:
                       pallas; on xla it IS ``cached_attention_ref`` — the
                       token-identity hinge, exactly how ``decode_attention``
                       landed)
+    decode_attention_paged / prefill_attention_paged:
+                      the same two primitives against a PAGED KV arena —
+                      k/v (n_pages, page_size, Hkv, hd) (scales
+                      (n_pages, page_size, Hkv)) plus a (B, n_blk) int32
+                      ``pages`` window prefix of each row's page table. On
+                      xla: gather-to-contiguous + the contiguous einsum
+                      (bit-identity with the contiguous layout by
+                      construction); on pallas/ref: the block index maps
+                      walk the table via scalar prefetch, no gather ever
+                      materializes (DESIGN.md §12)
     """
     name: str
     quantize_rowwise: Callable
@@ -49,6 +59,8 @@ class Backend:
     flash_attention: Callable
     decode_attention: Callable
     prefill_attention: Callable
+    decode_attention_paged: Callable
+    prefill_attention_paged: Callable
 
 
 _REGISTRY: Dict[str, Backend] = {}
@@ -101,6 +113,8 @@ def _xla_backend() -> Backend:
         # verbatim the masked einsum: serial prefill, chunked engine prefill,
         # and the Sq=1 decode slice all share one set of numerics bit-for-bit
         prefill_attention=ref.cached_attention_ref,
+        decode_attention_paged=ref.paged_decode_attention_ref,
+        prefill_attention_paged=ref.paged_prefill_attention_ref,
     )
 
 
@@ -117,10 +131,12 @@ def _fold_heads(fn):
 
 
 def _pallas_backend(interpret: bool) -> Backend:
-    from repro.kernels.decode_attention import decode_attention_pallas
+    from repro.kernels.decode_attention import (decode_attention_pallas,
+                                                paged_decode_attention_pallas)
     from repro.kernels.flash_attention import flash_attention_pallas
     from repro.kernels.int8_matmul import int8_matmul_pallas
-    from repro.kernels.prefill_attention import prefill_attention_pallas
+    from repro.kernels.prefill_attention import (
+        paged_prefill_attention_pallas, prefill_attention_pallas)
     from repro.kernels.quantize import quantize_rowwise_pallas
     return Backend(
         name="ref" if interpret else "pallas",
@@ -136,6 +152,12 @@ def _pallas_backend(interpret: bool) -> Backend:
         prefill_attention=lambda q, k, v, k_s, v_s, start:
             prefill_attention_pallas(q, k, v, k_s, v_s, start,
                                      interpret=interpret),
+        decode_attention_paged=lambda q, k, v, k_s, v_s, start, pages:
+            paged_decode_attention_pallas(q, k, v, k_s, v_s, start, pages,
+                                          interpret=interpret),
+        prefill_attention_paged=lambda q, k, v, k_s, v_s, start, pages:
+            paged_prefill_attention_pallas(q, k, v, k_s, v_s, start, pages,
+                                           interpret=interpret),
     )
 
 

@@ -33,12 +33,19 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.kv_layout import (CompilerParams as _CompilerParams,
-                                     NEG_INF, pad_kv_blocks,
+                                     NEG_INF, from_store, pad_kv_blocks,
                                      transpose_scales)
 
 
-def _kernel(start_ref, q_ref, k_ref, v_ref, *rest, bk: int, n_kv: int,
-            scale: float, quantized: bool):
+def _body(start, q_ref, k_ref, v_ref, rest, *, bk: int, n_kv: int,
+          scale: float, quantized: bool):
+    """Shared online-softmax body. ``start`` is this row's query position
+    (already read from whichever ref layout the wrapper uses); the KV refs
+    hold one bk-long block of LOGICAL positions j*bk..(j+1)*bk-1 — the
+    contiguous wrapper blocks a (B, S, Hkv, hd) cache, the paged wrapper a
+    (n_pages, page_size, Hkv, hd) arena with bk == page_size and the block
+    index taken from the page table, and the body cannot tell the
+    difference (same block shapes, same logical positions)."""
     if quantized:
         ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
     else:
@@ -51,12 +58,12 @@ def _kernel(start_ref, q_ref, k_ref, v_ref, *rest, bk: int, n_kv: int,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    start = start_ref[0, 0]                       # this slot's query position
-
     @pl.when(j * bk <= start)                     # block intersects the window
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)       # (G, hd)
-        k = k_ref[0, :, 0].astype(jnp.float32)    # (bk, hd) — int8 read as-is
+        # int8 reads as-is (dequant on scores); uint16 paged-arena blocks
+        # bitcast back to bf16 (from_store) before the f32 upcast
+        k = from_store(k_ref[0, :, 0]).astype(jnp.float32)    # (bk, hd)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         if quantized:
@@ -72,7 +79,7 @@ def _kernel(start_ref, q_ref, k_ref, v_ref, *rest, bk: int, n_kv: int,
             p = p * vs_ref[0, 0][None, :]         # dequant on probabilities
         acc_ref[...] = (acc_ref[...] * corr[:, None]
                         + jax.lax.dot_general(
-                            p, v_ref[0, :, 0].astype(jnp.float32),
+                            p, from_store(v_ref[0, :, 0]).astype(jnp.float32),
                             (((1,), (0,)), ((), ())),
                             preferred_element_type=jnp.float32))
         m_ref[...] = m_new
@@ -82,6 +89,20 @@ def _kernel(start_ref, q_ref, k_ref, v_ref, *rest, bk: int, n_kv: int,
         o_ref[0, 0] = (acc_ref[...]
                        / jnp.maximum(l_ref[...], 1e-30)[:, None]
                        ).astype(o_ref.dtype)
+
+
+def _kernel(start_ref, q_ref, k_ref, v_ref, *rest, bk: int, n_kv: int,
+            scale: float, quantized: bool):
+    _body(start_ref[0, 0], q_ref, k_ref, v_ref, rest, bk=bk, n_kv=n_kv,
+          scale=scale, quantized=quantized)
+
+
+def _paged_kernel(tbl_ref, start_ref, q_ref, k_ref, v_ref, *rest, bk: int,
+                  n_kv: int, scale: float, quantized: bool):
+    # tbl_ref/start_ref are SMEM scalar-prefetch refs: the table drives the
+    # BlockSpec index maps (never read here), start indexes by batch row
+    _body(start_ref[pl.program_id(0)], q_ref, k_ref, v_ref, rest, bk=bk,
+          n_kv=n_kv, scale=scale, quantized=quantized)
 
 
 @functools.partial(jax.jit, static_argnames=("bk", "interpret"))
@@ -127,4 +148,65 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(*inputs)
+    return out.reshape(b, hq, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                                  k_s: Optional[jax.Array] = None,
+                                  v_s: Optional[jax.Array] = None,
+                                  start: jax.Array = None,
+                                  pages: jax.Array = None, *,
+                                  interpret: bool = False) -> jax.Array:
+    """Page-table-indirect split-KV decode: q (B, Hq, hd) vs a PAGED arena.
+
+    k/v: (n_pages, page_size, Hkv, hd) float or int8 (then k_s/v_s
+    (n_pages, page_size, Hkv) f32 scales); start: (B,) int32; pages:
+    (B, n_blk) int32 — the window prefix of each row's page table. The KV
+    block size is pinned to ``page_size``, so grid step (b, h, j) DMAs
+    physical page ``pages[b, j]`` via a scalar-prefetch index map — same
+    body, block shapes, and logical-position skip/mask as the contiguous
+    kernel, only the block index indirects. Unallocated table entries point
+    at physical page 0 (the trash page) and sit beyond every causal limit.
+    Returns (B, Hq, hd) bf16."""
+    b, hq, hd = q.shape
+    ps, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    n_blk = pages.shape[1]
+    quantized = k_s is not None
+
+    inputs = [q.reshape(b, hkv, g, hd), k, v]
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd), lambda bb, h, j, tbl, st: (bb, h, 0, 0)),
+        pl.BlockSpec((1, ps, 1, hd),
+                     lambda bb, h, j, tbl, st: (tbl[bb, j], 0, h, 0)),
+        pl.BlockSpec((1, ps, 1, hd),
+                     lambda bb, h, j, tbl, st: (tbl[bb, j], 0, h, 0)),
+    ]
+    if quantized:
+        inputs += list(transpose_scales(k_s, v_s))   # (n_pages, Hkv, ps)
+        in_specs += [pl.BlockSpec((1, 1, ps),
+                                  lambda bb, h, j, tbl, st: (tbl[bb, j], h, 0))
+                     ] * 2
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_blk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda bb, h, j, tbl, st: (bb, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g,), jnp.float32),
+                        pltpu.VMEM((g,), jnp.float32),
+                        pltpu.VMEM((g, hd), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, bk=ps, n_kv=n_blk,
+                          scale=hd ** -0.5, quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), jnp.bfloat16),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pages.astype(jnp.int32),
+      jnp.asarray(start, jnp.int32).reshape(b), *inputs)
     return out.reshape(b, hq, hd)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.backend import get_backend
+from repro.kernels.kv_layout import window_pages
 
 
 def quantize_rowwise(x: jax.Array):
@@ -71,23 +72,44 @@ def _cache_window(cache: dict, window: Optional[int]):
     return k, v, k_s, v_s
 
 
+def _paged_window(cache: dict, pages: jax.Array, window: Optional[int]):
+    """Unpack a paged arena cache dict into (k, v, k_s, v_s) plus the
+    (B, n_blk) page-table prefix covering the static ``window``. Arena
+    leaves are (n_pages, page_size, ...) — the n_blk indirection replaces
+    the contiguous slice; positions past a row's causal limit (the rounded
+    page tail, unallocated trash-page entries) mask to exact zeros, keeping
+    the paged read bit-identical to the contiguous one."""
+    if "k_q" in cache:
+        k, v, k_s, v_s = (cache["k_q"], cache["v_q"],
+                          cache["k_s"], cache["v_s"])
+    else:
+        k, v, k_s, v_s = cache["k"], cache["v"], None, None
+    return k, v, k_s, v_s, window_pages(pages, k.shape[1], window)
+
+
 def cached_attention(q: jax.Array, cache: dict, start: jax.Array,
-                     window: Optional[int] = None) -> jax.Array:
+                     window: Optional[int] = None,
+                     pages: Optional[jax.Array] = None) -> jax.Array:
     """Masked-einsum cache attention: q (B, Sq, Hq, hd) at absolute
     positions start..start+Sq-1 vs a cache holding [0, start+Sq). ``start``
     scalar or (B,). NOT backend-dispatched — this einsum (``kernels.ref``)
     is the numerics oracle both the ``decode_attention`` and
     ``prefill_attention`` primitives must match (and IS their ``xla``
     registration); model code routes through those primitives, tests and
-    benches call this directly as ground truth."""
+    benches call this directly as ground truth. With ``pages`` the cache is
+    a paged arena and the oracle is gather + the same einsum."""
     b = q.shape[0]
     start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,))
+    if pages is not None:
+        k, v, k_s, v_s, idx = _paged_window(cache, pages, window)
+        return ref.paged_prefill_attention_ref(q, k, v, k_s, v_s, start, idx)
     return ref.cached_attention_ref(q, *_cache_window(cache, window),
                                     start=start)
 
 
 def prefill_attention(q: jax.Array, cache: dict, start: jax.Array,
-                      window: Optional[int] = None) -> jax.Array:
+                      window: Optional[int] = None,
+                      pages: Optional[jax.Array] = None) -> jax.Array:
     """Chunked-prefill hot path: a chunk of queries per slot, backend-
     dispatched.
 
@@ -99,23 +121,35 @@ def prefill_attention(q: jax.Array, cache: dict, start: jax.Array,
     lives in the Pallas wrapper (the xla impl — ``cached_attention_ref``
     verbatim — needs none). Sq == 1 is a legal chunk (a prompt's tail): it
     stays on this primitive, NOT ``decode_attention``, so a tail chunk and a
-    whole-prompt prefill share bit-identical numerics on every backend."""
+    whole-prompt prefill share bit-identical numerics on every backend.
+    ``pages`` (B, max_pages) int32 switches to the paged-arena layout: the
+    window becomes a page-table prefix instead of a contiguous slice."""
     b = q.shape[0]
     start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,))
+    if pages is not None:
+        k, v, k_s, v_s, idx = _paged_window(cache, pages, window)
+        return get_backend().prefill_attention_paged(q, k, v, k_s, v_s,
+                                                     start, idx)
     k, v, k_s, v_s = _cache_window(cache, window)
     return get_backend().prefill_attention(q, k, v, k_s, v_s, start)
 
 
 def decode_attention(q: jax.Array, cache: dict, start: jax.Array,
-                     window: Optional[int] = None) -> jax.Array:
+                     window: Optional[int] = None,
+                     pages: Optional[jax.Array] = None) -> jax.Array:
     """Decode hot path: one new query per slot, backend-dispatched.
 
     q: (B, 1, Hq, hd); ``start`` scalar or (B,) per-slot positions; returns
     (B, 1, Hq, hd). The backend primitive works on the squeezed (B, Hq, hd)
     layout — this wrapper owns the (B, 1, Hq, hd) <-> kernel-layout plumbing
-    and the static visible-window slice."""
+    and the static visible-window slice (a page-table prefix when ``pages``
+    marks the cache as a paged arena)."""
     b = q.shape[0]
     start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,))
+    if pages is not None:
+        k, v, k_s, v_s, idx = _paged_window(cache, pages, window)
+        return get_backend().decode_attention_paged(q[:, 0], k, v, k_s, v_s,
+                                                    start, idx)[:, None]
     k, v, k_s, v_s = _cache_window(cache, window)
     return get_backend().decode_attention(q[:, 0], k, v, k_s, v_s,
                                           start)[:, None]

@@ -39,12 +39,17 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.kv_layout import (CompilerParams as _CompilerParams,
-                                     NEG_INF, pad_kv_blocks,
+                                     NEG_INF, from_store, pad_kv_blocks,
                                      transpose_scales)
 
 
-def _kernel(start_ref, q_ref, k_ref, v_ref, *rest, bq: int, bk: int, g: int,
-            n_kv: int, scale: float, quantized: bool):
+def _body(start, q_ref, k_ref, v_ref, rest, *, bq: int, bk: int, g: int,
+          n_kv: int, scale: float, quantized: bool):
+    """Shared online-softmax body; ``start`` is this row's chunk-start
+    position, already read by the wrapper. KV refs hold one bk-long block
+    of LOGICAL positions j*bk..(j+1)*bk-1 — contiguous blocking or a paged
+    arena with bk == page_size and the block index from the page table; the
+    body is layout-blind (see ``decode_attention._body``)."""
     if quantized:
         ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
     else:
@@ -57,15 +62,15 @@ def _kernel(start_ref, q_ref, k_ref, v_ref, *rest, bq: int, bk: int, g: int,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    start = start_ref[0, 0]              # this slot's chunk-start position
-
     # skip KV blocks past the tile's deepest row (absolute causal limit of
     # query i*bq + bq - 1); blocks partially beyond a row's own limit are
     # exact no-ops for that row via the position mask below
     @pl.when(j * bk <= start + (i + 1) * bq - 1)
     def _compute():
         q = q_ref[0, :, 0].astype(jnp.float32).reshape(bq * g, -1)
-        k = k_ref[0, :, 0].astype(jnp.float32)    # (bk, hd) — int8 read as-is
+        # int8 reads as-is (dequant on scores); uint16 paged-arena blocks
+        # bitcast back to bf16 (from_store) before the f32 upcast
+        k = from_store(k_ref[0, :, 0]).astype(jnp.float32)    # (bk, hd)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         if quantized:
@@ -86,7 +91,7 @@ def _kernel(start_ref, q_ref, k_ref, v_ref, *rest, bq: int, bk: int, g: int,
             p = p * vs_ref[0, 0][None, :]         # dequant on probabilities
         acc_ref[...] = (acc_ref[...] * corr[:, None]
                         + jax.lax.dot_general(
-                            p, v_ref[0, :, 0].astype(jnp.float32),
+                            p, from_store(v_ref[0, :, 0]).astype(jnp.float32),
                             (((1,), (0,)), ((), ())),
                             preferred_element_type=jnp.float32))
         m_ref[...] = m_new
@@ -97,6 +102,20 @@ def _kernel(start_ref, q_ref, k_ref, v_ref, *rest, bq: int, bk: int, g: int,
                           / jnp.maximum(l_ref[...], 1e-30)[:, None]
                           ).reshape(bq, g, acc_ref.shape[-1]
                                     ).astype(o_ref.dtype)
+
+
+def _kernel(start_ref, q_ref, k_ref, v_ref, *rest, bq: int, bk: int, g: int,
+            n_kv: int, scale: float, quantized: bool):
+    _body(start_ref[0, 0], q_ref, k_ref, v_ref, rest, bq=bq, bk=bk, g=g,
+          n_kv=n_kv, scale=scale, quantized=quantized)
+
+
+def _paged_kernel(tbl_ref, start_ref, q_ref, k_ref, v_ref, *rest, bq: int,
+                  bk: int, g: int, n_kv: int, scale: float, quantized: bool):
+    # tbl_ref/start_ref are SMEM scalar-prefetch refs: the table drives the
+    # BlockSpec index maps (never read here), start indexes by batch row
+    _body(start_ref[pl.program_id(0)], q_ref, k_ref, v_ref, rest, bq=bq,
+          bk=bk, g=g, n_kv=n_kv, scale=scale, quantized=quantized)
 
 
 @functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
@@ -153,5 +172,70 @@ def prefill_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                                  "arbitrary")),
         interpret=interpret,
     )(*inputs)
+    out = out.reshape(b, sq + pq, hq, hd)
+    return out[:, :sq] if pq else out
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def paged_prefill_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                                   k_s: Optional[jax.Array] = None,
+                                   v_s: Optional[jax.Array] = None,
+                                   start: jax.Array = None,
+                                   pages: jax.Array = None, *, bq: int = 16,
+                                   interpret: bool = False) -> jax.Array:
+    """Page-table-indirect chunked prefill: q (B, Sq, Hq, hd) vs a PAGED
+    arena (see ``paged_decode_attention_pallas`` for the layout). The KV
+    block size is pinned to ``page_size``; grid step (b, h, i, j) DMAs
+    physical page ``pages[b, j]`` via a scalar-prefetch index map. Ragged
+    query-tail padding is unchanged from the contiguous wrapper. Returns
+    (B, Sq, Hq, hd) bf16."""
+    b, sq, hq, hd = q.shape
+    ps, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bq = min(bq, sq)
+    pq = (-sq) % bq                          # ragged chunk: padded query tail
+    if pq:                                   # rows are sliced off the output
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    n_q = (sq + pq) // bq
+    n_blk = pages.shape[1]
+    quantized = k_s is not None
+
+    inputs = [q.reshape(b, sq + pq, hkv, g, hd), k, v]
+    in_specs = [
+        pl.BlockSpec((1, bq, 1, g, hd),
+                     lambda bb, h, i, j, tbl, st: (bb, i, h, 0, 0)),
+        pl.BlockSpec((1, ps, 1, hd),
+                     lambda bb, h, i, j, tbl, st: (tbl[bb, j], 0, h, 0)),
+        pl.BlockSpec((1, ps, 1, hd),
+                     lambda bb, h, i, j, tbl, st: (tbl[bb, j], 0, h, 0)),
+    ]
+    if quantized:
+        inputs += list(transpose_scales(k_s, v_s))   # (n_pages, Hkv, ps)
+        in_specs += [
+            pl.BlockSpec((1, 1, ps),
+                         lambda bb, h, i, j, tbl, st: (tbl[bb, j], h, 0))] * 2
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_q, n_blk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bq, 1, g, hd),
+                               lambda bb, h, i, j, tbl, st: (bb, i, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((bq * g,), jnp.float32),
+                        pltpu.VMEM((bq * g,), jnp.float32),
+                        pltpu.VMEM((bq * g, hd), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, bq=bq, bk=ps, g=g, n_kv=n_blk,
+                          scale=hd ** -0.5, quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, sq + pq, hkv, g, hd),
+                                       jnp.bfloat16),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(pages.astype(jnp.int32),
+      jnp.asarray(start, jnp.int32).reshape(b), *inputs)
     out = out.reshape(b, sq + pq, hq, hd)
     return out[:, :sq] if pq else out

@@ -180,7 +180,8 @@ def run_engine(params, cfg, ctx, args, log=print, sampling=None, draft=None):
                  max_seq=args.max_seq,
                  sched=SchedulerConfig(prefill_chunk=args.prefill_chunk,
                                        decode_steps=args.decode_steps),
-                 sampling=sampling, **spec_kw)
+                 sampling=sampling, page_size=args.page_size or None,
+                 prefix_cache=not args.no_prefix_cache, **spec_kw)
     t0 = time.monotonic()
     results = eng.run(reqs, arrivals_s=arrivals)
     wall = time.monotonic() - t0
@@ -204,6 +205,8 @@ def run_engine(params, cfg, ctx, args, log=print, sampling=None, draft=None):
         f"{eng.stats['device_steps']} device decode steps / "
         f"{eng.stats['host_syncs']} host syncs"
         + (f", spec acceptance {accept:.2f}" if draft is not None else "")
+        + (f", {eng.stats['prefix_hits']} prefix hits / "
+           f"{eng.stats['pages_peak']} pages peak" if args.page_size else "")
         + ")")
 
     verify = args.verify if args.verify is not None else args.smoke
@@ -268,6 +271,13 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0,
                     help="sampling seed; same seed => same tokens, engine "
                          "and serial alike")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged KV cache: arena page size in tokens (engine "
+                         "mode; 0 = contiguous per-slot pool). Outputs are "
+                         "token-identical at every page size")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable hash-keyed shared-prefix page reuse "
+                         "(paged mode only)")
     ap.add_argument("--trace", default=None,
                     help="JSONL request trace to replay (engine mode)")
     ap.add_argument("--verify", action="store_true", default=None,
@@ -280,6 +290,9 @@ def main(argv=None):
     if args.save_artifact and args.load_artifact:
         ap.error("--save-artifact with --load-artifact would just copy the "
                  "artifact; use the filesystem for that")
+    if args.page_size and not args.engine:
+        ap.error("--page-size needs --engine (the lockstep loop has no "
+                 "slot pool to page)")
     use_hqp = args.hqp or args.load_artifact is not None
     if args.spec_k:
         if not args.engine:

@@ -122,7 +122,15 @@ class CacheSpec:
 
 
 def init_kv_cache(batch: int, max_seq: int, n_kv_heads: int, hd: int,
-                  quantized: bool = False) -> dict:
+                  quantized: bool = False, paged: bool = False) -> dict:
+    """``paged=True`` marks the leaves as a shared page arena (``batch`` is
+    ``total_pages``, ``max_seq`` is ``page_size``). bf16 arenas are stored
+    as raw uint16 words: XLA CPU's float-normalization pass rewrites bf16
+    scatter through f32 converts, copying the whole arena on every write —
+    uint16 scatter is pure data movement and stays in place
+    (``kernels.kv_layout.to_store/from_store`` own the lossless bitcasts at
+    the read/write boundaries). int8 quantized leaves scatter in place
+    natively and keep their dtype in both layouts."""
     if quantized:
         return {
             "k_q": jnp.zeros((batch, max_seq, n_kv_heads, hd), jnp.int8),
@@ -130,9 +138,11 @@ def init_kv_cache(batch: int, max_seq: int, n_kv_heads: int, hd: int,
             "k_s": jnp.zeros((batch, max_seq, n_kv_heads), jnp.float32),
             "v_s": jnp.zeros((batch, max_seq, n_kv_heads), jnp.float32),
         }
+    dt = (jnp.uint16 if paged and L.COMPUTE_DTYPE == jnp.bfloat16
+          else L.COMPUTE_DTYPE)
     return {
-        "k": jnp.zeros((batch, max_seq, n_kv_heads, hd), L.COMPUTE_DTYPE),
-        "v": jnp.zeros((batch, max_seq, n_kv_heads, hd), L.COMPUTE_DTYPE),
+        "k": jnp.zeros((batch, max_seq, n_kv_heads, hd), dt),
+        "v": jnp.zeros((batch, max_seq, n_kv_heads, hd), dt),
     }
 
 
@@ -145,20 +155,36 @@ def _quant_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 
 def update_kv_cache(cache: dict, k_new: jax.Array, v_new: jax.Array,
-                    pos: jax.Array) -> dict:
+                    pos: jax.Array,
+                    pages: Optional[jax.Array] = None) -> dict:
     """Insert (B, Sn, Hkv, hd) at position ``pos``.
 
     ``pos`` is a scalar (all rows write at the same offset — the single-batch
     serve path) or a (B,) vector of per-slot offsets (the continuous-batching
     engine, where every slot sits at its own sequence position). The vector
-    path is a per-row scatter (vmapped dynamic_update_slice)."""
+    path is a per-row scatter (vmapped dynamic_update_slice).
+
+    ``pages`` (B, max_pages) int32 marks the cache as a PAGED arena —
+    leaves are (n_pages, page_size, ...) with no batch axis — and the write
+    becomes a flat per-element scatter through the page table
+    (``kv_layout.scatter_pages``): logical position p of row b lands at
+    ``arena[pages[b, p // page_size], p % page_size]``. The per-token
+    values (INT8 quant included — it is per-(pos, head)) are identical to
+    the contiguous write, which is what keeps prefix-cache page reuse
+    bit-exact across requests."""
     if "k_q" in cache:
         kq, ks = _quant_kv(k_new)
         vq, vs = _quant_kv(v_new)
         new = {"k_q": kq, "v_q": vq, "k_s": ks, "v_s": vs}
     else:
-        new = {"k": k_new.astype(cache["k"].dtype),
-               "v": v_new.astype(cache["v"].dtype)}
+        # a paged bf16 arena stores raw uint16 words (init_kv_cache) —
+        # scatter_pages bitcasts the update, so keep it in compute dtype
+        new = {"k": k_new.astype(L.COMPUTE_DTYPE),
+               "v": v_new.astype(L.COMPUTE_DTYPE)}
+    if pages is not None:
+        from repro.kernels.kv_layout import scatter_pages
+        return {key: scatter_pages(cache[key], new[key], pages, pos)
+                for key in cache}
     if jnp.ndim(pos) == 0:
         def scatter(buf, upd):
             idx = (0, pos) + (0,) * (buf.ndim - 2)
@@ -224,6 +250,7 @@ def attention_forward(p: dict, cfg, x: jax.Array, positions: jax.Array,
                       cur_len: Optional[jax.Array] = None,
                       ctx=None, window: Optional[int] = None,
                       route: Optional[str] = None,
+                      pages: Optional[jax.Array] = None,
                       ) -> Tuple[jax.Array, Optional[dict]]:
     """Full attention sub-block (no norm/residual — block owns those).
 
@@ -249,6 +276,10 @@ def attention_forward(p: dict, cfg, x: jax.Array, positions: jax.Array,
     ``window``: static visible-window bound (see ``ops``) — cache writes
     always hit the full buffer, only the attend is windowed. ``cur_len`` =
     tokens already in cache (scalar or (B,) per-slot).
+
+    ``pages`` (B, max_pages) int32: the cache is a PAGED arena — both the
+    KV write and the attend indirect through the page table (``ops`` owns
+    the window-as-page-prefix plumbing; the train route never pages).
     """
     hd = cfg.resolved_head_dim
     b, s, _ = x.shape
@@ -284,12 +315,12 @@ def attention_forward(p: dict, cfg, x: jax.Array, positions: jax.Array,
         # identical masked einsum). Chunked prefill continuation
         # (cur_len > 0) needs the cache read — a local flash attend would
         # miss the earlier chunks.
-        new_cache = update_kv_cache(cache, k, v, cur_len)
+        new_cache = update_kv_cache(cache, k, v, cur_len, pages=pages)
         r = route or (DECODE if s == 1 else PREFILL)
         if r == DECODE:
             assert s == 1, f"decode attend requires a single query, got {s}"
-            o = ops.decode_attention(q, new_cache, cur_len, window)
+            o = ops.decode_attention(q, new_cache, cur_len, window, pages)
         else:
-            o = ops.prefill_attention(q, new_cache, cur_len, window)
+            o = ops.prefill_attention(q, new_cache, cur_len, window, pages)
     out = L.dense(o.reshape(b, s, n_heads * hd), p["wo"])
     return out, new_cache

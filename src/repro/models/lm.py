@@ -123,13 +123,13 @@ def _ffn_part(p: dict, cfg, x, is_moe: bool, ctx, with_aux: bool):
 
 def _block_forward(kind: str, is_moe: bool, p: dict, cfg, x, positions, ctx,
                    cache=None, cur_len=None, with_aux: bool = False,
-                   window=None, route=None):
+                   window=None, route=None, pages=None):
     h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
     new_cache = cache
     if kind == "attn":
         a, new_cache = A.attention_forward(p["attn"], cfg, h, positions,
                                            cache, cur_len, ctx, window,
-                                           route)
+                                           route, pages)
         x = x + a
         x, aux = _ffn_part(p, cfg, x, is_moe, ctx, with_aux)
     elif kind == "mamba":
@@ -257,7 +257,8 @@ def loss_fn(params: dict, cfg, batch: dict,
 def init_decode_state(cfg, batch: int, max_seq: int,
                       ctx: Optional[RunContext] = None,
                       params: Optional[dict] = None,
-                      per_slot_pos: bool = False) -> dict:
+                      per_slot_pos: bool = False,
+                      kv_pages: Optional[Tuple[int, int]] = None) -> dict:
     """Stacked per-period-position caches + current length.
 
     ``per_slot_pos=True`` makes ``pos`` a (batch,) vector — the layout the
@@ -269,7 +270,14 @@ def init_decode_state(cfg, batch: int, max_seq: int,
     config, so HQP-compacted artifacts — which physically shrank those axes
     — serve without a config rewrite. Compacted stacked families are
     shape-uniform across the layer stack, so one width per period position
-    suffices."""
+    suffices.
+
+    ``kv_pages=(total_pages, page_size)`` switches the KV caches to the
+    PAGED arena layout: attention leaves become (total_pages, page_size,
+    Hkv, hd) with NO batch/slot axis (the arena is shared through per-slot
+    page tables the caller owns — ``serving.state_pool``), while recurrent
+    Mamba/xLSTM leaves keep their per-slot batch axis (recurrent state is
+    O(1) per slot; only position-indexed KV pages)."""
     ctx = ctx or default_ctx()
     period = pattern_period(cfg)
     groups = cfg.n_layers // period
@@ -288,8 +296,11 @@ def init_decode_state(cfg, batch: int, max_seq: int,
         if kind == "attn":
             n_kv = (L.out_features(blk(j)["attn"]["wk"]) // hd
                     if params is not None else cfg.n_kv_heads)
+            kv_b, kv_s = kv_pages if kv_pages is not None else (batch,
+                                                                max_seq)
             caches.append(stack(lambda: A.init_kv_cache(
-                batch, max_seq, n_kv, hd, ctx.quantized_kv)))
+                kv_b, kv_s, n_kv, hd, ctx.quantized_kv,
+                paged=kv_pages is not None)))
         elif kind == "mamba":
             d_in = (blk(j)["mamba"]["conv_w"].shape[-1]
                     if params is not None else None)
@@ -335,7 +346,15 @@ def decode_step(params: dict, cfg, state: dict, tokens: jax.Array,
     prefill callers (the engine) pass ``route="prefill"`` explicitly so a
     1-token tail chunk stays on the ``prefill_attention`` primitive instead
     of being shape-inferred onto the decode kernel — see
-    ``attention_forward``. Returns (logits, new state)."""
+    ``attention_forward``. Returns (logits, new state).
+
+    ``state["pages"]`` (B, max_pages) int32, when present, marks the KV
+    caches as PAGED arenas (``init_decode_state(kv_pages=...)``): every KV
+    write and attend indirects through the per-row page table. The table is
+    an INPUT only — the returned state is always ``{"caches", "pos"}``;
+    callers that page re-attach the table they own on the next call
+    (``serving.engine`` redirects inactive rows to the trash page between
+    dispatches, which a pass-through here would silently undo)."""
     ctx = ctx or default_ctx()
     x = L.embed_lookup(params["embed"], tokens)
     if embeds is not None and cfg.frontend.kind != "none":
@@ -343,6 +362,7 @@ def decode_step(params: dict, cfg, state: dict, tokens: jax.Array,
         x = jnp.concatenate([fr, x], axis=1)
     b, s, _ = x.shape
     cur = state["pos"]
+    pages = state.get("pages")
     positions = (cur + jnp.arange(s) if jnp.ndim(cur) == 0
                  else cur[:, None] + jnp.arange(s)[None, :])
     period = pattern_period(cfg)
@@ -355,7 +375,8 @@ def decode_step(params: dict, cfg, state: dict, tokens: jax.Array,
         for j, (kind, is_moe) in enumerate(spec):
             x, nc, _ = _block_forward(kind, is_moe, block_params[j], cfg, x,
                                       positions, ctx, caches[j], cur,
-                                      window=window, route=route)
+                                      window=window, route=route,
+                                      pages=pages)
             new_caches.append(nc)
         return x, tuple(new_caches)
 

@@ -72,6 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.kv_layout import page_count
 from repro.models import lm
 from repro.serving import sampling as smp
 from repro.serving import state_pool as sp
@@ -127,6 +128,18 @@ class _Slot:
     result: Optional[RequestResult] = None
     eos_id: Optional[int] = None
     max_new_tokens: int = 0
+    pages: List[int] = dataclasses.field(default_factory=list)
+    n_shared: int = 0                 # leading pages also referenced by the
+                                      # prefix cache / other slots: written
+                                      # only after copy-on-write
+
+
+def _kv_bytes(pool) -> int:
+    """Total device bytes of the position-indexed KV entries of a pool
+    (recurrent state excluded) — the quantity paging exists to shrink."""
+    return sum(leaf.nbytes
+               for entry in pool["caches"] if sp.is_kv_entry(entry)
+               for leaf in jax.tree_util.tree_leaves(entry))
 
 
 class Engine:
@@ -139,7 +152,9 @@ class Engine:
                  draft_params: Any = None, spec_k: int = 4,
                  spec_cycles: int = 1,
                  draft_ctx: Optional[RunContext] = None,
-                 draft_manifest=None):
+                 draft_manifest=None, page_size: Optional[int] = None,
+                 total_pages: Optional[int] = None,
+                 prefix_cache: bool = True):
         """``sampling``: temperature/top-k/seeded sampling for every decode
         surface (None = greedy, the bit-identical-to-serial default).
 
@@ -151,7 +166,20 @@ class Engine:
         drafter's
         own pool (INT8 KV for an artifact drafter); ``draft_manifest``
         (the artifact's ``HQPManifest``) is checked for vocab/arch
-        compatibility before any device work."""
+        compatibility before any device work.
+
+        ``page_size`` switches on PAGED KV (DESIGN.md §12): the per-slot KV
+        pool becomes a global arena of ``total_pages`` fixed-size pages
+        (default: full provisioning, ``1 + n_slots *
+        ceil(max_seq/page_size)`` — one extra for the trash page) with a
+        host-side free-list allocator and per-slot page tables. Pages are
+        allocated covering the prompt at admission and grown on demand
+        before each decode dispatch; ``prefix_cache=True`` additionally
+        keys completed page-aligned prompt heads by content hash so a
+        repeated prompt head maps the cached pages copy-free and prefills
+        only its tail. ``page_size == max_seq`` is the contiguous-identity
+        degenerate case (one page per slot). Outputs stay token-identical
+        to the contiguous pool at every page size."""
         if cfg.frontend.kind != "none":
             raise NotImplementedError(
                 "Engine v1 serves token-only archs; frontend (VLM/audio) "
@@ -163,8 +191,35 @@ class Engine:
         self.max_seq = max_seq
         self.scheduler = Scheduler(sched)
         self.sampling = sampling or smp.GREEDY
-        self.pool = sp.init_pool(cfg, n_slots, max_seq, self.ctx,
-                                 params=params)
+        self.paged = page_size is not None
+        self.page_size = page_size if self.paged else max_seq
+        if self.paged:
+            if page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {page_size}")
+            self.max_pages = page_count(max_seq, page_size)
+            if total_pages is None:
+                total_pages = 1 + n_slots * self.max_pages
+            self.total_pages = total_pages
+            self.alloc = sp.PageAllocator(total_pages)
+            self.prefix = (sp.PrefixCache(self.alloc, page_size)
+                           if prefix_cache else None)
+            # host mirror of every slot's page table; device copies are
+            # cached per (state, active mask) in ``_dispatch_table`` (rows
+            # of inactive slots redirected to the trash page)
+            self.table = np.zeros((n_slots, self.max_pages), np.int32)
+            self.pool = sp.init_paged_pool(cfg, n_slots, max_seq, self.ctx,
+                                           params=params,
+                                           page_size=page_size,
+                                           total_pages=total_pages)
+        else:
+            self.alloc = None
+            self.prefix = None
+            self.pool = sp.init_pool(cfg, n_slots, max_seq, self.ctx,
+                                     params=params)
+            # contiguous dispatches still feed the (ignored) table operand
+            # so both modes share one set of jitted callables
+            self.table = np.zeros((n_slots, 1), np.int32)
+        self._table_cache: dict = {}    # device tables, see _dispatch_table
         self._template = sp.init_slot_template(cfg, max_seq, self.ctx,
                                                params=params)
         self.spec: Optional[SpecDecoder] = None
@@ -173,12 +228,28 @@ class Engine:
                                     draft_ctx=draft_ctx, k=spec_k,
                                     cycles=spec_cycles,
                                     sampling=self.sampling,
-                                    draft_manifest=draft_manifest)
+                                    draft_manifest=draft_manifest,
+                                    paged=self.paged)
             dctx = self.spec.draft_ctx
-            self.draft_pool = sp.init_pool(cfg, n_slots, max_seq, dctx,
-                                           params=draft_params)
+            if self.paged:
+                # ONE allocator + table addresses both arenas: the pools'
+                # positions stay aligned, so page p holds the same token
+                # span in the drafter and verifier arenas
+                self.draft_pool = sp.init_paged_pool(
+                    cfg, n_slots, max_seq, dctx, params=draft_params,
+                    page_size=page_size, total_pages=total_pages)
+            else:
+                self.draft_pool = sp.init_pool(cfg, n_slots, max_seq, dctx,
+                                               params=draft_params)
             self._draft_template = sp.init_slot_template(cfg, max_seq, dctx,
                                                          params=draft_params)
+        kv_bytes = _kv_bytes(self.pool) + (
+            _kv_bytes(self.draft_pool) if self.spec is not None else 0)
+        if self.paged:
+            self._kv_page_bytes = kv_bytes // total_pages
+            self._kv_token_bytes = self._kv_page_bytes // self.page_size
+        else:
+            self._kv_token_bytes = kv_bytes // (n_slots * max_seq)
         self.slots = [_Slot(i) for i in range(n_slots)]
         self.waiting: List[Request] = []
         self._uid = itertools.count()
@@ -194,17 +265,30 @@ class Engine:
         self.stats = {"prefill_ticks": 0, "decode_ticks": 0,
                       "decode_slot_steps": 0, "prefill_tokens": 0,
                       "host_syncs": 0, "device_steps": 0,
-                      "drafted_tokens": 0, "accepted_tokens": 0}
+                      "drafted_tokens": 0, "accepted_tokens": 0,
+                      "prefix_hits": 0, "prefix_hit_tokens": 0,
+                      "bytes_saved": 0, "cow_copies": 0,
+                      "pages_in_use": 0, "pages_peak": 0,
+                      "kv_bytes_peak": 0 if self.paged else kv_bytes}
 
         cfg_, ctx_ = self.cfg, self.ctx
+        paged = self.paged
         scfg, base_key = self.sampling, smp.base_key(self.sampling)
         decode_steps = self.scheduler.cfg.decode_steps
 
-        def _reset(pool, slot, template):
-            return sp.reset_slot(pool, slot, template)
+        def _row(table, slot):
+            # one compiled executable serves every slot: the slot's table
+            # row is sliced with a traced index
+            return jax.lax.dynamic_slice(table, (slot, 0),
+                                         (1, table.shape[1]))
 
-        def _prefill(params, pool, slot, chunk, window):
-            st = sp.gather_slot(pool, slot)
+        def _reset(pool, slot, template, pos0):
+            return sp.reset_slot(pool, slot, template, pos0, paged)
+
+        def _prefill(params, pool, table, slot, chunk, window):
+            st = sp.gather_slot(pool, slot, paged)
+            if paged:
+                st = dict(st, pages=_row(table, slot))
             # route="prefill": every chunk — the 1-token tail included —
             # takes the backend prefill_attention primitive, the same
             # primitive serial whole-prompt prefill resolves to, so chunked
@@ -213,24 +297,27 @@ class Engine:
             # "tail chunk must pass decode=False" contract unexpressible)
             logits, new = lm.decode_step(params, cfg_, st, chunk, ctx_,
                                          window=window, route="prefill")
-            return logits[:, -1], sp.scatter_slot(pool, slot, new)
+            return logits[:, -1], sp.scatter_slot(pool, slot, new, paged)
 
-        def _spec_prefill(dparams, vparams, dpool, vpool, slot, chunk,
-                          window):
+        def _spec_prefill(dparams, vparams, dpool, vpool, table, slot,
+                          chunk, window):
             # speculative mode prefills BOTH pools from one dispatch (the
             # drafter's chunk logits are never consumed — the first token
             # always comes from the verifier); fusing halves the per-chunk
             # dispatch overhead vs two _prefill_fn calls
-            vst = sp.gather_slot(vpool, slot)
+            pg = (dict(pages=_row(table, slot)) if paged else {})
+            vst = dict(sp.gather_slot(vpool, slot, paged), **pg)
             vlogits, vnew = lm.decode_step(vparams, cfg_, vst, chunk, ctx_,
                                            window=window, route="prefill")
-            dst = sp.gather_slot(dpool, slot)
+            dst = dict(sp.gather_slot(dpool, slot, paged), **pg)
             _, dnew = lm.decode_step(dparams, cfg_, dst, chunk, ctx_,
                                      window=window, route="prefill")
-            return (vlogits[:, -1], sp.scatter_slot(dpool, slot, dnew),
-                    sp.scatter_slot(vpool, slot, vnew))
+            return (vlogits[:, -1],
+                    sp.scatter_slot(dpool, slot, dnew, paged),
+                    sp.scatter_slot(vpool, slot, vnew, paged))
 
-        def _decode(params, pool, tokens, active, eos, budget, window):
+        def _decode(params, pool, table, tokens, active, eos, budget,
+                    window):
             """``decode_steps`` greedy steps on device. tokens (B, 1) i32 =
             each live slot's last emitted token; active (B,) bool; eos (B,)
             i32 (-1 = no EOS id); budget (B,) i32 = tokens the slot may
@@ -240,7 +327,8 @@ class Engine:
             remaining steps, exactly as the host's eviction logic would."""
             def body(carry, _):
                 pool, tok, live, left = carry
-                logits, new = lm.decode_step(params, cfg_, pool, tok, ctx_,
+                st = dict(pool, pages=table) if paged else pool
+                logits, new = lm.decode_step(params, cfg_, st, tok, ctx_,
                                              window=window, route="decode")
                 # per-slot key derives from the sampled token's absolute
                 # position (new pos), never slot/tick — so engine sampling
@@ -249,7 +337,7 @@ class Engine:
                 # to the pre-sampling engine)
                 nxt = smp.sample_batch(logits[:, -1], scfg, base_key,
                                        new["pos"])
-                pool = sp.select_slots(new, pool, live)
+                pool = sp.select_slots(new, pool, live, paged)
                 left = jnp.where(live, left - 1, left)
                 stop = ((eos >= 0) & (nxt == eos)) | (left <= 0)
                 return ((pool, jnp.where(live, nxt, tok[:, 0])[:, None],
@@ -261,13 +349,30 @@ class Engine:
                 length=decode_steps)
             return toks, emitted, pool
 
+        def _copy_page(pool, dpool, src, dst):
+            # copy-on-write: duplicate arena page src -> dst in every KV
+            # entry of both pools (dpool is None outside speculative mode;
+            # the page axis of an arena leaf is axis 1, under the group
+            # stack)
+            def cp(leaf):
+                page = jax.lax.dynamic_slice_in_dim(leaf, src, 1, 1)
+                return jax.lax.dynamic_update_slice_in_dim(leaf, page,
+                                                           dst, 1)
+            def one(pool):
+                caches = tuple(
+                    jax.tree.map(cp, e) if sp.is_kv_entry(e) else e
+                    for e in pool["caches"])
+                return {"caches": caches, "pos": pool["pos"]}
+            return one(pool), (None if dpool is None else one(dpool))
+
         self._reset_fn = jax.jit(_reset, donate_argnums=(0,))
         self._prefill_fn = jax.jit(_prefill, donate_argnums=(1,),
-                                   static_argnums=(4,))
+                                   static_argnums=(5,))
         self._decode_fn = jax.jit(_decode, donate_argnums=(1,),
-                                  static_argnums=(6,))
+                                  static_argnums=(7,))
         self._spec_prefill_fn = jax.jit(_spec_prefill, donate_argnums=(2, 3),
-                                        static_argnums=(6,))
+                                        static_argnums=(7,))
+        self._copy_page_fn = jax.jit(_copy_page, donate_argnums=(0, 1))
         self._sample_fn = jax.jit(lambda lg, p: smp.sample(
             lg, scfg, smp.token_key(base_key, p)))
 
@@ -280,6 +385,126 @@ class Engine:
         if self.sampling.is_greedy:
             return int(np.argmax(np.asarray(logits_row)))
         return int(self._sample_fn(logits_row, jnp.int32(pos)))
+
+    # ------------------------------------------------------------ paged KV
+    def _note_pages(self) -> None:
+        n = self.alloc.pages_in_use
+        self.stats["pages_in_use"] = n
+        if n > self.stats["pages_peak"]:
+            self.stats["pages_peak"] = n
+            self.stats["kv_bytes_peak"] = n * self._kv_page_bytes
+
+    def _alloc_pages(self, n: int) -> List[int]:
+        """Allocate n pages, evicting prefix-cache LRU entries under arena
+        pressure; raises MemoryError only once the cache is drained."""
+        if n <= 0:
+            return []
+        while True:
+            try:
+                return self.alloc.alloc(n)
+            except MemoryError:
+                if self.prefix is None or not self.prefix.evict_lru():
+                    raise
+
+    def _map_slot_pages(self, slot: _Slot, prompt: np.ndarray) -> int:
+        """Admission: map the slot's page-table row for ``prompt`` — the
+        longest page-aligned prefix-cache hit (copy-free, refcounted) plus
+        fresh pages for the rest of the prompt. Returns the hit length in
+        tokens (the position prefill resumes from)."""
+        hit, pages = ((0, []) if self.prefix is None
+                      else self.prefix.lookup(prompt))
+        pages = pages + self._alloc_pages(
+            page_count(prompt.size, self.page_size) - len(pages))
+        slot.pages = pages
+        slot.n_shared = hit // self.page_size
+        self.table[slot.idx] = 0
+        self.table[slot.idx, :len(pages)] = pages
+        self._table_cache.clear()
+        if hit:
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_hit_tokens"] += hit
+            self.stats["bytes_saved"] += hit * self._kv_token_bytes
+        self._note_pages()
+        return hit
+
+    def _ensure_capacity(self, slot: _Slot, upto: int) -> None:
+        """Grow the slot's table to cover writes at positions < ``upto``
+        BEFORE the dispatch: a write through an unmapped (zero) table entry
+        would land on the trash page and silently lose that KV."""
+        need = page_count(min(upto, self.max_seq), self.page_size)
+        if need > len(slot.pages):
+            new = self._alloc_pages(need - len(slot.pages))
+            self.table[slot.idx, len(slot.pages):need] = new
+            slot.pages.extend(new)
+            self._table_cache.clear()
+            self._note_pages()
+
+    def _ensure_writable(self, slot: _Slot, pos: int) -> None:
+        """Copy-on-write ahead of a dispatch whose first KV write lands at
+        ``pos``: if that position sits inside the slot's shared-page range
+        (only the speculative healing chunk — writing at pos-1 — can reach
+        it, when the prompt length is page-aligned and its last page went
+        into the prefix cache), the page is duplicated and the table
+        repointed so sharers never observe the write."""
+        if pos < 0 or pos >= slot.n_shared * self.page_size:
+            return
+        idx = pos // self.page_size        # == n_shared - 1: writes only
+        old = slot.pages[idx]              # ever touch the LAST shared page
+        if self.alloc.refs[old] > 1:
+            new = self._alloc_pages(1)[0]
+            self.pool, dpool = self._copy_page_fn(
+                self.pool,
+                self.draft_pool if self.spec is not None else None,
+                jnp.int32(old), jnp.int32(new))
+            if dpool is not None:
+                self.draft_pool = dpool
+            self.alloc.unref([old])
+            slot.pages[idx] = new
+            self.table[slot.idx, idx] = new
+            self._table_cache.clear()
+            self.stats["cow_copies"] += 1
+        slot.n_shared = idx                # earlier pages are never written
+        self._note_pages()
+
+    def _release_slot_pages(self, slot: _Slot) -> None:
+        """Eviction: drop the slot's page references (pages the prefix
+        cache also holds stay resident for future hits) and zero its table
+        row."""
+        if slot.pages:
+            self.alloc.unref(slot.pages)
+            slot.pages = []
+            slot.n_shared = 0
+            self.table[slot.idx] = 0
+            self._table_cache.clear()
+            self._note_pages()
+
+    def _dispatch_table(self, active: Optional[np.ndarray] = None):
+        """Device copy of the page table for one dispatch. Batched decode
+        dispatches pass ``active`` to redirect every inactive slot's row to
+        the trash page: the shared arena cannot be select-masked per slot,
+        so inactive rows' garbage writes are steered to the reserved page
+        instead (their live pages are never addressed at all).
+
+        The device copy is cached per (table state, active mask): the table
+        only mutates on admit / growth / CoW / eviction, so steady-state
+        decode ticks reuse one resident array instead of paying an H2D
+        upload per dispatch (none of the jitted callables donate the table
+        argument, so the cached buffer stays live)."""
+        key = (active.tobytes()
+               if active is not None and self.paged else None)
+        dev = self._table_cache.get(key)
+        if dev is None:
+            tab = self.table
+            if key is not None:
+                tab = np.where(active[:, None], tab, 0)
+            dev = self._table_cache[key] = jnp.asarray(tab)
+        return dev
+
+    def _window(self, needed: int) -> int:
+        if self.paged:
+            return self.scheduler.visible_window(
+                needed, self.max_seq, page_multiple=self.page_size)
+        return self.scheduler.visible_window(needed, self.max_seq)
 
     # ------------------------------------------------------------- lifecycle
     def submit(self, request: Request) -> int:
@@ -316,15 +541,17 @@ class Engine:
             if slot.stage != FREE:
                 continue
             req = self.waiting.pop(0)
+            pos0 = (self._map_slot_pages(slot, req.prompt) if self.paged
+                    else 0)
             self.pool = self._reset_fn(self.pool, jnp.int32(slot.idx),
-                                       self._template)
+                                       self._template, jnp.int32(pos0))
             if self.spec is not None:
                 self.draft_pool = self._reset_fn(
                     self.draft_pool, jnp.int32(slot.idx),
-                    self._draft_template)
+                    self._draft_template, jnp.int32(pos0))
             slot.stage = PREFILL
             slot.prompt = req.prompt
-            slot.prefill_done = 0
+            slot.prefill_done = pos0
             slot.eos_id = req.eos_id
             slot.max_new_tokens = req.max_new_tokens
             slot.result = RequestResult(
@@ -347,6 +574,8 @@ class Engine:
             slot.stage = FREE          # eviction: slot reusable next tick
             slot.result = None
             slot.prompt = None
+            if self.paged:
+                self._release_slot_pages(slot)
         else:
             slot.last_token = tok
             slot.stage = DECODE
@@ -391,22 +620,32 @@ class Engine:
             lo, hi = self.scheduler.chunk_bounds(slot.prompt.size,
                                                  slot.prefill_done)
             chunk = jnp.asarray(slot.prompt[None, lo:hi])
-            window = self.scheduler.visible_window(hi, self.max_seq)
+            window = self._window(hi)
             # the chunk's last query sits at absolute position hi-1
             self._debug_check_window(window, hi, "prefill")
+            table = self._dispatch_table()
             if self.spec is not None:
                 last_logits, self.draft_pool, self.pool = \
                     self._spec_prefill_fn(
                         self.spec.draft_params, self.params, self.draft_pool,
-                        self.pool, jnp.int32(slot.idx), chunk, window)
+                        self.pool, table, jnp.int32(slot.idx), chunk, window)
             else:
                 last_logits, self.pool = self._prefill_fn(
-                    self.params, self.pool, jnp.int32(slot.idx), chunk,
-                    window)
+                    self.params, self.pool, table, jnp.int32(slot.idx),
+                    chunk, window)
             slot.prefill_done = hi
             self.stats["prefill_ticks"] += 1
             self.stats["prefill_tokens"] += hi - lo
             if hi == slot.prompt.size:
+                if self.paged and self.prefix is not None:
+                    # the prompt's KV is complete: register every page-
+                    # aligned prefix for future admissions. The slot's own
+                    # pages up to the inserted length are now shared —
+                    # future in-place writes there must copy first.
+                    ins = self.prefix.insert(slot.prompt, slot.pages, hi)
+                    slot.n_shared = max(slot.n_shared,
+                                        ins // self.page_size)
+                    self._note_pages()
                 tok = self._first_token(last_logits[0], hi)
                 self.stats["host_syncs"] += 1
                 # the speculative healing chunk re-feeds [prev, last]: after
@@ -428,16 +667,23 @@ class Engine:
                 if slot.eos_id is not None:
                     eos[i] = slot.eos_id
                 budget[i] = slot.max_new_tokens - len(slot.result.tokens)
+                if self.paged:
+                    # deepest write this dispatch: pos + live steps (frozen
+                    # slots rewrite their freeze position, already covered)
+                    self._ensure_capacity(
+                        slot, min(self._slot_pos(slot) + k_steps,
+                                  int(slot.prompt.size)
+                                  + slot.max_new_tokens))
             # the deepest live slot after k_steps attends positions
             # <= max(pos) + k_steps - 1  ->  window covers max(pos) + k_steps
             needed = max(self._slot_pos(self.slots[i])
                          for i in action.slots) + k_steps
-            window = self.scheduler.visible_window(needed, self.max_seq)
+            window = self._window(needed)
             self._debug_check_window(window, needed, "decode")
             toks, emitted, self.pool = self._decode_fn(
-                self.params, self.pool, jnp.asarray(tokens),
-                jnp.asarray(active), jnp.asarray(eos), jnp.asarray(budget),
-                window)
+                self.params, self.pool, self._dispatch_table(active),
+                jnp.asarray(tokens), jnp.asarray(active), jnp.asarray(eos),
+                jnp.asarray(budget), window)
             toks, emitted = np.asarray(toks), np.asarray(emitted)
             self.stats["host_syncs"] += 1
             self.stats["device_steps"] += k_steps
@@ -481,16 +727,25 @@ class Engine:
         max_pos = max(self._slot_pos(self.slots[i]) for i in action.slots)
         k_eff, c_eff = self.spec.plan(max_pos, self.max_seq,
                                       int(budget[active].max()))
+        if self.paged:
+            for i in action.slots:
+                slot = self.slots[i]
+                # the healing chunk's first write lands at pos-1 — possibly
+                # inside a shared page (copy-on-write); the verify tail is
+                # the deepest write (plan() keeps it in-bounds)
+                self._ensure_writable(slot, self._slot_pos(slot) - 1)
+                self._ensure_capacity(
+                    slot, self._slot_pos(slot) + c_eff * (k_eff + 1))
         # deepest attend: the last cycle's verify chunk tail
         needed = max_pos + c_eff * (k_eff + 1)
-        window = self.scheduler.visible_window(needed, self.max_seq)
+        window = self._window(needed)
         self._debug_check_window(window, needed, "speculative")
         toks, emitted, n_acc, n_drafted, self.draft_pool, self.pool = \
             self.spec.spec_fn(
                 self.spec.draft_params, self.params, self.draft_pool,
-                self.pool, jnp.asarray(prev), jnp.asarray(tokens),
-                jnp.asarray(active), jnp.asarray(eos), jnp.asarray(budget),
-                k_eff, c_eff, window)
+                self.pool, self._dispatch_table(active), jnp.asarray(prev),
+                jnp.asarray(tokens), jnp.asarray(active), jnp.asarray(eos),
+                jnp.asarray(budget), k_eff, c_eff, window)
         toks, emitted = np.asarray(toks), np.asarray(emitted)
         self.stats["host_syncs"] += 1
         # k_eff drafter invocations (healing chunk included) + 1 verify

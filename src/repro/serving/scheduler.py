@@ -76,9 +76,21 @@ class Scheduler:
         hi = min(prompt_len, done + self.cfg.prefill_chunk)
         return lo, hi
 
-    def visible_window(self, needed: int, max_seq: int) -> int:
+    def visible_window(self, needed: int, max_seq: int,
+                       page_multiple: int = 0) -> int:
         """Static KV-attend window for a dispatch that reads cache positions
         [0, needed): ``needed`` bucketed up to a ``window_block`` multiple
-        (bounding recompiles) and clamped to the cache capacity."""
+        (bounding recompiles) and clamped to the cache capacity.
+
+        ``page_multiple`` (paged-KV engines pass their page size) rounds the
+        bucketed window up to a whole-page multiple so the page-table prefix
+        the attend walks is block-aligned — without it every distinct
+        (window % page_size) residue would compile its own gather. The
+        rounded window may exceed ``max_seq``; the page-table prefix clamps
+        to the table width and out-of-window positions mask to exact
+        zeros."""
         wb = self.cfg.window_block
-        return min(max_seq, max(wb, -(-needed // wb) * wb))
+        w = min(max_seq, max(wb, -(-needed // wb) * wb))
+        if page_multiple:
+            w = -(-w // page_multiple) * page_multiple
+        return w

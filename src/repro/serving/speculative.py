@@ -79,9 +79,9 @@ def check_drafter_compat(cfg, manifest) -> None:
 class SpecDecoder:
     """Holds the two parameter sets and the fused speculative device step.
 
-    ``spec_fn(draft_params, verify_params, draft_pool, verify_pool, prev,
-    tokens, active, eos, budget, k, cycles, window)`` is jitted with STATIC
-    ``(k, cycles, window)`` and donated pools; it runs ``cycles``
+    ``spec_fn(draft_params, verify_params, draft_pool, verify_pool, table,
+    prev, tokens, active, eos, budget, k, cycles, window)`` is jitted with
+    STATIC ``(k, cycles, window)`` and donated pools; it runs ``cycles``
     draft→verify cycles before the single host sync and returns ``(toks
     (cycles*(k+1), B), emitted (cycles*(k+1), B), n_acc_emit (B,),
     n_drafted (B,), draft_pool, verify_pool)`` where ``emitted[t, i]``
@@ -89,14 +89,20 @@ class SpecDecoder:
     how many of slot i's emitted tokens were accepted drafts (the
     acceptance-rate numerator; corrections/bonus tokens are emitted but
     not "accepted"), and ``n_drafted`` the drafts proposed to it while
-    live (the denominator)."""
+    live (the denominator).
+
+    ``table`` is the (B, max_pages) page table when ``paged=True`` — ONE
+    table addresses both pools (their arenas are allocated page-for-page in
+    lockstep and the pools' ``pos`` stay aligned); the engine redirects
+    inactive rows to the trash page before dispatch. A dummy (B, 1) zeros
+    array in contiguous mode."""
 
     def __init__(self, cfg, draft_params: Any, verify_params: Any,
                  ctx: Optional[RunContext] = None,
                  draft_ctx: Optional[RunContext] = None, k: int = 4,
                  cycles: int = 1,
                  sampling: Optional[smp.SamplingConfig] = None,
-                 draft_manifest=None):
+                 draft_manifest=None, paged: bool = False):
         if k < 1:
             raise ValueError(f"spec k must be >= 1, got {k}")
         if cycles < 1:
@@ -117,8 +123,9 @@ class SpecDecoder:
         self.ctx = ctx or default_ctx()
         self.draft_ctx = draft_ctx or self.ctx
         self.sampling = sampling or smp.GREEDY
+        self.paged = paged
         self.spec_fn = jax.jit(self._build_spec(),
-                               static_argnums=(9, 10, 11),
+                               static_argnums=(10, 11, 12),
                                donate_argnums=(2, 3))
 
     def plan(self, max_pos: int, max_seq: int,
@@ -147,10 +154,16 @@ class SpecDecoder:
         cfg, dctx, vctx = self.cfg, self.draft_ctx, self.ctx
         scfg = self.sampling
         greedy = scfg.is_greedy
+        paged = self.paged
         base = smp.base_key(scfg)
+        # paged: every model call reads/writes KV through the page table
+        # (attached per call — decode_step treats "pages" as input-only and
+        # never returns it, so the scan carries keep a constant structure)
+        att = (lambda pool, table: dict(pool, pages=table)) if paged \
+            else (lambda pool, table: pool)
 
-        def cycle(dparams, vparams, dpool, vpool, prev, tokens, live, eos,
-                  budget, k, window):
+        def cycle(dparams, vparams, dpool, vpool, table, prev, tokens, live,
+                  eos, budget, k, window):
             """One draft→verify→accept→rollback cycle. ``live`` (B,) bool is
             the slots still running THIS dispatch (slots that stopped in an
             earlier cycle stay frozen: their pos never moves, so their cycle
@@ -172,8 +185,8 @@ class SpecDecoder:
             # not k+1.
             chunk2 = jnp.concatenate([prev, tokens], axis=1)      # (B, 2)
             dlogits, dpool = lm.decode_step(
-                dparams, cfg, {"caches": dpool["caches"],
-                               "pos": dpool["pos"] - 1},
+                dparams, cfg, att({"caches": dpool["caches"],
+                                   "pos": dpool["pos"] - 1}, table),
                 chunk2, dctx, window=window, route="prefill")
             lg0 = dlogits[:, -1]
             if greedy:
@@ -185,8 +198,9 @@ class SpecDecoder:
 
             def body(carry, _):
                 dpool, tok = carry
-                logits, new = lm.decode_step(dparams, cfg, dpool, tok, dctx,
-                                             window=window, route="decode")
+                logits, new = lm.decode_step(dparams, cfg, att(dpool, table),
+                                             tok, dctx, window=window,
+                                             route="decode")
                 lg = logits[:, -1]
                 if greedy:
                     nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
@@ -208,8 +222,8 @@ class SpecDecoder:
 
             # ---- verify: ONE multi-position pass on the verifier -------
             chunk = jnp.concatenate([tokens, d_bk], axis=1)   # (B, k+1)
-            vlogits, vpool = lm.verify_step(vparams, cfg, vpool, chunk, vctx,
-                                            window=window)
+            vlogits, vpool = lm.verify_step(vparams, cfg, att(vpool, table),
+                                            chunk, vctx, window=window)
 
             # ---- accept ------------------------------------------------
             if greedy:
@@ -292,8 +306,8 @@ class SpecDecoder:
             return (dpool, vpool, prev2, tokens2, live2, budget2,
                     jnp.where(emit, cand, 0), emit, n_acc_emit, drafted)
 
-        def spec(dparams, vparams, dpool, vpool, prev, tokens, active, eos,
-                 budget, k, cycles, window):
+        def spec(dparams, vparams, dpool, vpool, table, prev, tokens,
+                 active, eos, budget, k, cycles, window):
             """prev/tokens (B, 1) i32: the two newest emitted tokens per
             slot (``prev`` at position pos-1, ``tokens`` pending at pos);
             active (B,) bool; eos (B,) i32 (-1 = none); budget (B,) i32
@@ -304,15 +318,18 @@ class SpecDecoder:
             decode scan must freeze mid-scan stoppers bit-exactly; here
             frozen slots' work is idempotent and mid-prefill slots are
             restored wholesale below) — two full-pool selects per dispatch
-            instead of per-step."""
+            instead of per-step. In paged mode the KV arenas cannot be
+            select-restored (no slot axis); inactive rows are instead
+            redirected to the trash page in ``table`` by the engine, so the
+            select only restores their recurrent state and ``pos``."""
             dpool0, vpool0 = dpool, vpool
 
             def step(carry, _):
                 dpool, vpool, prev, tokens, live, eos_, budget = carry
                 (dpool, vpool, prev, tokens, live, budget,
                  outs, emit, n_acc, drafted) = cycle(
-                    dparams, vparams, dpool, vpool, prev, tokens, live,
-                    eos_, budget, k, window)
+                    dparams, vparams, dpool, vpool, table, prev, tokens,
+                    live, eos_, budget, k, window)
                 return ((dpool, vpool, prev, tokens, live, eos_, budget),
                         (outs, emit, n_acc, drafted))
 
@@ -323,8 +340,8 @@ class SpecDecoder:
 
             # restore slots that were inactive at dispatch (mid-prefill /
             # free): their cycle work wrote garbage at their own positions
-            dpool = sp.select_slots(dpool, dpool0, active)
-            vpool = sp.select_slots(vpool, vpool0, active)
+            dpool = sp.select_slots(dpool, dpool0, active, paged)
+            vpool = sp.select_slots(vpool, vpool0, active, paged)
             # (C, B, k+1) -> (C*(k+1), B) in per-slot emission order
             outs = jnp.moveaxis(outs, 2, 1).reshape(cycles * (k + 1), -1)
             emits = jnp.moveaxis(emits, 2, 1).reshape(cycles * (k + 1), -1)

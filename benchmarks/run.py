@@ -14,6 +14,7 @@ runs so this module is always executable on a bare CPU container.
   continuous-batching engine                -> bench_serving
   self-speculative (HQP drafts, bf16 checks)-> bench_speculative
   paged KV + shared-prefix reuse            -> bench_paged
+  HTTP/SSE front door + overload sweep      -> bench_http
   decode attention (windowed vs full)       -> bench_decode_attention
   prefill attention (kernel vs einsum)      -> bench_prefill_attention
   kernels                                   -> bench_kernels
@@ -31,6 +32,7 @@ payload into one schema-tagged file CI validates and uploads.
 from __future__ import annotations
 
 import argparse
+import asyncio
 import json
 import pathlib
 import time
@@ -583,6 +585,273 @@ def bench_paged(out_path: str = "BENCH_serving.json") -> List[Row]:
     return rows
 
 
+async def _sse_request(port: int, body: bytes, delay_s: float = 0.0) -> dict:
+    """One streaming client: POST, then read SSE events with a wall-clock
+    stamp per event. Returns status + per-token timing raw material.
+
+    The client runs in the server's own event loop, so on this box (one
+    CPU core — there is nothing to overlap with anyway) its parse cost
+    lands in the measured wall; the hot loop therefore counts token
+    frames with C-speed scans over each received segment instead of
+    slicing per frame, and JSON-decodes only the final ``done`` frame."""
+    if delay_s > 0:
+        await asyncio.sleep(delay_s)
+    t_send = time.perf_counter()
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    writer.write((f"POST /v1/generate HTTP/1.1\r\nHost: b\r\n"
+                  f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+    await writer.drain()
+    head = await reader.readuntil(b"\r\n\r\n")
+    status = int(head.split(b" ")[1])
+    rec = {"status": status, "t_send": t_send, "token_times": [],
+           "finish_reason": None, "n_tokens": 0, "t_done": None}
+    if status == 200:
+        buf = bytearray()
+        while rec["t_done"] is None:
+            chunk = await reader.read(65536)
+            if not chunk:
+                break
+            t_recv = time.perf_counter()
+            buf += chunk
+            # process only the complete-frame prefix (a frame may straddle
+            # the segment boundary); a burst arriving in one segment shares
+            # one stamp — exactly what a real client would observe
+            i = buf.rfind(b"\n\n")
+            if i < 0:
+                continue
+            complete = bytes(buf[:i + 2])
+            del buf[:i + 2]
+            n_tok = complete.count(b"event: token")
+            if n_tok:
+                rec["token_times"].extend([t_recv] * n_tok)
+            j = complete.find(b"event: done")
+            if j >= 0:
+                frame = complete[j:complete.index(b"\n\n", j)]
+                d = json.loads(frame.partition(b"data: ")[2])
+                rec["t_done"] = t_recv
+                rec["finish_reason"] = d["finish_reason"]
+                rec["n_tokens"] = d["n_tokens"]
+    else:
+        await reader.read()                    # consume the error body
+    writer.close()
+    return rec
+
+
+def _run_http_phase(eng, queue_depth, deadline_s, bodies, delays):
+    """Fresh Service + front door (ephemeral port) on an already-compiled
+    engine; fire one client per body at its delay; drain; return
+    (svc.stats, client records, wall_s measured send-to-last-done)."""
+    from repro.serving.service import HttpFrontDoor, Service, ServiceConfig
+    svc = Service(eng, ServiceConfig(queue_depth=queue_depth,
+                                     default_deadline_s=deadline_s))
+    door = HttpFrontDoor(svc, host="127.0.0.1", port=0)
+
+    async def go():
+        await door.start()
+        try:
+            t0 = time.perf_counter()
+            recs = await asyncio.gather(
+                *[_sse_request(door.port, b, d)
+                  for b, d in zip(bodies, delays)])
+            wall = time.perf_counter() - t0
+            return recs, wall
+        finally:
+            await door.stop(drain=True)
+
+    recs, wall = asyncio.run(go())
+    return dict(svc.stats), recs, wall
+
+
+def _pct(xs, q, scale=1e3):
+    return float(np.percentile(xs, q)) * scale if xs else 0.0
+
+
+def bench_http(out_path: str = "BENCH_serving.json") -> List[Row]:
+    """The engine behind the real HTTP/SSE front door vs the same engine
+    driven in-process — BENCH_serving's traffic benchmark, CI-gated by
+    ``check_bench``:
+
+      * ``http_stream`` (CLOSED loop): every client connects at once and
+        streams to completion — the same all-at-once workload as the
+        in-process ``Engine.run`` timed immediately before ON THE SAME
+        ENGINE (same compiled fns, so the delta is pure transport).
+        Goodput must stay >= 0.9x in-process tokens/s
+        (``goodput_ratio``), with zero sheds and zero deadline
+        violations; TTFT and inter-token gap p50/p95/p99 are recorded
+        from the CLIENT side of the socket — the numbers a user would
+        see, not the engine's view.
+      * ``http_overload`` (OPEN loop): uniform-arrival sweep at offered
+        rates below/at/above the measured capacity knee
+        (``inproc_tokens_per_s / max_new_tokens``) against a deliberately
+        shallow admission queue. Below the knee the service must meet
+        every deadline (zero violations at zero shed); above it the
+        bound must actually engage (sheds > 0) — overload degrades into
+        429s, not into blown SLOs. Headline percentile keys summarize
+        the LOWEST-rate (below-knee) point; ``sweep`` holds every point.
+    """
+    import jax
+    from repro import configs
+    from repro.core.pruning import param_bytes
+    from repro.models import lm
+    from repro.serving import (Engine, Request, SchedulerConfig,
+                               summarize_results)
+
+    import dataclasses
+
+    # 4L/d128 rather than the 2L/d64 smoke config: the transport floor is
+    # a fixed ~15-20us/token of syscalls + task wakeups (and this box has
+    # ONE core, so none of it overlaps compute), and goodput_ratio is
+    # compute/(compute + transport) — measured against a toy model whose
+    # decode costs ~130us/token it overstates the transport share ~4x vs
+    # any real deployment. Both sides of the ratio run this same engine,
+    # so the comparison itself stays apples-to-apples.
+    cfg = dataclasses.replace(configs.get_smoke_config("qwen3-0.6b"),
+                              n_layers=4, d_model=128, d_ff=256)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    # decode-heavy enough (96 tokens/stream) that the fixed transport
+    # transient — 12 TCP connects + the few staggered-admission steps
+    # before slots fill — amortizes out of the goodput ratio; decode_steps=8
+    # keeps the per-step transport overhead (loop wakeup + one socket
+    # write/read per stream) under the step's compute on a one-core box
+    n_req, new_tok, n_slots, chunk, dsteps = 12, 96, 4, 8, 8
+    prompts = [rng.randint(0, cfg.vocab_size, 8 + (5 * i) % 13).tolist()
+               for i in range(n_req)]
+    reqs = [Request(prompt=pr, max_new_tokens=new_tok) for pr in prompts]
+    bodies = [json.dumps({"prompt": pr, "max_new_tokens": new_tok}).encode()
+              for pr in prompts]
+
+    eng = Engine(params, cfg, n_slots=n_slots, max_seq=128,
+                 sched=SchedulerConfig(prefill_chunk=chunk,
+                                       decode_steps=dsteps))
+    # warm both paths once: engine compiles (tail-chunk shapes, window
+    # buckets), then the transport (listener, pump thread, client sockets)
+    eng.run(reqs, arrival_ticks=[0] * n_req)
+    _run_http_phase(eng, queue_depth=n_req, deadline_s=None, bodies=bodies,
+                    delays=[0.0] * n_req)
+    pbytes = int(param_bytes(params))
+
+    payload = _serving_payload(cfg, n_req, n_slots, chunk, new_tok, dsteps)
+    rows: List[Row] = []
+
+    # --- closed loop: all clients at once, queue deep enough to admit all.
+    # The in-process baseline and the HTTP phase run INTERLEAVED, best-of
+    # each, so CPU-clock drift between measurement windows cancels out of
+    # goodput_ratio instead of masquerading as transport overhead.
+    in_best = best = None
+    for _ in range(3):
+        for k in eng.stats:
+            eng.stats[k] = 0
+        t0 = time.perf_counter()
+        results = eng.run(reqs, arrival_ticks=[0] * n_req)
+        iwall = time.perf_counter() - t0
+        if in_best is None or iwall < in_best[1]:
+            in_best = (results, iwall)
+        st, recs, hwall = _run_http_phase(eng, queue_depth=n_req,
+                                          deadline_s=None, bodies=bodies,
+                                          delays=[0.0] * n_req)
+        if best is None or hwall < best[2]:
+            best = (st, recs, hwall)
+    inproc = summarize_results(*in_best)
+    st, recs, hwall = best
+    done = [r for r in recs if r["finish_reason"] in ("length", "eos")]
+    out_tokens = sum(r["n_tokens"] for r in done)
+    ttfts = [r["token_times"][0] - r["t_send"] for r in done
+             if r["token_times"]]
+    lats = [r["t_done"] - r["t_send"] for r in done]
+    gaps = [b - a for r in done
+            for a, b in zip(r["token_times"], r["token_times"][1:])]
+    goodput = out_tokens / max(hwall, 1e-9)
+    v = {
+        "n_requests": n_req,
+        "out_tokens": out_tokens,
+        "tokens_per_s": goodput,
+        "latency_p50_ms": _pct(lats, 50), "latency_p95_ms": _pct(lats, 95),
+        "latency_p99_ms": _pct(lats, 99),
+        "ttft_p50_ms": _pct(ttfts, 50), "ttft_p95_ms": _pct(ttfts, 95),
+        "ttft_p99_ms": _pct(ttfts, 99),
+        "tok_gap_p50_ms": _pct(gaps, 50), "tok_gap_p95_ms": _pct(gaps, 95),
+        "tok_gap_p99_ms": _pct(gaps, 99),
+        "param_bytes": pbytes,
+        "max_new_tokens": new_tok,
+        "inproc_tokens_per_s": inproc["tokens_per_s"],
+        "goodput_ratio": goodput / max(inproc["tokens_per_s"], 1e-9),
+        "completed": len(done),
+        "shed": st["shed"],
+        "deadline_violations": st["expired"],
+    }
+    payload["variants"]["http_stream"] = v
+    payload["expected_variants"].append("http_stream")
+    rows.append((
+        "serving/http_stream", hwall / max(out_tokens, 1) * 1e6,
+        f"goodput={goodput:.1f}tok_s ({v['goodput_ratio']:.2f}x inproc) "
+        f"ttft_p50={v['ttft_p50_ms']:.1f}ms "
+        f"gap_p50={v['tok_gap_p50_ms']:.1f}ms shed={st['shed']}"))
+
+    # --- open loop: uniform arrivals swept past the knee, shallow queue
+    cap_rps = inproc["tokens_per_s"] / new_tok
+    deadline_s = max(1.0, 20 * _pct(lats, 95) / 1e3)
+    n_open, overload_depth = 24, 4
+    sweep = []
+    for mult in (0.35, 1.0, 3.0):
+        rate = mult * cap_rps
+        ob = [bodies[i % n_req] for i in range(n_open)]
+        delays = [i / rate for i in range(n_open)]
+        # pass 1 warms the arrival-pattern-specific compiled variants
+        # (staggered admission walks decode-window buckets the all-at-once
+        # closed loop never hits; a cold ~1s XLA compile mid-phase would
+        # freeze admission and shed everything behind it), pass 2 is timed
+        for _ in range(2):
+            st, recs, owall = _run_http_phase(
+                eng, queue_depth=overload_depth, deadline_s=deadline_s,
+                bodies=ob, delays=delays)
+        odone = [r for r in recs if r["finish_reason"] in ("length", "eos")]
+        ottft = [r["token_times"][0] - r["t_send"] for r in odone
+                 if r["token_times"]]
+        olat = [r["t_done"] - r["t_send"] for r in odone]
+        sweep.append({
+            "offered_mult": mult,
+            "offered_rps": rate,
+            "n_offered": n_open,
+            "completed": len(odone),
+            "shed": st["shed"],
+            "shed_rate": st["shed"] / n_open,
+            "deadline_violations": st["expired"],
+            "goodput_tokens_per_s": (sum(r["n_tokens"] for r in odone)
+                                     / max(owall, 1e-9)),
+            "ttft_p50_ms": _pct(ottft, 50), "ttft_p95_ms": _pct(ottft, 95),
+            "latency_p50_ms": _pct(olat, 50),
+            "latency_p95_ms": _pct(olat, 95),
+        })
+    low = sweep[0]
+    v = {
+        "n_requests": n_open,
+        "out_tokens": low["completed"] * new_tok,
+        "tokens_per_s": low["goodput_tokens_per_s"],
+        "latency_p50_ms": low["latency_p50_ms"],
+        "latency_p95_ms": low["latency_p95_ms"],
+        "ttft_p50_ms": low["ttft_p50_ms"], "ttft_p95_ms": low["ttft_p95_ms"],
+        "param_bytes": pbytes,
+        "max_new_tokens": new_tok,
+        "queue_depth": overload_depth,
+        "deadline_s": deadline_s,
+        "capacity_rps": cap_rps,
+        "sweep": sweep,
+    }
+    payload["variants"]["http_overload"] = v
+    payload["expected_variants"].append("http_overload")
+    shed_str = "/".join(f"{p['shed']}" for p in sweep)
+    viol_str = "/".join(f"{p['deadline_violations']}" for p in sweep)
+    rows.append((
+        "serving/http_overload", 1e6 / max(cap_rps, 1e-9),
+        f"knee={cap_rps:.0f}rps sweep=0.35x/1x/3x shed={shed_str} "
+        f"deadline_viol={viol_str} depth={overload_depth}"))
+
+    if out_path:
+        pathlib.Path(out_path).write_text(json.dumps(payload, indent=1))
+    return rows
+
+
 def bench_decode_attention() -> List[Row]:
     """Decode-attention ms/step vs cache capacity (``max_seq`` sweep).
 
@@ -777,6 +1046,7 @@ BENCHES = [
     bench_serving,
     bench_speculative,
     bench_paged,
+    bench_http,
     bench_decode_attention,
     bench_prefill_attention,
     bench_kernels,

@@ -54,6 +54,38 @@ def main(argv) -> int:
                   f"{b_tok:.1f} -> {n_tok:.1f} ({frac:.2f}x baseline)")
             warned += 1
 
+    # http variants carry trajectory signals beyond raw tokens/s: transport
+    # efficiency (goodput as a fraction of the same engine in-process) and
+    # below-knee overload behavior (shed rate / deadline violations)
+    if "http_stream" in nv and "http_stream" in bv:
+        n_r = nv["http_stream"].get("goodput_ratio")
+        b_r = bv["http_stream"].get("goodput_ratio")
+        if (isinstance(n_r, (int, float)) and isinstance(b_r, (int, float))
+                and n_r < b_r - 0.05):
+            print(f"::warning::serving/http_stream transport efficiency "
+                  f"dropped: goodput {b_r:.2f}x -> {n_r:.2f}x of the "
+                  f"in-process engine")
+            warned += 1
+    if "http_overload" in nv and "http_overload" in bv:
+        def _low(v):
+            sweep = [p for p in v.get("sweep") or []
+                     if isinstance(p.get("offered_rps"), (int, float))]
+            return min(sweep, key=lambda p: p["offered_rps"]) if sweep \
+                else None
+        n_low, b_low = _low(nv["http_overload"]), _low(bv["http_overload"])
+        if n_low and b_low:
+            n_s, b_s = n_low.get("shed_rate", 0), b_low.get("shed_rate", 0)
+            if n_s > b_s + 0.1:
+                print(f"::warning::serving/http_overload below-knee shed "
+                      f"rate grew: {b_s:.2f} -> {n_s:.2f} (admission "
+                      f"control rejecting load it used to carry)")
+                warned += 1
+            n_v = n_low.get("deadline_violations", 0)
+            if n_v and not b_low.get("deadline_violations", 0):
+                print(f"::warning::serving/http_overload below-knee point "
+                      f"now violates {n_v} deadline(s); baseline had none")
+                warned += 1
+
     n_rows = {r["name"]: r for r in new.get("rows") or []
               if isinstance(r.get("us_per_call"), (int, float))}
     b_rows = {r["name"]: r for r in base.get("rows") or []

@@ -16,7 +16,13 @@ numbers), a ``paged`` variant slower than PAGED_MIN_RATIO x its contiguous
 ``paged_baseline`` or a ``paged_shared`` variant whose peak cache bytes
 exceed PAGED_BYTES_MAX x the contiguous footprint / whose prefix cache
 never hit (paging must be free when nothing is shared and a strict memory
-win when a system prompt repeats), a ``decode_attention/xla_win/*`` or ``prefill_attention/xla_win/*``
+win when a system prompt repeats), an ``http_stream`` variant whose
+goodput falls below HTTP_MIN_RATIO x the in-process tokens/s or that shed
+or deadline-expired anything on its fully-admittable closed-loop workload,
+an ``http_overload`` sweep with a deadline violation at any no-shed point
+(below the knee the service must meet every SLO), a below-knee point
+shedding more than HTTP_LOW_SHED_MAX, or a sweep that never sheds at all
+(never reached the knee), a ``decode_attention/xla_win/*`` or ``prefill_attention/xla_win/*``
 sweep whose ms/step (ms/chunk) grows more than FLAT_MAX from the smallest
 to the largest ``max_seq`` — the windowed attends must scale with live
 length, not cache capacity — or a prefill primitive costing more than
@@ -50,6 +56,8 @@ PREFILL_RATIO_MAX = 1.1
 SPEC_ACCEPT_MIN = 0.7
 PAGED_MIN_RATIO = 0.95
 PAGED_BYTES_MAX = 0.6
+HTTP_MIN_RATIO = 0.9        # http_stream goodput vs in-process tokens/s
+HTTP_LOW_SHED_MAX = 0.25    # shed-rate ceiling at the below-knee sweep point
 
 
 def fail(msg: str) -> None:
@@ -71,21 +79,28 @@ def check_serving(s: dict) -> None:
     for name, v in variants.items():
         for key in SERVING_REQUIRED:
             if not isinstance(v.get(key), (int, float)):
-                fail(f"serving variant {name!r} missing numeric {key!r}")
+                fail(f"serving variant {name!r}: {key!r} must be numeric, "
+                     f"got {v.get(key)!r}")
         if v.get("n_requests") == 0:
             continue    # zeroed summary from an empty result set is valid
         if v["tokens_per_s"] <= 0:
-            fail(f"serving variant {name!r}: tokens_per_s <= 0")
+            fail(f"serving variant {name!r}: tokens_per_s = "
+                 f"{v['tokens_per_s']!r}, threshold > 0")
         if v["latency_p95_ms"] < v["latency_p50_ms"]:
-            fail(f"serving variant {name!r}: p95 < p50")
+            fail(f"serving variant {name!r}: latency_p95_ms "
+                 f"{v['latency_p95_ms']:.3f} < latency_p50_ms "
+                 f"{v['latency_p50_ms']:.3f} — percentiles inverted")
     if "hqp_int8" in variants:
         ab = variants["hqp_int8"].get("artifact_bytes")
         if not isinstance(ab, int) or ab <= 0:
-            fail("hqp_int8 variant missing positive artifact_bytes")
+            fail(f"hqp_int8 variant: artifact_bytes = {ab!r}, "
+                 f"threshold: positive int")
     if "speculative" in variants:
         check_speculative(variants)
     if "paged" in variants or "paged_shared" in variants:
         check_paged(variants)
+    if "http_stream" in variants or "http_overload" in variants:
+        check_http(variants)
 
 
 def check_speculative(variants: dict) -> None:
@@ -178,6 +193,81 @@ def check_paged(variants: dict) -> None:
           f"{PAGED_MIN_RATIO}, shared-prefix bytes {bratio:.2f}x <= "
           f"{PAGED_BYTES_MAX}, hits={s['prefix_hits']}, "
           f"prefilled {s['prefill_tokens']}/{s['prompt_tokens']})")
+
+
+def check_http(variants: dict) -> None:
+    """The HTTP front door's two headline guarantees, gated:
+
+    * transport is ~free — ``http_stream`` (closed loop, same workload and
+      SAME ENGINE as the in-process run timed next to it) must keep
+      goodput >= HTTP_MIN_RATIO x in-process tokens/s, with zero sheds and
+      zero deadline violations: asyncio + SSE framing + the pump-thread
+      lock may not eat the engine's throughput;
+    * overload degrades into 429s, not blown SLOs — in the
+      ``http_overload`` open-loop sweep, every point that shed nothing
+      must also have violated no deadline, the below-knee (lowest-rate)
+      point must stay under HTTP_LOW_SHED_MAX shed rate with zero
+      violations, and at least one point must actually shed — a sweep
+      that never reaches the knee proves nothing about admission
+      control."""
+    for name in ("http_stream", "http_overload"):
+        if name not in variants:
+            fail(f"http gate needs variant {name!r} (have: "
+                 f"{sorted(variants)}) — bench_http writes both; a partial "
+                 f"payload means the bench died mid-run")
+    v = variants["http_stream"]
+    for key in ("goodput_ratio", "inproc_tokens_per_s", "shed",
+                "deadline_violations"):
+        if not isinstance(v.get(key), (int, float)):
+            fail(f"http_stream: {key!r} must be numeric, got {v.get(key)!r}")
+    if v["goodput_ratio"] < HTTP_MIN_RATIO:
+        fail(f"http_stream goodput {v['tokens_per_s']:.1f} tok/s is "
+             f"{v['goodput_ratio']:.3f}x the in-process "
+             f"{v['inproc_tokens_per_s']:.1f} tok/s (floor "
+             f"{HTTP_MIN_RATIO}x) — the SSE transport is eating engine "
+             f"throughput")
+    if v["shed"] != 0:
+        fail(f"http_stream shed {v['shed']} requests, threshold 0 — the "
+             f"closed-loop queue is sized to admit every client")
+    if v["deadline_violations"] != 0:
+        fail(f"http_stream had {v['deadline_violations']} deadline "
+             f"violations, threshold 0 — no deadlines are set on this "
+             f"workload")
+    o = variants["http_overload"]
+    sweep = o.get("sweep") or []
+    if len(sweep) < 2:
+        fail(f"http_overload sweep has {len(sweep)} point(s); need >= 2 "
+             f"(below and above the knee)")
+    for p in sweep:
+        for key in ("offered_rps", "shed", "shed_rate",
+                    "deadline_violations"):
+            if not isinstance(p.get(key), (int, float)):
+                fail(f"http_overload sweep point {p.get('offered_mult')}: "
+                     f"{key!r} must be numeric, got {p.get(key)!r}")
+        if p["shed"] == 0 and p["deadline_violations"] != 0:
+            fail(f"http_overload point at {p['offered_rps']:.0f} rps shed "
+                 f"nothing yet violated {p['deadline_violations']} "
+                 f"deadline(s), threshold 0 — below the knee every "
+                 f"admitted request must meet its SLO")
+    low = min(sweep, key=lambda p: p["offered_rps"])
+    if low["shed_rate"] > HTTP_LOW_SHED_MAX:
+        fail(f"http_overload below-knee point ({low['offered_rps']:.0f} "
+             f"rps) shed rate {low['shed_rate']:.2f} > "
+             f"{HTTP_LOW_SHED_MAX} ceiling — admission control is "
+             f"rejecting load the engine can carry")
+    if low["deadline_violations"] != 0:
+        fail(f"http_overload below-knee point ({low['offered_rps']:.0f} "
+             f"rps) violated {low['deadline_violations']} deadline(s), "
+             f"threshold 0")
+    if not any(p["shed"] > 0 for p in sweep):
+        fail(f"http_overload never shed (sheds="
+             f"{[p['shed'] for p in sweep]}) — the sweep must cross the "
+             f"knee to prove the admission bound engages")
+    print(f"check_bench: http OK (stream goodput "
+          f"{v['goodput_ratio']:.2f}x inproc >= {HTTP_MIN_RATIO}, "
+          f"overload sheds={[p['shed'] for p in sweep]} "
+          f"violations={[p['deadline_violations'] for p in sweep]} over "
+          f"{len(sweep)} points)")
 
 
 def _sweep(rows: list, pattern) -> dict:

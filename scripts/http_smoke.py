@@ -1,0 +1,132 @@
+"""CI http-smoke: boot ``serve --http``, stream one SSE request end to end,
+assert the wire framing, then SIGTERM and assert a clean drain + exit 0.
+
+  PYTHONPATH=src python scripts/http_smoke.py
+
+What it proves (the §13 shutdown/streaming contract, over a real socket
+against a real subprocess — the loopback unit tests cover the in-process
+path):
+
+  * the server comes up and prints its bound port (``--port 0``);
+  * POST /v1/generate answers 200 text/event-stream with N ``token``
+    events (indices 0..N-1) followed by exactly one ``done`` event;
+  * /healthz reports the completed request;
+  * SIGTERM drains and the process exits 0 with the drain log line.
+"""
+from __future__ import annotations
+
+import json
+import re
+import signal
+import socket
+import subprocess
+import sys
+import time
+
+NEW_TOKENS = 6
+BOOT_TIMEOUT_S = 420          # model init + warmup jit compile on cold CPU
+STREAM_TIMEOUT_S = 120
+EXIT_TIMEOUT_S = 60
+
+
+def fail(msg: str, proc=None) -> None:
+    print(f"http_smoke: FAIL: {msg}")
+    if proc is not None:
+        proc.kill()
+        out = proc.stdout.read() if proc.stdout else ""
+        print(f"--- server output ---\n{out}")
+    raise SystemExit(1)
+
+
+def http_exchange(port: int, request: bytes, timeout_s: float) -> bytes:
+    with socket.create_connection(("127.0.0.1", port),
+                                  timeout=timeout_s) as s:
+        s.sendall(request)
+        chunks = []
+        while True:
+            b = s.recv(65536)
+            if not b:
+                break
+            chunks.append(b)
+    return b"".join(chunks)
+
+
+def parse_sse(raw: bytes):
+    head, _, payload = raw.partition(b"\r\n\r\n")
+    events = []
+    for block in payload.decode().strip().split("\n\n"):
+        lines = dict(line.split(": ", 1) for line in block.splitlines())
+        events.append((lines["event"], json.loads(lines["data"])))
+    return head.decode(), events
+
+
+def main() -> int:
+    cmd = [sys.executable, "-u", "-m", "repro.launch.serve",
+           "--arch", "qwen3-0.6b", "--smoke", "--engine", "--http",
+           "--port", "0", "--queue-depth", "4"]
+    proc = subprocess.Popen(cmd, stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True)
+    port, t0 = None, time.monotonic()
+    for line in proc.stdout:
+        print(f"[server] {line.rstrip()}")
+        m = re.search(r"listening on http://[\d.]+:(\d+)", line)
+        if m:
+            port = int(m.group(1))
+            break
+        if time.monotonic() - t0 > BOOT_TIMEOUT_S:
+            fail(f"no listen line within {BOOT_TIMEOUT_S}s", proc)
+        if proc.poll() is not None:
+            fail(f"server exited {proc.returncode} before listening", proc)
+    if port is None:
+        fail("server stdout closed before the listen line", proc)
+    print(f"http_smoke: server up on port {port} "
+          f"({time.monotonic() - t0:.0f}s boot)")
+
+    body = json.dumps({"prompt_len": 12,
+                       "max_new_tokens": NEW_TOKENS}).encode()
+    raw = http_exchange(port, (
+        f"POST /v1/generate HTTP/1.1\r\nHost: s\r\n"
+        f"Content-Length: {len(body)}\r\n\r\n").encode() + body,
+        STREAM_TIMEOUT_S)
+    head, events = parse_sse(raw)
+    if not head.startswith("HTTP/1.1 200"):
+        fail(f"status line: {head.splitlines()[0]!r}", proc)
+    if "text/event-stream" not in head:
+        fail(f"not an SSE response: {head!r}", proc)
+    names = [n for n, _ in events]
+    if names != ["token"] * NEW_TOKENS + ["done"]:
+        fail(f"event framing {names} != {NEW_TOKENS}x token + done", proc)
+    idxs = [d["index"] for n, d in events if n == "token"]
+    if idxs != list(range(NEW_TOKENS)):
+        fail(f"token indices {idxs} not 0..{NEW_TOKENS - 1}", proc)
+    done = events[-1][1]
+    if done["finish_reason"] != "length" or done["n_tokens"] != NEW_TOKENS:
+        fail(f"done event {done} (want finish_reason=length "
+             f"n_tokens={NEW_TOKENS})", proc)
+    print(f"http_smoke: streamed {NEW_TOKENS} tokens + done "
+          f"(ttft={done['ttft_ms']:.0f}ms latency={done['latency_ms']:.0f}ms)")
+
+    raw = http_exchange(port, b"GET /healthz HTTP/1.1\r\nHost: s\r\n\r\n",
+                        30)
+    health = json.loads(raw.partition(b"\r\n\r\n")[2])
+    if health["status"] != "ok" or health["service"]["completed"] != 1:
+        fail(f"healthz {health}", proc)
+
+    proc.send_signal(signal.SIGTERM)
+    try:
+        out, _ = proc.communicate(timeout=EXIT_TIMEOUT_S)
+    except subprocess.TimeoutExpired:
+        fail(f"server did not exit within {EXIT_TIMEOUT_S}s of SIGTERM",
+             proc)
+    print(f"[server] {out.strip()}" if out.strip() else
+          "[server] <no further output>")
+    if proc.returncode != 0:
+        fail(f"exit code {proc.returncode} after SIGTERM (want 0)")
+    if "drained cleanly" not in out:
+        fail(f"no 'drained cleanly' line in shutdown output: {out!r}")
+    print("http_smoke: OK (SSE framing, healthz, SIGTERM drain, exit 0)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

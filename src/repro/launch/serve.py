@@ -150,14 +150,50 @@ def synth_requests(cfg, n: int, prompt_len: int, max_new_tokens: int,
     return reqs, [i * gap_s for i in range(n)]
 
 
+def build_engine(params, cfg, ctx, args, sampling=None, draft=None):
+    """One Engine from the serve flags — shared by trace replay
+    (``run_engine``) and the HTTP front door (``serve_http``), so both
+    paths serve the exact same configuration."""
+    from repro.serving import Engine, SchedulerConfig
+    spec_kw = {}
+    if draft is not None:
+        draft_params, draft_ctx, manifest = draft
+        spec_kw = dict(draft_params=draft_params, draft_ctx=draft_ctx,
+                       spec_k=args.spec_k, draft_manifest=manifest)
+    return Engine(params, cfg, ctx=ctx, n_slots=args.engine_slots,
+                  max_seq=args.max_seq,
+                  sched=SchedulerConfig(prefill_chunk=args.prefill_chunk,
+                                        decode_steps=args.decode_steps),
+                  sampling=sampling, page_size=args.page_size or None,
+                  prefix_cache=not args.no_prefix_cache, **spec_kw)
+
+
+def serve_http(params, cfg, ctx, args, log=print, sampling=None, draft=None):
+    """``serve --http``: the engine behind the asyncio SSE front door.
+    Blocks until SIGTERM/SIGINT, then drains in-flight slots (DESIGN §13).
+    A warmup request pays the jit-compile cost before the listener opens so
+    the first client's TTFT measures serving, not tracing."""
+    from repro.serving import Request
+    from repro.serving.service import Service, ServiceConfig, run_http
+    eng = build_engine(params, cfg, ctx, args, sampling=sampling, draft=draft)
+    t0 = time.monotonic()
+    eng.run([Request(prompt=[3, 1, 4, 1, 5, 9], max_new_tokens=2)])
+    for k in eng.stats:
+        eng.stats[k] = 0
+    log(f"[http] warmup compile: {time.monotonic() - t0:.1f}s")
+    svc = Service(eng, ServiceConfig(queue_depth=args.queue_depth,
+                                     default_deadline_s=args.deadline_s))
+    run_http(svc, host=args.host, port=args.port, log=log)
+    return svc
+
+
 def run_engine(params, cfg, ctx, args, log=print, sampling=None, draft=None):
     """``draft`` = (draft_params, draft_ctx, manifest) switches the engine
     into speculative mode: ``params`` is then the bf16 VERIFIER and the
     drafter is the HQP artifact. ``--verify`` still compares against serial
     decode of ``params`` — in speculative greedy mode that is exactly the
     bit-identity guarantee (the artifact only ever proposes)."""
-    from repro.serving import (Engine, SchedulerConfig, serial_decode,
-                               summarize_results)
+    from repro.serving import serial_decode, summarize_results
     if args.trace:
         reqs, arrivals = load_trace(args.trace, cfg)
         log(f"[engine] replaying trace {args.trace}: {len(reqs)} requests")
@@ -171,17 +207,7 @@ def run_engine(params, cfg, ctx, args, log=print, sampling=None, draft=None):
     if need > args.max_seq:
         raise SystemExit(f"trace needs max-seq >= {need}, got {args.max_seq}")
 
-    spec_kw = {}
-    if draft is not None:
-        draft_params, draft_ctx, manifest = draft
-        spec_kw = dict(draft_params=draft_params, draft_ctx=draft_ctx,
-                       spec_k=args.spec_k, draft_manifest=manifest)
-    eng = Engine(params, cfg, ctx=ctx, n_slots=args.engine_slots,
-                 max_seq=args.max_seq,
-                 sched=SchedulerConfig(prefill_chunk=args.prefill_chunk,
-                                       decode_steps=args.decode_steps),
-                 sampling=sampling, page_size=args.page_size or None,
-                 prefix_cache=not args.no_prefix_cache, **spec_kw)
+    eng = build_engine(params, cfg, ctx, args, sampling=sampling, draft=draft)
     t0 = time.monotonic()
     results = eng.run(reqs, arrivals_s=arrivals)
     wall = time.monotonic() - t0
@@ -280,11 +306,33 @@ def main(argv=None):
                          "(paged mode only)")
     ap.add_argument("--trace", default=None,
                     help="JSONL request trace to replay (engine mode)")
+    ap.add_argument("--http", action="store_true",
+                    help="serve over HTTP with SSE token streaming instead "
+                         "of replaying a trace (implies --engine; blocks "
+                         "until SIGTERM, then drains in-flight requests)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="HTTP bind address (--http)")
+    ap.add_argument("--port", type=int, default=8080,
+                    help="HTTP bind port; 0 picks a free port (--http)")
+    ap.add_argument("--queue-depth", type=int, default=16,
+                    help="admission queue bound beyond the slots: more than "
+                         "slots+depth requests in flight => shed with 429 "
+                         "(--http)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="default per-request deadline in seconds; expired "
+                         "requests are evicted mid-flight and stream "
+                         "finish_reason=deadline (--http; per-request "
+                         "'deadline_s' in the POST body overrides)")
     ap.add_argument("--verify", action="store_true", default=None,
                     help="check engine outputs == serial decode "
                          "(default: on under --smoke)")
     args = ap.parse_args(argv)
 
+    if args.http:
+        args.engine = True           # the front door is an engine transport
+        if args.trace:
+            ap.error("--http serves live requests; --trace replays a file — "
+                     "pick one")
     if args.save_artifact and not args.hqp:
         ap.error("--save-artifact requires --hqp (nothing to save otherwise)")
     if args.save_artifact and args.load_artifact:
@@ -335,6 +383,10 @@ def main(argv=None):
             draft = (params, draft_ctx, manifest)
             params = parent
         with mesh:
+            if args.http:
+                svc = serve_http(params, cfg, ctx, args, sampling=sampling,
+                                 draft=draft)
+                return svc.stats
             _, stats = run_engine(params, cfg, ctx, args, sampling=sampling,
                                   draft=draft)
         return stats

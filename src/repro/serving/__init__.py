@@ -12,10 +12,13 @@ from repro.serving.engine import (Engine, Request, RequestResult,
                                   serial_decode, summarize_results)
 from repro.serving.sampling import GREEDY, SamplingConfig
 from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.serving.service import (HttpFrontDoor, Service, ServiceConfig,
+                                   Ticket)
 from repro.serving.speculative import SpecDecoder, check_drafter_compat
 from repro.serving.state_pool import init_pool, init_slot_template
 
 __all__ = ["Engine", "Request", "RequestResult", "serial_decode",
            "summarize_results", "Scheduler", "SchedulerConfig", "init_pool",
            "init_slot_template", "GREEDY", "SamplingConfig", "SpecDecoder",
-           "check_drafter_compat"]
+           "check_drafter_compat", "Service", "ServiceConfig", "Ticket",
+           "HttpFrontDoor"]

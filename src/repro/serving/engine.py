@@ -254,6 +254,11 @@ class Engine:
         self.waiting: List[Request] = []
         self._uid = itertools.count()
         self.ticks = 0
+        # optional per-token sink (the service layer's streaming hook):
+        # called as on_token(uid, token) from _emit for EVERY emitted token,
+        # before finish bookkeeping — so a streaming front door sees tokens
+        # at host-sync granularity instead of waiting for the full result
+        self.on_token = None
         # drafted_tokens counts every candidate the device produced for a
         # slot that was live at dispatch (speculative drafts, or plain-mode
         # scan steps — including steps burned on slots that froze mid-scan,
@@ -269,6 +274,7 @@ class Engine:
                       "prefix_hits": 0, "prefix_hit_tokens": 0,
                       "bytes_saved": 0, "cow_copies": 0,
                       "pages_in_use": 0, "pages_peak": 0,
+                      "cancelled": 0,
                       "kv_bytes_peak": 0 if self.paged else kv_bytes}
 
         cfg_, ctx_ = self.cfg, self.ctx
@@ -526,6 +532,33 @@ class Engine:
         self.waiting.append(req)
         return uid
 
+    def cancel(self, uid: int) -> bool:
+        """Abort a request wherever it currently lives (the service layer's
+        deadline-eviction hook). A queued request is dropped from the waiting
+        list; an in-flight one — mid-prefill included — has its slot freed
+        immediately and, in paged mode, its page references released (pages
+        the prefix cache also holds stay resident for future hits). The
+        slot's device state needs no scrubbing: a freed slot's stale KV is
+        masked by ``pos`` on the next admission, exactly as on normal
+        eviction. Returns False when the uid is unknown or already
+        finished."""
+        for i, req in enumerate(self.waiting):
+            if req.uid == uid:
+                del self.waiting[i]
+                self.stats["cancelled"] += 1
+                return True
+        for slot in self.slots:
+            if slot.stage != FREE and slot.result is not None \
+                    and slot.result.uid == uid:
+                slot.stage = FREE
+                slot.result = None
+                slot.prompt = None
+                if self.paged:
+                    self._release_slot_pages(slot)
+                self.stats["cancelled"] += 1
+                return True
+        return False
+
     @property
     def has_work(self) -> bool:
         return bool(self.waiting) or any(s.stage != FREE for s in self.slots)
@@ -565,6 +598,8 @@ class Engine:
         if not res.tokens:
             res.t_first_token = time.monotonic()
         res.tokens.append(tok)
+        if self.on_token is not None:
+            self.on_token(res.uid, tok)
         done_eos = slot.eos_id is not None and tok == slot.eos_id
         done_len = len(res.tokens) >= slot.max_new_tokens
         if done_eos or done_len:

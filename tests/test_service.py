@@ -1,0 +1,210 @@
+"""Service layer: bounded admission, deadlines, shed, drain, SSE transport.
+
+The load-bearing guarantees (DESIGN.md §13):
+  * shed fires EXACTLY at queue+slot saturation (load == n_slots +
+    queue_depth) and releases as soon as a request finishes;
+  * a deadline expiry evicts the request wherever it lives — queued or
+    MID-PREFILL — and, in paged mode, returns the allocator's refcounts to
+    baseline immediately (no page leak, no slot leak);
+  * drain completes every already-admitted request while shedding new ones;
+  * tokens streamed through the service are IDENTICAL to ``Engine.run`` on
+    the same requests, and the sink sees them one at a time, in order;
+  * the HTTP loopback speaks well-formed SSE (token events then exactly one
+    done event), answers /healthz, and 400s malformed bodies.
+"""
+import asyncio
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm
+from repro.serving import (Engine, HttpFrontDoor, Request, SchedulerConfig,
+                           Service, ServiceConfig)
+
+ARCH = "qwen3-0.6b"
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get_smoke_config(ARCH)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, n).tolist() for n in lens]
+
+
+def _fake_clock():
+    now = [0.0]
+    return now, (lambda: now[0])
+
+
+# ----------------------------------------------------------------- admission
+def test_shed_exactly_at_saturation(setup):
+    cfg, params = setup
+    eng = Engine(params, cfg, n_slots=1, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=8))
+    svc = Service(eng, ServiceConfig(queue_depth=1))
+    assert svc.capacity == 2
+    reqs = [Request(prompt=p, max_new_tokens=2)
+            for p in _prompts(cfg, [6, 6, 6, 6])]
+
+    a = svc.submit(reqs[0])
+    b = svc.submit(reqs[1])
+    assert a is not None and b is not None     # below the bound: admitted
+    assert svc.submit(reqs[2]) is None         # AT the bound: shed
+    assert svc.stats["shed"] == 1 and svc.stats["submitted"] == 2
+
+    while not a.done:                          # finish one...
+        svc.step()
+    c = svc.submit(reqs[3])                    # ...and the bound releases
+    assert c is not None and svc.stats["shed"] == 1
+    while svc.has_work:
+        svc.step()
+    assert b.done and c.done
+    assert svc.stats["completed"] == 3 and not svc.tickets
+
+
+def test_deadline_evicts_queued_and_mid_prefill_frees_pages(setup):
+    cfg, params = setup
+    eng = Engine(params, cfg, n_slots=1, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=4),
+                 page_size=8, prefix_cache=False)
+    base = eng.alloc.pages_in_use
+    now, clock = _fake_clock()
+    svc = Service(eng, ServiceConfig(queue_depth=2), clock=clock)
+    p_long, p_short = _prompts(cfg, [16, 8], seed=3)
+    a = svc.submit(Request(prompt=p_long, max_new_tokens=4), deadline_s=5.0)
+    b = svc.submit(Request(prompt=p_short, max_new_tokens=4), deadline_s=5.0)
+
+    svc.step()       # admit A, prefill ONE 4-token chunk of its 16; B queued
+    assert eng.n_active == 1 and len(eng.waiting) == 1
+    assert not a.done and not a.tokens         # genuinely mid-prefill
+    assert eng.alloc.pages_in_use > base       # holding pages already
+
+    now[0] = 100.0                             # both deadlines blow
+    svc.step()
+    assert a.finish_reason == "deadline"       # evicted out of its slot
+    assert b.finish_reason == "deadline"       # dropped from the queue
+    assert eng.n_active == 0 and not eng.waiting and not eng.has_work
+    assert eng.alloc.pages_in_use == base      # refcounts back to baseline
+    eng.alloc.check()
+    assert svc.stats["expired"] == 2 and eng.stats["cancelled"] == 2
+
+    # the slot is genuinely reusable after the eviction
+    c = svc.submit(Request(prompt=p_short, max_new_tokens=2))
+    while svc.has_work:
+        svc.step()
+    assert c.finish_reason == "length" and len(c.tokens) == 2
+    assert eng.alloc.pages_in_use == base
+    eng.alloc.check()
+
+
+def test_drain_completes_all_admitted_and_sheds_new(setup):
+    cfg, params = setup
+    eng = Engine(params, cfg, n_slots=2, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=8))
+    svc = Service(eng, ServiceConfig(queue_depth=4))
+    tickets = [svc.submit(Request(prompt=p, max_new_tokens=3))
+               for p in _prompts(cfg, [6, 7, 8, 9], seed=5)]
+    assert all(t is not None for t in tickets)
+    svc.drain()
+    assert all(t.finish_reason == "length" and len(t.tokens) == 3
+               for t in tickets)
+    assert svc.stats["completed"] == 4 and not svc.has_work
+    assert svc.submit(Request(prompt=[1, 2, 3], max_new_tokens=2)) is None
+    assert svc.draining and svc.stats["shed"] == 1
+
+
+# ------------------------------------------------------------ token identity
+def test_streamed_tokens_identical_to_engine_run(setup):
+    cfg, params = setup
+    eng = Engine(params, cfg, n_slots=2, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=8))
+    reqs = [Request(prompt=p, max_new_tokens=6)
+            for p in _prompts(cfg, [5, 9, 13], seed=7)]
+    svc = Service(eng, ServiceConfig(queue_depth=4))
+    events = {i: [] for i in range(len(reqs))}
+    tickets = [svc.submit(r, sink=events[i].append)
+               for i, r in enumerate(reqs)]
+    while svc.has_work:
+        svc.step()
+
+    ref = eng.run(reqs)     # same engine => same compiled fns, fresh replay
+    for i, t in enumerate(tickets):
+        assert t.tokens == ref[i].tokens
+        toks = [e for e in events[i] if e[0] == "token"]
+        dones = [e for e in events[i] if e[0] == "done"]
+        # streamed one at a time, in order, then exactly one done
+        assert [e[1] for e in toks] == list(range(6))
+        assert [e[2] for e in toks] == t.tokens
+        assert len(dones) == 1 and events[i][-1] is dones[0]
+        assert dones[0][1]["finish_reason"] == "length"
+        assert dones[0][1]["n_tokens"] == 6
+
+
+# ------------------------------------------------------------- HTTP loopback
+async def _http(port, method, path, body=b""):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    writer.write((f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+                  f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+    await writer.drain()
+    raw = await reader.read()          # Connection: close => read to EOF
+    writer.close()
+    return raw
+
+
+def _parse_sse(raw: bytes):
+    head, _, payload = raw.partition(b"\r\n\r\n")
+    events = []
+    for block in payload.decode().strip().split("\n\n"):
+        lines = dict(line.split(": ", 1) for line in block.splitlines())
+        events.append((lines["event"], json.loads(lines["data"])))
+    return head.decode(), events
+
+
+def test_http_sse_loopback(setup):
+    cfg, params = setup
+    eng = Engine(params, cfg, n_slots=2, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=8))
+    prompt = _prompts(cfg, [7], seed=9)[0]
+    ref = eng.run([Request(prompt=prompt, max_new_tokens=4)])[0].tokens
+    svc = Service(eng, ServiceConfig(queue_depth=4))
+    door = HttpFrontDoor(svc, host="127.0.0.1", port=0)
+
+    async def scenario():
+        await door.start()
+        body = json.dumps({"prompt": prompt, "max_new_tokens": 4}).encode()
+        raw = await asyncio.wait_for(
+            _http(door.port, "POST", "/v1/generate", body), timeout=120)
+        head, events = _parse_sse(raw)
+        assert head.startswith("HTTP/1.1 200")
+        assert "text/event-stream" in head
+        assert [name for name, _ in events] == ["token"] * 4 + ["done"]
+        assert [d["token"] for name, d in events if name == "token"] == ref
+        done = events[-1][1]
+        assert done["finish_reason"] == "length" and done["n_tokens"] == 4
+        assert done["latency_ms"] is not None
+
+        raw = await asyncio.wait_for(
+            _http(door.port, "GET", "/healthz"), timeout=30)
+        head, _, payload = raw.partition(b"\r\n\r\n")
+        health = json.loads(payload)
+        assert head.decode().startswith("HTTP/1.1 200")
+        assert health["status"] == "ok"
+        assert health["service"]["completed"] == 1
+
+        raw = await asyncio.wait_for(
+            _http(door.port, "POST", "/v1/generate", b"{not json"),
+            timeout=30)
+        assert raw.decode().startswith("HTTP/1.1 400")
+
+        await asyncio.wait_for(door.stop(drain=True), timeout=60)
+
+    asyncio.run(scenario())
+    assert svc.stats["completed"] == 1 and not svc.has_work

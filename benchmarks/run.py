@@ -15,6 +15,7 @@ runs so this module is always executable on a bare CPU container.
   self-speculative (HQP drafts, bf16 checks)-> bench_speculative
   paged KV + shared-prefix reuse            -> bench_paged
   HTTP/SSE front door + overload sweep      -> bench_http
+  fault injection + feasibility admission   -> bench_chaos
   decode attention (windowed vs full)       -> bench_decode_attention
   prefill attention (kernel vs einsum)      -> bench_prefill_attention
   kernels                                   -> bench_kernels
@@ -852,6 +853,179 @@ def bench_http(out_path: str = "BENCH_serving.json") -> List[Row]:
     return rows
 
 
+def bench_chaos(out_path: str = "BENCH_serving.json") -> List[Row]:
+    """Fault-tolerance benchmark, CI-gated by ``check_bench``:
+
+      * ``chaos`` — a fault-free reference run, then the SAME workload on
+        the same paged engine with deterministic injectors armed
+        (``serving.faults``): a decode-dispatch fault (kills the in-flight
+        batch), page-allocator exhaustion (kills one admission), and a
+        host-side cancel. Gates: the injectors actually fired
+        (``faults`` >= 1), zero leaked pages afterwards, the pump survived
+        every fault (``pump_survived``), and every SURVIVING request's
+        token stream is BIT-IDENTICAL to its fault-free twin
+        (``survivors_identical``) — failure isolation may not perturb
+        neighbors' numerics. ``p95_ratio`` (surviving-request p95 vs the
+        fault-free p95) is recorded and loosely bounded: survivors usually
+        run FASTER (faulted slots free early), so the gate only catches a
+        fault-handling stall, not noise.
+      * ``admission_feasible`` — a warm ``AdmissionController`` (fed by a
+        deadline-free warmup batch) facing a deadline storm where half the
+        deadlines are far below the predicted completion time. Gates:
+        infeasible requests are shed AT SUBMIT (``shed_infeasible`` >= 1)
+        with an honest positive Retry-After, nothing admitted ever blows
+        its deadline (``expired`` == 0), and the generous-deadline half
+        still completes (``completed`` >= 1) — the predictor must reject
+        the impossible without starving the possible."""
+    import jax
+    from repro import configs
+    from repro.core.pruning import param_bytes
+    from repro.models import lm
+    from repro.serving import (AdmissionController, Engine, Request,
+                               SchedulerConfig, Service, ServiceConfig,
+                               summarize_results)
+    from repro.serving import faults
+
+    cfg = configs.get_smoke_config("qwen3-0.6b")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    pbytes = int(param_bytes(params))
+    rng = np.random.RandomState(0)
+    n_req, new_tok, n_slots, chunk, dsteps = 8, 16, 4, 8, 4
+    prompts = [rng.randint(0, cfg.vocab_size, 8 + (5 * i) % 13).tolist()
+               for i in range(n_req)]
+    mk_reqs = lambda: [Request(prompt=pr, max_new_tokens=new_tok)
+                       for pr in prompts]
+    arrivals = [2 * i for i in range(n_req)]
+
+    payload = _serving_payload(cfg, n_req, n_slots, chunk, new_tok, dsteps)
+    rows: List[Row] = []
+    eng = Engine(params, cfg, n_slots=n_slots, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=chunk,
+                                       decode_steps=dsteps),
+                 page_size=8, prefix_cache=False)
+
+    # --- fault-free reference (also the warmup that compiles everything)
+    eng.run(mk_reqs(), arrival_ticks=arrivals)
+    for k in eng.stats:
+        eng.stats[k] = 0
+    t0 = time.perf_counter()
+    ref = eng.run(mk_reqs(), arrival_ticks=arrivals)
+    ref_wall = time.perf_counter() - t0
+    ref_sum = summarize_results(ref, ref_wall)
+
+    # --- chaos run: same workload, injectors armed. The decode fault at
+    # dispatch 3 fails the then-active batch; the alloc fault fails one
+    # later admission; staggered arrivals guarantee survivors exist.
+    h_dec = faults.inject_decode_fault(eng, at=3)
+    h_alloc = faults.inject_alloc_failure(eng, at=12, times=2)
+    for k in eng.stats:
+        eng.stats[k] = 0
+    pump_survived = 1
+    try:
+        t0 = time.perf_counter()
+        chaos = eng.run(mk_reqs(), arrival_ticks=arrivals)
+        chaos_wall = time.perf_counter() - t0
+    except Exception:
+        pump_survived, chaos, chaos_wall = 0, {}, 0.0
+    finally:
+        h_dec.restore()
+        h_alloc.restore()
+    survivors = {i: r for i, r in chaos.items()
+                 if r.finish_reason != "error"}
+    errors = len(chaos) - len(survivors)
+    identical = int(bool(survivors) and all(
+        r.tokens == ref[i].tokens for i, r in survivors.items()))
+
+    # --- cancel exercise: free a mid-flight request by hand, then drain —
+    # the leak gate below covers this path too
+    uid_a = eng.submit(Request(prompt=prompts[0], max_new_tokens=new_tok))
+    eng.submit(Request(prompt=prompts[1], max_new_tokens=new_tok))
+    for _ in range(3):
+        eng.step()
+    eng.cancel(uid_a)
+    while eng.has_work:
+        eng.step()
+
+    surv_sum = summarize_results(survivors, chaos_wall)
+    v = {
+        **surv_sum,
+        "param_bytes": pbytes,
+        "faults": eng.stats["faults"],
+        "cancelled": eng.stats["cancelled"],
+        "injected_decode_faults": h_dec.fired,
+        "injected_alloc_faults": h_alloc.fired,
+        "errors": errors,
+        "survivors": len(survivors),
+        "survivors_identical": identical,
+        "pump_survived": pump_survived,
+        "leaked_pages": eng.alloc.pages_in_use,
+        "fault_free_tokens_per_s": ref_sum["tokens_per_s"],
+        "fault_free_p95_ms": ref_sum["latency_p95_ms"],
+        "p95_ratio": (surv_sum["latency_p95_ms"]
+                      / max(ref_sum["latency_p95_ms"], 1e-9)),
+    }
+    payload["variants"]["chaos"] = v
+    payload["expected_variants"].append("chaos")
+    rows.append((
+        "serving/chaos", chaos_wall / max(surv_sum["out_tokens"], 1) * 1e6,
+        f"faults={v['faults']} survivors={v['survivors']}/{len(chaos)} "
+        f"identical={identical} leaked_pages={v['leaked_pages']} "
+        f"pump_survived={pump_survived} p95_ratio={v['p95_ratio']:.2f}"))
+
+    # --- feasibility admission under a deadline storm
+    ctrl = AdmissionController()
+    svc = Service(eng, ServiceConfig(queue_depth=n_req),
+                  admission=ctrl)
+    for pr in prompts:                       # deadline-free warmup batch:
+        svc.submit(Request(prompt=pr, max_new_tokens=new_tok))
+    while svc.has_work:                      # feeds the throughput EWMAs
+        svc.step()
+    st0 = dict(svc.stats)
+    storm, retry_sample, predicted_sample = [], 0.0, 0.0
+    t0 = time.perf_counter()
+    for i, pr in enumerate(prompts):
+        w = ctrl.work_s(len(pr), new_tok)    # predicted solo service time
+        # odd requests get a deadline far below any feasible completion;
+        # even ones get a generous one the engine can honor even queued
+        dl = 0.2 * w if i % 2 else max(30.0, 50 * w)
+        t = svc.submit(Request(prompt=pr, max_new_tokens=new_tok),
+                       deadline_s=dl)
+        if t is None:
+            retry_sample = svc.last_shed.get("retry_after_s") or 0.0
+            predicted_sample = svc.last_shed.get("predicted_s") or 0.0
+        else:
+            storm.append(t)
+    while svc.has_work:
+        svc.step()
+    wall = time.perf_counter() - t0
+    dst = {k: svc.stats[k] - st0[k] for k in svc.stats}
+    done = [t for t in storm if t.finish_reason in ("length", "eos")]
+    v = {
+        **summarize_results(dict(enumerate(done)), wall),
+        "param_bytes": pbytes,
+        "submitted": dst["submitted"],
+        "completed": dst["completed"],
+        "shed": dst["shed"],
+        "shed_infeasible": dst["shed_infeasible"],
+        "expired": dst["expired"],
+        "retry_after_s_sample": retry_sample,
+        "predicted_s_sample": predicted_sample,
+        "leaked_pages": eng.alloc.pages_in_use,
+    }
+    payload["variants"]["admission_feasible"] = v
+    payload["expected_variants"].append("admission_feasible")
+    rows.append((
+        "serving/admission_feasible",
+        wall / max(v["out_tokens"], 1) * 1e6,
+        f"shed_infeasible={v['shed_infeasible']}/{n_req} "
+        f"completed={v['completed']} expired={v['expired']} "
+        f"retry_after={retry_sample:.3f}s predicted={predicted_sample:.3f}s"))
+
+    if out_path:
+        pathlib.Path(out_path).write_text(json.dumps(payload, indent=1))
+    return rows
+
+
 def bench_decode_attention() -> List[Row]:
     """Decode-attention ms/step vs cache capacity (``max_seq`` sweep).
 
@@ -1047,6 +1221,7 @@ BENCHES = [
     bench_speculative,
     bench_paged,
     bench_http,
+    bench_chaos,
     bench_decode_attention,
     bench_prefill_attention,
     bench_kernels,

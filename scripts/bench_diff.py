@@ -9,7 +9,10 @@ failures. The hard perf gates live in ``check_bench.py``; this script is
 the trajectory view: it flags serving variants whose tokens/s dropped more
 than TOK_S_WARN and rows whose us_per_call grew more than US_WARN relative
 to the committed numbers, so a PR that legally passes the gates but quietly
-costs 20% still shows up in the checks tab. Exit code is always 0 (a
+costs 20% still shows up in the checks tab. Robustness trajectory rides
+along: growing chaos fault counts, leaked pages, a worsening survivor-p95
+ratio, or new deadline expiries in the feasibility storm are annotated the
+same warn-only way. Exit code is always 0 (a
 missing or unparseable baseline just means there is nothing to diff —
 first PR after the bench landed, or a force-push history edit).
 """
@@ -85,6 +88,39 @@ def main(argv) -> int:
                 print(f"::warning::serving/http_overload below-knee point "
                       f"now violates {n_v} deadline(s); baseline had none")
                 warned += 1
+
+    # fault-tolerance trajectory: more faults than the injectors account
+    # for, a worsening survivor p95, leaked pages, or new deadline expiries
+    # in the feasibility storm all mean robustness drifted even if the
+    # hard chaos gates still pass
+    if "chaos" in nv and "chaos" in bv:
+        n_c, b_c = nv["chaos"], bv["chaos"]
+        n_f, b_f = n_c.get("faults", 0), b_c.get("faults", 0)
+        if isinstance(n_f, (int, float)) and n_f > b_f:
+            print(f"::warning::serving/chaos fault count grew: {b_f} -> "
+                  f"{n_f} (same injector schedule — extra faults are "
+                  f"collateral damage, not injections)")
+            warned += 1
+        if n_c.get("leaked_pages", 0):
+            print(f"::warning::serving/chaos leaked "
+                  f"{n_c['leaked_pages']} page(s); baseline leaked "
+                  f"{b_c.get('leaked_pages', 0)}")
+            warned += 1
+        n_r, b_r = n_c.get("p95_ratio"), b_c.get("p95_ratio")
+        if (isinstance(n_r, (int, float)) and isinstance(b_r, (int, float))
+                and n_r > b_r + 0.25):
+            print(f"::warning::serving/chaos survivor p95 worsened vs "
+                  f"fault-free: {b_r:.2f}x -> {n_r:.2f}x (fault handling "
+                  f"is costing the surviving batch more)")
+            warned += 1
+    if "admission_feasible" in nv and "admission_feasible" in bv:
+        n_e = nv["admission_feasible"].get("expired", 0)
+        if n_e and not bv["admission_feasible"].get("expired", 0):
+            print(f"::warning::serving/admission_feasible now expires "
+                  f"{n_e} admitted deadline(s); baseline expired none — "
+                  f"the feasibility predictor is admitting work it "
+                  f"cannot serve")
+            warned += 1
 
     n_rows = {r["name"]: r for r in new.get("rows") or []
               if isinstance(r.get("us_per_call"), (int, float))}

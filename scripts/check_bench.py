@@ -22,7 +22,14 @@ or deadline-expired anything on its fully-admittable closed-loop workload,
 an ``http_overload`` sweep with a deadline violation at any no-shed point
 (below the knee the service must meet every SLO), a below-knee point
 shedding more than HTTP_LOW_SHED_MAX, or a sweep that never sheds at all
-(never reached the knee), a ``decode_attention/xla_win/*`` or ``prefill_attention/xla_win/*``
+(never reached the knee), a ``chaos`` variant whose injected faults leaked
+a page / perturbed a surviving stream's tokens / killed the pump / blew
+the survivor p95 past CHAOS_P95_MAX x fault-free (each fault's blast
+radius must stay request-scoped), an ``admission_feasible`` variant that
+failed to shed an infeasible deadline at submit, let an admitted request
+expire, or starved the feasible half of its storm (the predictor must
+reject the impossible without rejecting the possible),
+a ``decode_attention/xla_win/*`` or ``prefill_attention/xla_win/*``
 sweep whose ms/step (ms/chunk) grows more than FLAT_MAX from the smallest
 to the largest ``max_seq`` — the windowed attends must scale with live
 length, not cache capacity — or a prefill primitive costing more than
@@ -54,10 +61,18 @@ PREFILL_EINSUM_ROW = re.compile(r"^prefill_attention/xla_einsum/S(\d+)$")
 FLAT_MAX = 1.3
 PREFILL_RATIO_MAX = 1.1
 SPEC_ACCEPT_MIN = 0.7
-PAGED_MIN_RATIO = 0.95
+PAGED_MIN_RATIO = 0.90     # was 0.95 while the contiguous baseline paid a
+                           # full-pool copy per bf16 DUS write; with the
+                           # uint16 store fix the baseline is honest and
+                           # paging's real cost — one page-table gather per
+                           # attend — measures ~0.95x, so the floor keeps
+                           # ~5% of slack instead of zero
 PAGED_BYTES_MAX = 0.6
 HTTP_MIN_RATIO = 0.9        # http_stream goodput vs in-process tokens/s
 HTTP_LOW_SHED_MAX = 0.25    # shed-rate ceiling at the below-knee sweep point
+CHAOS_P95_MAX = 2.0         # survivor p95 vs fault-free p95; survivors
+                            # usually run FASTER (faulted slots free early),
+                            # so this only catches a fault-handling stall
 
 
 def fail(msg: str) -> None:
@@ -101,6 +116,8 @@ def check_serving(s: dict) -> None:
         check_paged(variants)
     if "http_stream" in variants or "http_overload" in variants:
         check_http(variants)
+    if "chaos" in variants or "admission_feasible" in variants:
+        check_chaos(variants)
 
 
 def check_speculative(variants: dict) -> None:
@@ -268,6 +285,82 @@ def check_http(variants: dict) -> None:
           f"overload sheds={[p['shed'] for p in sweep]} "
           f"violations={[p['deadline_violations'] for p in sweep]} over "
           f"{len(sweep)} points)")
+
+
+def check_chaos(variants: dict) -> None:
+    """The fault-tolerance contract, gated (every check prints or fails
+    with measured-vs-threshold):
+
+    * every injected fault's blast radius is ONE request — the pump
+      survives, no page leaks, and every surviving stream's tokens are
+      bit-identical to the fault-free reference run;
+    * survivor p95 stays within CHAOS_P95_MAX x fault-free (fault
+      handling must not stall the batch — survivors usually get FASTER
+      because faulted slots free early);
+    * the feasibility predictor sheds impossible deadlines at submit
+      (with an honest positive Retry-After) while the generous-deadline
+      half of the same storm completes with zero expiries."""
+    for name in ("chaos", "admission_feasible"):
+        if name not in variants:
+            fail(f"chaos gate needs variant {name!r} (have: "
+                 f"{sorted(variants)}) — bench_chaos writes both; a "
+                 f"partial payload means the bench died mid-run")
+    v = variants["chaos"]
+    for key in ("faults", "leaked_pages", "survivors",
+                "survivors_identical", "pump_survived", "p95_ratio"):
+        if not isinstance(v.get(key), (int, float)):
+            fail(f"chaos: {key!r} must be numeric, got {v.get(key)!r}")
+    if v["faults"] < 1:
+        fail(f"chaos: faults = {v['faults']}, threshold >= 1 — the "
+             f"injectors never fired, the run proved nothing")
+    if v["pump_survived"] != 1:
+        fail(f"chaos: pump_survived = {v['pump_survived']}, threshold 1 — "
+             f"an injected per-request fault escaped and killed the "
+             f"serving loop")
+    if v["leaked_pages"] != 0:
+        fail(f"chaos: leaked_pages = {v['leaked_pages']}, threshold 0 — "
+             f"a faulted/cancelled request did not release its KV pages")
+    if v["survivors"] < 1:
+        fail(f"chaos: survivors = {v['survivors']}, threshold >= 1 — "
+             f"every request died, isolation is indistinguishable from "
+             f"blast radius")
+    if v["survivors_identical"] != 1:
+        fail(f"chaos: survivors_identical = {v['survivors_identical']}, "
+             f"threshold 1 — a neighbor's fault perturbed a surviving "
+             f"stream's tokens")
+    if v["p95_ratio"] > CHAOS_P95_MAX:
+        fail(f"chaos: survivor p95 is {v['p95_ratio']:.2f}x the "
+             f"fault-free p95 {v['fault_free_p95_ms']:.0f}ms (limit "
+             f"{CHAOS_P95_MAX}x) — fault handling is stalling the batch")
+    a = variants["admission_feasible"]
+    for key in ("shed_infeasible", "expired", "completed",
+                "retry_after_s_sample"):
+        if not isinstance(a.get(key), (int, float)):
+            fail(f"admission_feasible: {key!r} must be numeric, got "
+                 f"{a.get(key)!r}")
+    if a["shed_infeasible"] < 1:
+        fail(f"admission_feasible: shed_infeasible = "
+             f"{a['shed_infeasible']}, threshold >= 1 — impossible "
+             f"deadlines were admitted to burn slot time")
+    if a["expired"] != 0:
+        fail(f"admission_feasible: expired = {a['expired']}, threshold 0 "
+             f"— an admitted request blew its deadline; the predictor "
+             f"admitted work it could not serve")
+    if a["completed"] < 1:
+        fail(f"admission_feasible: completed = {a['completed']}, "
+             f"threshold >= 1 — the feasible half of the storm starved")
+    if a["retry_after_s_sample"] <= 0:
+        fail(f"admission_feasible: retry_after_s_sample = "
+             f"{a['retry_after_s_sample']}, threshold > 0 — infeasible "
+             f"sheds must advertise an honest computed Retry-After")
+    print(f"check_bench: chaos OK (faults={v['faults']} measured vs >= 1, "
+          f"leaked_pages={v['leaked_pages']} vs 0, "
+          f"survivors_identical={v['survivors_identical']} vs 1, "
+          f"pump_survived={v['pump_survived']} vs 1, "
+          f"p95_ratio={v['p95_ratio']:.2f} vs <= {CHAOS_P95_MAX}; "
+          f"admission shed_infeasible={a['shed_infeasible']} vs >= 1, "
+          f"expired={a['expired']} vs 0, completed={a['completed']} vs "
+          f">= 1, retry_after={a['retry_after_s_sample']:.3f}s vs > 0)")
 
 
 def _sweep(rows: list, pattern) -> dict:

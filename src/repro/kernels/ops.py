@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.backend import get_backend
-from repro.kernels.kv_layout import window_pages
+from repro.kernels.kv_layout import from_store, window_pages
 
 
 def quantize_rowwise(x: jax.Array):
@@ -59,12 +59,19 @@ def _cache_window(cache: dict, window: Optional[int]):
     ``window >= start + Sq`` for every row whose output is consumed —
     positions beyond the window would have been masked to exp(-inf) = 0
     exactly, which is why the windowed path is bit-identical to the
-    full-mask einsum (the tier-1 regression test)."""
+    full-mask einsum (the tier-1 regression test).
+
+    A bf16 contiguous cache is *stored* as raw uint16 words (the same
+    in-place-write trick as the paged arena — see ``init_kv_cache``);
+    ``from_store`` bitcasts the windowed view back to bf16 here, so every
+    backend keeps seeing compute-dtype k/v. Slice-then-bitcast is free:
+    both are layout ops XLA fuses into the consuming attend."""
     if "k_q" in cache:
         k, v, k_s, v_s = (cache["k_q"], cache["v_q"],
                           cache["k_s"], cache["v_s"])
     else:
-        k, v, k_s, v_s = cache["k"], cache["v"], None, None
+        k, v, k_s, v_s = (from_store(cache["k"]), from_store(cache["v"]),
+                          None, None)
     if window is not None and window < k.shape[1]:
         sl = lambda t: (None if t is None
                         else jax.lax.slice_in_dim(t, 0, window, axis=1))

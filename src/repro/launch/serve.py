@@ -165,6 +165,7 @@ def build_engine(params, cfg, ctx, args, sampling=None, draft=None):
                   sched=SchedulerConfig(prefill_chunk=args.prefill_chunk,
                                         decode_steps=args.decode_steps),
                   sampling=sampling, page_size=args.page_size or None,
+                  total_pages=getattr(args, "total_pages", 0) or None,
                   prefix_cache=not args.no_prefix_cache, **spec_kw)
 
 
@@ -181,9 +182,15 @@ def serve_http(params, cfg, ctx, args, log=print, sampling=None, draft=None):
     for k in eng.stats:
         eng.stats[k] = 0
     log(f"[http] warmup compile: {time.monotonic() - t0:.1f}s")
+    admission = None
+    if not args.no_feasibility:
+        from repro.serving import AdmissionController
+        admission = AdmissionController()
     svc = Service(eng, ServiceConfig(queue_depth=args.queue_depth,
-                                     default_deadline_s=args.deadline_s))
-    run_http(svc, host=args.host, port=args.port, log=log)
+                                     default_deadline_s=args.deadline_s),
+                  admission=admission)
+    run_http(svc, host=args.host, port=args.port, log=log,
+             watchdog_s=args.watchdog_s or None)
     return svc
 
 
@@ -304,6 +311,11 @@ def main(argv=None):
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable hash-keyed shared-prefix page reuse "
                          "(paged mode only)")
+    ap.add_argument("--total-pages", type=int, default=0,
+                    help="paged KV arena size in pages (0 = full "
+                         "provisioning, 1 + slots*ceil(max_seq/page_size)); "
+                         "undersizing forces arena-exhaustion behavior — "
+                         "chaos testing / memory-capped deployments")
     ap.add_argument("--trace", default=None,
                     help="JSONL request trace to replay (engine mode)")
     ap.add_argument("--http", action="store_true",
@@ -323,6 +335,15 @@ def main(argv=None):
                          "requests are evicted mid-flight and stream "
                          "finish_reason=deadline (--http; per-request "
                          "'deadline_s' in the POST body overrides)")
+    ap.add_argument("--no-feasibility", action="store_true",
+                    help="disable deadline-feasibility admission (the EWMA "
+                         "throughput predictor that sheds deadlined "
+                         "requests it cannot serve in time, DESIGN.md §14); "
+                         "the static slots+queue-depth cap always applies")
+    ap.add_argument("--watchdog-s", type=float, default=300.0,
+                    help="pump watchdog: if the engine thread makes no "
+                         "progress for this long the server exits with "
+                         "status 2 instead of hanging (0 disables; --http)")
     ap.add_argument("--verify", action="store_true", default=None,
                     help="check engine outputs == serial decode "
                          "(default: on under --smoke)")

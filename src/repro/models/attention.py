@@ -124,10 +124,11 @@ class CacheSpec:
 def init_kv_cache(batch: int, max_seq: int, n_kv_heads: int, hd: int,
                   quantized: bool = False, paged: bool = False) -> dict:
     """``paged=True`` marks the leaves as a shared page arena (``batch`` is
-    ``total_pages``, ``max_seq`` is ``page_size``). bf16 arenas are stored
-    as raw uint16 words: XLA CPU's float-normalization pass rewrites bf16
-    scatter through f32 converts, copying the whole arena on every write —
-    uint16 scatter is pure data movement and stays in place
+    ``total_pages``, ``max_seq`` is ``page_size``). bf16 caches — paged
+    arena and contiguous pool alike — are stored as raw uint16 words: XLA
+    CPU's float-normalization pass rewrites bf16 scatter/dynamic_update_
+    slice through f32 converts, copying the whole buffer on every write —
+    uint16 data movement stays in place under donation
     (``kernels.kv_layout.to_store/from_store`` own the lossless bitcasts at
     the read/write boundaries). int8 quantized leaves scatter in place
     natively and keep their dtype in both layouts."""
@@ -138,7 +139,8 @@ def init_kv_cache(batch: int, max_seq: int, n_kv_heads: int, hd: int,
             "k_s": jnp.zeros((batch, max_seq, n_kv_heads), jnp.float32),
             "v_s": jnp.zeros((batch, max_seq, n_kv_heads), jnp.float32),
         }
-    dt = (jnp.uint16 if paged and L.COMPUTE_DTYPE == jnp.bfloat16
+    del paged   # dtype no longer depends on the layout
+    dt = (jnp.uint16 if L.COMPUTE_DTYPE == jnp.bfloat16
           else L.COMPUTE_DTYPE)
     return {
         "k": jnp.zeros((batch, max_seq, n_kv_heads, hd), dt),
@@ -177,14 +179,17 @@ def update_kv_cache(cache: dict, k_new: jax.Array, v_new: jax.Array,
         vq, vs = _quant_kv(v_new)
         new = {"k_q": kq, "v_q": vq, "k_s": ks, "v_s": vs}
     else:
-        # a paged bf16 arena stores raw uint16 words (init_kv_cache) —
-        # scatter_pages bitcasts the update, so keep it in compute dtype
+        # bf16 caches store raw uint16 words (init_kv_cache) —
+        # scatter_pages bitcasts the update itself, so keep it in compute
+        # dtype there; the contiguous DUS paths bitcast here
         new = {"k": k_new.astype(L.COMPUTE_DTYPE),
                "v": v_new.astype(L.COMPUTE_DTYPE)}
     if pages is not None:
         from repro.kernels.kv_layout import scatter_pages
         return {key: scatter_pages(cache[key], new[key], pages, pos)
                 for key in cache}
+    from repro.kernels.kv_layout import to_store
+    new = {key: to_store(val, cache[key].dtype) for key, val in new.items()}
     if jnp.ndim(pos) == 0:
         def scatter(buf, upd):
             idx = (0, pos) + (0,) * (buf.ndim - 2)

@@ -7,7 +7,11 @@ dispatches through the existing model/kernels stack, so HQP artifacts
 drives temperature/top-k/seeded sampling on every decode surface, and
 ``SpecDecoder`` adds the self-speculative mode: the HQP artifact drafts,
 the bf16 parent verifies (greedy output bit-identical to serial bf16).
+``AdmissionController`` (§14) sheds deadline-infeasible requests at
+submit; ``serving.faults`` is the deterministic chaos-injection plane.
 """
+from repro.serving.admission import (AdmissionConfig, AdmissionController,
+                                     Verdict)
 from repro.serving.engine import (Engine, Request, RequestResult,
                                   serial_decode, summarize_results)
 from repro.serving.sampling import GREEDY, SamplingConfig
@@ -21,4 +25,5 @@ __all__ = ["Engine", "Request", "RequestResult", "serial_decode",
            "summarize_results", "Scheduler", "SchedulerConfig", "init_pool",
            "init_slot_template", "GREEDY", "SamplingConfig", "SpecDecoder",
            "check_drafter_compat", "Service", "ServiceConfig", "Ticket",
-           "HttpFrontDoor"]
+           "HttpFrontDoor", "AdmissionConfig", "AdmissionController",
+           "Verdict"]

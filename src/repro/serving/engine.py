@@ -274,8 +274,13 @@ class Engine:
                       "prefix_hits": 0, "prefix_hit_tokens": 0,
                       "bytes_saved": 0, "cow_copies": 0,
                       "pages_in_use": 0, "pages_peak": 0,
-                      "cancelled": 0,
+                      "cancelled": 0, "faults": 0,
                       "kv_bytes_peak": 0 if self.paged else kv_bytes}
+        # fault attribution for request-scoped isolation (see step):
+        # ("admit", request) | ("slots", [idx, ...]) | None, set just
+        # before each fallible phase so _absorb_fault knows the blast
+        # radius of whatever raised
+        self._fault_phase = None
 
         cfg_, ctx_ = self.cfg, self.ctx
         paged = self.paged
@@ -419,8 +424,15 @@ class Engine:
         tokens (the position prefill resumes from)."""
         hit, pages = ((0, []) if self.prefix is None
                       else self.prefix.lookup(prompt))
-        pages = pages + self._alloc_pages(
-            page_count(prompt.size, self.page_size) - len(pages))
+        try:
+            pages = pages + self._alloc_pages(
+                page_count(prompt.size, self.page_size) - len(pages))
+        except MemoryError:
+            # lookup() ref'd the hit pages for this slot; the mapping
+            # failed, so drop those references or they leak forever
+            if pages:
+                self.alloc.unref(pages)
+            raise
         slot.pages = pages
         slot.n_shared = hit // self.page_size
         self.table[slot.idx] = 0
@@ -574,6 +586,7 @@ class Engine:
             if slot.stage != FREE:
                 continue
             req = self.waiting.pop(0)
+            self._fault_phase = ("admit", req)
             pos0 = (self._map_slot_pages(slot, req.prompt) if self.paged
                     else 0)
             self.pool = self._reset_fn(self.pool, jnp.int32(slot.idx),
@@ -591,6 +604,7 @@ class Engine:
                 uid=req.uid, prompt_len=int(req.prompt.size), tokens=[],
                 finish_reason="", t_submit=req._t_submit,
                 t_admit=time.monotonic())
+            self._fault_phase = None
 
     def _emit(self, slot: _Slot, tok: int,
               finished: List[RequestResult]) -> None:
@@ -643,7 +657,28 @@ class Engine:
     def step(self) -> List[RequestResult]:
         """One engine tick: admit, then run one scheduler action (a decode
         action runs ``decode_steps`` device steps). Returns requests that
-        finished this tick."""
+        finished this tick.
+
+        REQUEST-SCOPED FAULT ISOLATION: an exception inside the tick is
+        absorbed — the requests the failing phase was working on (the
+        admission's request; the prefill slot; a decode dispatch's batch)
+        finish with ``finish_reason="error"``, their slots and pages are
+        freed, ``stats["faults"]`` counts them, and the engine keeps
+        serving everything else.  Two kinds propagate to the caller
+        instead: ``AssertionError`` (invariant checks like the
+        REPRO_DEBUG_WINDOW guard or allocator refcount asserts — those
+        are engine bugs, and blaming the request they happened to fire
+        on would hide them), and any fault the engine cannot attribute
+        to requests (``_fault_phase`` unset)."""
+        self._fault_phase = None
+        try:
+            return self._step_inner()
+        except AssertionError:
+            raise
+        except Exception:
+            return self._absorb_fault()
+
+    def _step_inner(self) -> List[RequestResult]:
         self._admit()
         prefilling = [s.idx for s in self.slots if s.stage == PREFILL]
         decoding = [s.idx for s in self.slots if s.stage == DECODE]
@@ -652,6 +687,7 @@ class Engine:
 
         if action.kind == PREFILL:
             slot = self.slots[action.slot]
+            self._fault_phase = ("slots", [action.slot])
             lo, hi = self.scheduler.chunk_bounds(slot.prompt.size,
                                                  slot.prefill_done)
             chunk = jnp.asarray(slot.prompt[None, lo:hi])
@@ -697,6 +733,9 @@ class Engine:
             budget = np.ones((self.n_slots,), np.int32)
             for i in action.slots:
                 slot = self.slots[i]
+                # capacity growth can exhaust the arena — blame only the
+                # slot being grown, not the whole dispatch batch
+                self._fault_phase = ("slots", [i])
                 tokens[i, 0] = slot.last_token
                 active[i] = True
                 if slot.eos_id is not None:
@@ -709,6 +748,9 @@ class Engine:
                         slot, min(self._slot_pos(slot) + k_steps,
                                   int(slot.prompt.size)
                                   + slot.max_new_tokens))
+            # past here a fault hits the batched dispatch itself: every
+            # slot in the action is the blast radius
+            self._fault_phase = ("slots", list(action.slots))
             # the deepest live slot after k_steps attends positions
             # <= max(pos) + k_steps - 1  ->  window covers max(pos) + k_steps
             needed = max(self._slot_pos(self.slots[i])
@@ -734,6 +776,98 @@ class Engine:
             self.stats["decode_ticks"] += 1
             self.stats["decode_slot_steps"] += int(emitted.sum())
 
+        self.ticks += 1
+        return finished
+
+    # ------------------------------------------------------- fault isolation
+    def _fail_slot(self, slot: _Slot, finished: List[RequestResult],
+                   now: float) -> None:
+        """Evict a faulted slot: its result finishes with
+        ``finish_reason="error"``, its pages are freed, the slot is
+        immediately reusable."""
+        res = slot.result
+        if res is not None:
+            res.finish_reason = "error"
+            if not res.t_first_token:
+                res.t_first_token = now
+            res.t_finish = now
+            finished.append(res)
+        slot.stage = FREE
+        slot.result = None
+        slot.prompt = None
+        if self.paged:
+            self._release_slot_pages(slot)
+        self.stats["faults"] += 1
+
+    def _pool_deleted(self) -> bool:
+        """True when a fault fired mid-execution of a donating dispatch:
+        the donated input buffers are consumed but the output never
+        materialized — the pool is gone and must be rebuilt."""
+        leaves = jax.tree_util.tree_leaves(self.pool)
+        if self.spec is not None:
+            leaves += jax.tree_util.tree_leaves(self.draft_pool)
+        return any(getattr(leaf, "is_deleted", lambda: False)()
+                   for leaf in leaves)
+
+    def _rebuild_pools(self) -> None:
+        """Re-initialize the state pool(s) after donation consumed them.
+        Every slot's KV is lost, so the caller fails all active slots
+        first; cached prefix pages hold vanished KV too and must go."""
+        if self.paged:
+            if self.prefix is not None:
+                self.prefix.clear()
+            self.pool = sp.init_paged_pool(
+                self.cfg, self.n_slots, self.max_seq, self.ctx,
+                params=self.params, page_size=self.page_size,
+                total_pages=self.total_pages)
+        else:
+            self.pool = sp.init_pool(self.cfg, self.n_slots, self.max_seq,
+                                     self.ctx, params=self.params)
+        if self.spec is not None:
+            dctx = self.spec.draft_ctx
+            if self.paged:
+                self.draft_pool = sp.init_paged_pool(
+                    self.cfg, self.n_slots, self.max_seq, dctx,
+                    params=self.spec.draft_params, page_size=self.page_size,
+                    total_pages=self.total_pages)
+            else:
+                self.draft_pool = sp.init_pool(
+                    self.cfg, self.n_slots, self.max_seq, dctx,
+                    params=self.spec.draft_params)
+        self._table_cache.clear()
+
+    def _absorb_fault(self) -> List[RequestResult]:
+        """Exception handler for one tick (called from ``step``'s except
+        block; re-raises when the fault is unattributable). Returns the
+        error-finished results so the service can route them."""
+        phase = self._fault_phase
+        self._fault_phase = None
+        if phase is None:
+            raise          # no request to blame: let the caller see it
+        now = time.monotonic()
+        finished: List[RequestResult] = []
+        kind, who = phase
+        pool_dead = self._pool_deleted()
+        if kind == "admit":
+            # the request was popped from waiting but its slot never went
+            # live — synthesize its error result directly
+            req = who
+            self.stats["faults"] += 1
+            finished.append(RequestResult(
+                uid=req.uid, prompt_len=int(req.prompt.size), tokens=[],
+                finish_reason="error", t_submit=req._t_submit, t_admit=now,
+                t_first_token=now, t_finish=now))
+        else:
+            for i in who:
+                if self.slots[i].stage != FREE:
+                    self._fail_slot(self.slots[i], finished, now)
+        if pool_dead:
+            # the dispatch consumed its donated pool before dying: every
+            # active slot's KV went with it — fail them all and rebuild
+            for slot in self.slots:
+                if slot.stage != FREE:
+                    self._fail_slot(slot, finished, now)
+            self._rebuild_pools()
         self.ticks += 1
         return finished
 
@@ -765,12 +899,14 @@ class Engine:
         if self.paged:
             for i in action.slots:
                 slot = self.slots[i]
+                self._fault_phase = ("slots", [i])
                 # the healing chunk's first write lands at pos-1 — possibly
                 # inside a shared page (copy-on-write); the verify tail is
                 # the deepest write (plan() keeps it in-bounds)
                 self._ensure_writable(slot, self._slot_pos(slot) - 1)
                 self._ensure_capacity(
                     slot, self._slot_pos(slot) + c_eff * (k_eff + 1))
+        self._fault_phase = ("slots", list(action.slots))
         # deepest attend: the last cycle's verify chunk tail
         needed = max_pos + c_eff * (k_eff + 1)
         window = self._window(needed)

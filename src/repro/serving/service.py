@@ -37,9 +37,16 @@ events:
              event: done
              data: {"finish_reason": "length|eos|deadline|cancelled",
                     "n_tokens": n, "ttft_ms": ..., "latency_ms": ...}
-      429  saturated (Retry-After header; body {"error": "saturated"})
+      429  saturated, or deadline-infeasible under a warm admission
+           controller (Retry-After header carries the honest estimate;
+           body {"error": "saturated"|"infeasible", "retry_after_s": r})
       503  draining  (body {"error": "draining"})
-      400  bad request (invalid JSON, empty prompt, budget > max_seq)
+      400  bad request (invalid JSON, bad/empty prompt, budget > max_seq,
+           non-POST on a generate route)
+      408  request not delivered within request_timeout_s (slow-loris)
+      413  body exceeds max_body_bytes
+     A fault-isolated request's stream terminates with ``event: error``
+     (same payload shape as ``done``, finish_reason "error").
   GET /healthz | /stats
       200  {"status": "ok|draining", "slots_active": ..., "queued": ...,
             "service": {...}, "engine": {...}}
@@ -66,6 +73,7 @@ import asyncio
 import collections
 import dataclasses
 import json
+import os
 import signal
 import threading
 import time
@@ -73,7 +81,8 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.serving.engine import Engine, Request
+from repro.serving.admission import AdmissionController
+from repro.serving.engine import FREE, Engine, Request
 
 Event = Tuple[Any, ...]   # ("token", index, token) | ("done", info_dict)
 
@@ -95,10 +104,13 @@ class Ticket:
     Timing fields use the service's clock."""
 
     def __init__(self, uid: int, deadline: Optional[float],
-                 sink: Optional[Callable[[Event], None]], t_submit: float):
+                 sink: Optional[Callable[[Event], None]], t_submit: float,
+                 prompt_len: int = 0, max_new_tokens: int = 0):
         self.uid = uid
         self.deadline = deadline          # absolute clock value, or None
         self.sink = sink
+        self.prompt_len = prompt_len      # work-remaining bookkeeping for
+        self.max_new_tokens = max_new_tokens   # feasibility admission
         self.tokens: List[int] = []
         self.finish_reason: Optional[str] = None
         self.t_submit = t_submit
@@ -132,16 +144,27 @@ class Service:
     handler operations through an inbox)."""
 
     def __init__(self, engine: Engine, cfg: Optional[ServiceConfig] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 admission: Optional[AdmissionController] = None):
+        """``admission``: optional deadline-feasibility controller
+        (serving/admission.py). When set, ``step`` feeds it the engine's
+        per-step throughput and ``submit`` sheds deadlined requests the
+        predictor deems infeasible — on top of (never instead of) the
+        static ``n_slots + queue_depth`` hard cap."""
         self.engine = engine
         self.cfg = cfg or ServiceConfig()
         if self.cfg.queue_depth < 0:
             raise ValueError("queue_depth must be >= 0")
         self.clock = clock
+        self.admission = admission
         self.tickets: Dict[int, Ticket] = {}     # live (unfinished) only
         self.draining = False
         self.stats = {"submitted": 0, "completed": 0, "shed": 0,
-                      "expired": 0, "cancelled": 0, "queue_peak": 0}
+                      "shed_infeasible": 0, "expired": 0, "cancelled": 0,
+                      "faults": 0, "queue_peak": 0}
+        # why the most recent submit was shed — the transport reads this
+        # for its status code and (honest) Retry-After
+        self.last_shed: Dict[str, Any] = {}
         engine.on_token = self._on_token
 
     # ------------------------------------------------------------- admission
@@ -158,27 +181,73 @@ class Service:
     def saturated(self) -> bool:
         return self.load >= self.capacity
 
+    def _backlog_tokens(self) -> Tuple[int, int]:
+        """(prefill, decode) tokens of work still owed to live tickets —
+        the backlog a new admission queues behind. Prefill remaining is
+        exact for slotted requests (the engine tracks ``prefill_done``)
+        and the full prompt for queued ones."""
+        prefilled = {}
+        for s in self.engine.slots:
+            if s.stage != FREE and s.result is not None:
+                prefilled[s.result.uid] = s.prefill_done
+        prefill = decode = 0
+        for t in self.tickets.values():
+            prefill += max(0, t.prompt_len - prefilled.get(t.uid, 0))
+            decode += max(0, t.max_new_tokens - len(t.tokens))
+        return prefill, decode
+
+    def _retry_after(self) -> float:
+        """Retry-After for a saturation shed: with a warm controller, the
+        mean time for one in-flight request to drain (backlog work time /
+        live requests) — a queue position should open around then; the
+        static ``cfg.retry_after_s`` otherwise."""
+        if self.admission is None or not self.admission.warm or not self.load:
+            return self.cfg.retry_after_s
+        pf, dec = self._backlog_tokens()
+        return self.admission.clamp_retry(
+            self.admission.work_s(pf, dec) / self.load)
+
     def submit(self, request: Request,
                deadline_s: Optional[float] = None,
                sink: Optional[Callable[[Event], None]] = None
                ) -> Optional[Ticket]:
-        """Admit a request, or return None to shed (saturated / draining —
-        ``self.draining`` distinguishes the two for the transport's status
-        code). Invalid requests (empty prompt, budget > max_seq) raise
-        ``ValueError`` straight from ``Engine.submit``."""
+        """Admit a request, or return None to shed — ``self.last_shed``
+        tells the transport why (``draining`` / ``saturated`` /
+        ``infeasible``) and what Retry-After to advertise. Invalid
+        requests (empty prompt, budget > max_seq) raise ``ValueError``
+        straight from ``Engine.submit``."""
         if self.draining:
             self.stats["shed"] += 1
+            self.last_shed = {"reason": "draining", "retry_after_s": None}
             return None
         if self.saturated:
             self.stats["shed"] += 1
+            self.last_shed = {"reason": "saturated",
+                              "retry_after_s": self._retry_after()}
             return None
         if deadline_s is None:
             deadline_s = self.cfg.default_deadline_s
+        prompt_len = len(request.prompt)
+        if (deadline_s is not None and self.admission is not None
+                and self.admission.warm):
+            verdict = self.admission.feasible(
+                prompt_len, request.max_new_tokens,
+                self._backlog_tokens(), deadline_s)
+            if not verdict.feasible:
+                # shed NOW, at submit — before the request burns a queue
+                # position and slot time only to die in the deadline sweep
+                self.stats["shed"] += 1
+                self.stats["shed_infeasible"] += 1
+                self.last_shed = {"reason": "infeasible",
+                                  "retry_after_s": verdict.retry_after_s,
+                                  "predicted_s": verdict.predicted_s}
+                return None
         now = self.clock()
         uid = self.engine.submit(request)
         ticket = Ticket(uid,
                         None if deadline_s is None else now + deadline_s,
-                        sink, now)
+                        sink, now, prompt_len=prompt_len,
+                        max_new_tokens=request.max_new_tokens)
         self.tickets[uid] = ticket
         self.stats["submitted"] += 1
         self.stats["queue_peak"] = max(self.stats["queue_peak"],
@@ -237,17 +306,48 @@ class Service:
     def has_work(self) -> bool:
         return self.engine.has_work
 
+    def _fail_all(self) -> None:
+        """Last-resort blast radius for an *unattributable* engine fault:
+        cancel every live request (pages freed via ``Engine.cancel``) and
+        finish their streams with ``error`` — the pump survives with a
+        clean engine rather than dying mid-stream."""
+        for t in list(self.tickets.values()):
+            self.engine.cancel(t.uid)
+            self._finish(t, "error", "faults")
+
     def step(self) -> int:
         """One service tick: deadline sweep, one engine tick, route
-        finished results to their tickets. Returns finished count."""
+        finished results to their tickets. Returns finished count.
+
+        Faults: the engine already scopes per-request failures (their
+        results arrive with ``finish_reason="error"``); anything that
+        still escapes ``Engine.step`` is absorbed here by failing every
+        live request — one poisoned tick must never kill the owner
+        thread. Throughput observations feed the admission controller."""
         self.expire_deadlines()
         if not self.engine.has_work:
             return 0
         n = 0
-        for res in self.engine.step():
+        estats = self.engine.stats
+        p0, d0 = estats["prefill_tokens"], estats["accepted_tokens"]
+        t0 = self.clock()
+        try:
+            results = self.engine.step()
+        except Exception:
+            self.stats["faults"] += 1
+            self._fail_all()
+            return 0
+        if self.admission is not None:
+            self.admission.observe(estats["prefill_tokens"] - p0,
+                                   estats["accepted_tokens"] - d0,
+                                   self.clock() - t0)
+        for res in results:
             ticket = self.tickets.get(res.uid)
             if ticket is not None:
-                self._finish(ticket, res.finish_reason, "completed")
+                if res.finish_reason == "error":
+                    self._finish(ticket, "error", "faults")
+                else:
+                    self._finish(ticket, res.finish_reason, "completed")
                 n += 1
         return n
 
@@ -274,6 +374,14 @@ _SSE_HEADERS = (b"HTTP/1.1 200 OK\r\n"
 
 def sse_event(name: str, data: dict) -> bytes:
     return (f"event: {name}\ndata: {json.dumps(data)}\n\n").encode()
+
+
+class _BodyTooLarge(Exception):
+    """Request body exceeds the front door's cap (maps to 413)."""
+
+    def __init__(self, n: int):
+        super().__init__(f"body too large: {n} bytes")
+        self.n = n
 
 
 def _plain_response(status: str, body: dict,
@@ -303,16 +411,35 @@ class HttpFrontDoor:
 
     def __init__(self, service: Service, host: str = "127.0.0.1",
                  port: int = 8080, pump_idle_s: float = 0.001,
-                 log: Callable[[str], None] = lambda s: None):
+                 log: Callable[[str], None] = lambda s: None,
+                 max_body_bytes: int = 1 << 20,
+                 request_timeout_s: float = 10.0,
+                 watchdog_s: Optional[float] = None,
+                 on_wedged: Optional[Callable[[str], None]] = None):
+        """``max_body_bytes`` caps request bodies (413 beyond it);
+        ``request_timeout_s`` bounds how long a client may take to
+        deliver a full request (408 beyond it — the slow-loris defense).
+        ``watchdog_s`` arms the pump watchdog: if the pump thread makes
+        no progress for that long (a wedged engine step — XLA deadlock,
+        a hung host callback), ``on_wedged`` fires; the default logs and
+        ``os._exit(2)``s, because a wedged engine cannot be drained and a
+        clean nonzero exit beats a silent hang (tests inject a recorder
+        instead)."""
         self.service = service
         self.host = host
         self.port = port
         self.pump_idle_s = pump_idle_s
         self.log = log
+        self.max_body_bytes = max_body_bytes
+        self.request_timeout_s = request_timeout_s
+        self.watchdog_s = watchdog_s
+        self.on_wedged = on_wedged or self._exit_wedged
+        self._beat = time.monotonic()        # pump heartbeat (watchdog)
         self.lock = threading.Lock()
         self._stop_pump = threading.Event()
         self._kick = threading.Event()       # wakes an idle-parked pump
         self._pump_thread: Optional[threading.Thread] = None
+        self._watchdog_thread: Optional[threading.Thread] = None
         self._server: Optional[asyncio.AbstractServer] = None
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._active_streams = 0
@@ -340,6 +467,10 @@ class HttpFrontDoor:
         self._pump_thread = threading.Thread(target=self._pump, daemon=True,
                                              name="engine-pump")
         self._pump_thread.start()
+        if self.watchdog_s:
+            self._watchdog_thread = threading.Thread(
+                target=self._watch, daemon=True, name="pump-watchdog")
+            self._watchdog_thread.start()
 
     def _pump(self) -> None:
         """Engine thread: drain handler operations, step whenever there is
@@ -349,6 +480,7 @@ class HttpFrontDoor:
         hand. Each iteration flushes everything it staged (token events +
         operation replies) to the event loop in one batch."""
         while not self._stop_pump.is_set():
+            self._beat = time.monotonic()
             with self.lock:
                 self._serve_inbox()
                 busy = self.service.has_work
@@ -362,6 +494,28 @@ class HttpFrontDoor:
                 self._kick.wait(self.pump_idle_s)
                 self._kick.clear()
 
+    def _exit_wedged(self, msg: str) -> None:
+        """Default wedged-pump escalation: a hung engine step cannot be
+        drained (the pump owns the only thread allowed to touch it), so
+        log loudly and exit with a clean nonzero status — supervisors
+        restart on exit codes, not on silence."""
+        self.log(msg)
+        os._exit(2)
+
+    def _watch(self) -> None:
+        """Watchdog thread: the pump stamps ``_beat`` every iteration
+        (idle parks are sub-millisecond), so a stale heartbeat means one
+        engine step / inbox op has been stuck for ``watchdog_s``."""
+        period = min(max(self.watchdog_s / 4.0, 0.01), 1.0)
+        while not self._stop_pump.wait(period):
+            stale = time.monotonic() - self._beat
+            if stale > self.watchdog_s:
+                self.on_wedged(
+                    f"[http] WATCHDOG: pump made no progress for "
+                    f"{stale:.1f}s (> {self.watchdog_s:g}s) — engine step "
+                    f"wedged; cannot drain, exiting 2")
+                return
+
     def _serve_inbox(self) -> None:
         """Apply queued handler operations (pump thread, lock held)."""
         svc = self.service
@@ -370,8 +524,10 @@ class HttpFrontDoor:
             if op[0] == "submit":
                 _, req, deadline_s, sink, fut = op
                 try:
-                    res: Any = (svc.submit(req, deadline_s=deadline_s,
-                                           sink=sink), svc.draining)
+                    ticket = svc.submit(req, deadline_s=deadline_s,
+                                        sink=sink)
+                    res: Any = (ticket, None if ticket is not None
+                                else dict(svc.last_shed))
                 except ValueError as e:
                     res = e
                 self._replies.append((fut, res))
@@ -424,6 +580,8 @@ class HttpFrontDoor:
         self._kick.set()
         if self._pump_thread is not None:
             self._pump_thread.join(timeout=10)
+        if self._watchdog_thread is not None:
+            self._watchdog_thread.join(timeout=10)
 
     # --------------------------------------------------------------- handler
     async def _handle(self, reader: asyncio.StreamReader,
@@ -431,15 +589,36 @@ class HttpFrontDoor:
         self._active_streams += 1
         try:
             try:
-                method, path, body = await self._read_request(reader)
+                method, path, body = await asyncio.wait_for(
+                    self._read_request(reader), self.request_timeout_s)
+            except asyncio.TimeoutError:
+                # slow-loris: the client dribbled bytes slower than the
+                # request timeout — answer and hang up, never touching
+                # the pump
+                writer.write(_plain_response(
+                    "408 Request Timeout",
+                    {"error": "request not received in "
+                              f"{self.request_timeout_s:g}s"}))
+                return
+            except _BodyTooLarge as e:
+                writer.write(_plain_response(
+                    "413 Payload Too Large",
+                    {"error": f"body of {e.n} bytes exceeds "
+                              f"{self.max_body_bytes}"}))
+                return
             except (asyncio.IncompleteReadError, ValueError):
                 writer.write(_plain_response(
                     "400 Bad Request", {"error": "malformed request"}))
                 return
             if method == "GET" and path in ("/healthz", "/stats"):
                 writer.write(_plain_response("200 OK", await self._health()))
-            elif method == "POST" and path in ("/v1/generate", "/generate"):
-                await self._generate(writer, body)
+            elif path in ("/v1/generate", "/generate"):
+                if method != "POST":
+                    writer.write(_plain_response(
+                        "400 Bad Request",
+                        {"error": f"use POST for {path}, not {method}"}))
+                else:
+                    await self._generate(writer, body)
             else:
                 writer.write(_plain_response(
                     "404 Not Found", {"error": f"no route {method} {path}"}))
@@ -460,12 +639,16 @@ class HttpFrontDoor:
         method, path = parts[0], parts[1]
         headers = {}
         while True:
-            h = await reader.readline()
-            if h in (b"\r\n", b"\n", b""):
-                break
+            h = await reader.readline()   # StreamReader's own line limit
+            if h in (b"\r\n", b"\n", b""):     # turns absurd headers into
+                break                          # ValueError -> 400
+            if len(headers) > 100:
+                raise ValueError("too many headers")
             k, _, v = h.decode("latin-1").partition(":")
             headers[k.strip().lower()] = v.strip()
         n = int(headers.get("content-length", "0") or 0)
+        if n > self.max_body_bytes:
+            raise _BodyTooLarge(n)             # -> 413, body never read
         body = await reader.readexactly(n) if n else b""
         return method, path, body
 
@@ -484,19 +667,38 @@ class HttpFrontDoor:
         return await self._ask(("health", self._loop.create_future()))
 
     def _parse_request(self, body: bytes) -> Tuple[Request, Optional[float]]:
+        """Parse + validate a generate body; every rejection raises here,
+        BEFORE the pump is involved — a malformed request must cost the
+        event loop a 400, never an engine exception."""
+        max_seq = self.service.engine.max_seq
         d = json.loads(body.decode() or "{}")
+        if not isinstance(d, dict):
+            raise ValueError("body must be a JSON object")
         if "prompt" in d:
             prompt = d["prompt"]
+            if (not isinstance(prompt, list) or not prompt
+                    or not all(isinstance(t, int) and not isinstance(t, bool)
+                               for t in prompt)):
+                raise ValueError("'prompt' must be a non-empty list of "
+                                 "token ids")
         elif "prompt_len" in d:
+            n = int(d["prompt_len"])
+            if not (1 <= n <= max_seq):
+                raise ValueError(f"prompt_len must be in [1, {max_seq}]")
             vocab = self.service.engine.cfg.vocab_size
-            prompt = self._rng.randint(0, vocab,
-                                       int(d["prompt_len"])).tolist()
+            prompt = self._rng.randint(0, vocab, n).tolist()
         else:
             raise ValueError("body needs 'prompt' (token ids) or "
                              "'prompt_len'")
         req = Request(prompt=prompt,
                       max_new_tokens=int(d.get("max_new_tokens", 16)),
                       eos_id=d.get("eos_id"))
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if len(prompt) + req.max_new_tokens > max_seq:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens "
+                f"({req.max_new_tokens}) exceeds max_seq={max_seq}")
         deadline_s = d.get("deadline_s")
         return req, (None if deadline_s is None else float(deadline_s))
 
@@ -517,7 +719,7 @@ class HttpFrontDoor:
             self._staged.setdefault(queue, []).append(ev)
 
         try:
-            ticket, draining = await self._ask(
+            ticket, shed = await self._ask(
                 ("submit", req, deadline_s, sink,
                  self._loop.create_future()))
         except ValueError as e:
@@ -525,14 +727,22 @@ class HttpFrontDoor:
                                          {"error": str(e)}))
             return
         if ticket is None:
-            if draining:
+            reason = (shed or {}).get("reason", "saturated")
+            if reason == "draining":
                 writer.write(_plain_response(
                     "503 Service Unavailable", {"error": "draining"}))
             else:
-                retry = self.service.cfg.retry_after_s
+                # saturated or deadline-infeasible; Retry-After is the
+                # service's honest estimate when the admission controller
+                # is warm, its static default otherwise
+                retry = (shed or {}).get("retry_after_s")
+                if retry is None:
+                    retry = self.service.cfg.retry_after_s
+                body_out = {"error": reason, "retry_after_s": retry}
+                if "predicted_s" in (shed or {}):
+                    body_out["predicted_s"] = round(shed["predicted_s"], 4)
                 writer.write(_plain_response(
-                    "429 Too Many Requests",
-                    {"error": "saturated", "retry_after_s": retry},
+                    "429 Too Many Requests", body_out,
                     extra_headers=(f"Retry-After: {retry:g}",)))
             return
         writer.write(_SSE_HEADERS)
@@ -554,7 +764,12 @@ class HttpFrontDoor:
                                 b'data: {"index": %d, "token": %d}\n\n'
                                 % (ev[1], int(ev[2])))
                     else:
-                        out += sse_event("done", ev[1])
+                        # a fault-isolated request ends its stream with
+                        # event: error instead of done (same payload shape)
+                        name = ("error"
+                                if ev[1].get("finish_reason") == "error"
+                                else "done")
+                        out += sse_event(name, ev[1])
                         finished = True
                 writer.write(bytes(out))
                 await writer.drain()
@@ -567,11 +782,14 @@ class HttpFrontDoor:
 
 
 def run_http(service: Service, host: str = "127.0.0.1", port: int = 8080,
-             log: Callable[[str], None] = print) -> None:
+             log: Callable[[str], None] = print,
+             watchdog_s: Optional[float] = None) -> None:
     """Blocking entrypoint for ``serve --http``: listen until SIGTERM (or
     SIGINT), then drain in-flight slots before returning — the graceful
-    shutdown contract CI's http-smoke asserts."""
-    door = HttpFrontDoor(service, host=host, port=port, log=log)
+    shutdown contract CI's http-smoke asserts. ``watchdog_s`` arms the
+    pump watchdog (a wedged engine step exits 2 instead of hanging)."""
+    door = HttpFrontDoor(service, host=host, port=port, log=log,
+                         watchdog_s=watchdog_s)
 
     async def main() -> None:
         await door.start()

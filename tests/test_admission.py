@@ -1,0 +1,298 @@
+"""Deadline-feasibility admission (DESIGN.md §14).
+
+Load-bearing guarantees:
+  * the controller is pure and clockless — throughput EWMAs fed by
+    observed (tokens, wall) pairs, no hidden time source — so every
+    verdict here is exact arithmetic, no sleeps;
+  * it refuses to judge until warm (``min_observations`` of EACH of
+    prefill and decode throughput): a cold predictor admitting everything
+    beats a cold predictor guessing;
+  * verdicts price the FULL backlog ahead of the candidate plus the
+    candidate itself, with the safety margin, and an infeasible verdict
+    carries an honest computed Retry-After (predicted minus deadline,
+    clamped to [floor, cap]) — never a made-up constant;
+  * ``Service.submit`` sheds infeasible deadlines AT SUBMIT (before the
+    request burns a queue position), counts them in both ``shed`` and
+    ``shed_infeasible``, and leaves the why in ``last_shed`` for the
+    transport's status code and Retry-After header;
+  * the static ``n_slots + queue_depth`` cap stays a hard bound on top —
+    feasibility never admits past saturation;
+  * ``scripts/check_bench.py`` gates the chaos + feasibility variants by
+    NAME with measured-vs-threshold messages.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm
+from repro.serving import (AdmissionConfig, AdmissionController, Engine,
+                           Request, SchedulerConfig, Service, ServiceConfig)
+from test_paged_kv import _bench_doc, _load_check_bench, _variant
+
+ARCH = "qwen3-0.6b"
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get_smoke_config(ARCH)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _warm_ctrl(prefill_rate=1000.0, decode_rate=100.0, **cfg_kw):
+    """A controller warmed to exact, known rates: every observation is
+    (rate tokens / 1 s), so the EWMA converges to the rate itself and
+    work_s becomes closed-form checkable."""
+    ctrl = AdmissionController(AdmissionConfig(**cfg_kw))
+    for _ in range(ctrl.cfg.min_observations):
+        ctrl.observe(prefill_rate, decode_rate, 1.0)
+    return ctrl
+
+
+def _fake_clock():
+    now = [0.0]
+    return now, (lambda: now[0])
+
+
+# ------------------------------------------------------------- pure controller
+def test_config_validation():
+    with pytest.raises(ValueError):
+        AdmissionConfig(ewma_alpha=0.0)
+    with pytest.raises(ValueError):
+        AdmissionConfig(ewma_alpha=1.5)
+    with pytest.raises(ValueError):
+        AdmissionConfig(safety=0.0)
+    with pytest.raises(ValueError):
+        AdmissionConfig(min_observations=0)
+    with pytest.raises(ValueError):
+        AdmissionConfig(retry_floor_s=2.0, retry_cap_s=1.0)
+
+
+def test_cold_controller_never_judges():
+    ctrl = AdmissionController()
+    assert not ctrl.warm
+    # one observation short of warm on the decode side
+    for _ in range(ctrl.cfg.min_observations):
+        ctrl.observe(100, 0, 1.0)            # prefill-only steps
+    for _ in range(ctrl.cfg.min_observations - 1):
+        ctrl.observe(0, 50, 1.0)
+    assert not ctrl.warm
+    ctrl.observe(0, 50, 1.0)
+    assert ctrl.warm
+
+
+def test_observe_ignores_degenerate_samples():
+    ctrl = AdmissionController()
+    ctrl.observe(100, 100, 0.0)              # no wall time elapsed
+    ctrl.observe(100, 100, -1.0)
+    ctrl.observe(0, 0, 1.0)                  # a tick that moved no tokens
+    assert not ctrl.warm
+
+
+def test_ewma_tracks_rate_change():
+    ctrl = _warm_ctrl(decode_rate=100.0)
+    fast = ctrl.work_s(0, 100)               # ~1s of decode, x safety
+    for _ in range(40):
+        ctrl.observe(0, 50, 1.0)             # throughput halves
+    assert ctrl.work_s(0, 100) > 1.8 * fast  # prediction roughly doubles
+
+
+def test_work_s_closed_form():
+    ctrl = _warm_ctrl(prefill_rate=1000.0, decode_rate=100.0, safety=1.5)
+    # 500 prefill tokens at 1000 tok/s + 20 decode at 100 tok/s = 0.7 s
+    assert ctrl.work_s(500, 20) == pytest.approx(1.5 * 0.7, rel=1e-6)
+
+
+def test_feasible_verdict_and_honest_retry():
+    ctrl = _warm_ctrl(prefill_rate=1000.0, decode_rate=100.0, safety=1.0,
+                      retry_floor_s=0.05, retry_cap_s=30.0)
+    # candidate alone: 100/1000 + 10/100 = 0.2 s predicted
+    v = ctrl.feasible(100, 10, (0, 0), deadline_s=1.0)
+    assert v.feasible and v.retry_after_s == 0.0
+    assert v.predicted_s == pytest.approx(0.2, rel=1e-6)
+    # same candidate behind 200 backlog decode tokens (2 s at 100 tok/s):
+    # 0.1 prefill + 2.1 decode = 2.2 s predicted
+    v = ctrl.feasible(100, 10, (0, 200), deadline_s=1.0)
+    assert not v.feasible
+    assert v.predicted_s == pytest.approx(2.2, rel=1e-6)
+    # honest retry: predicted - deadline, not a constant
+    assert v.retry_after_s == pytest.approx(1.2, rel=1e-6)
+
+
+def test_retry_clamps_to_floor_and_cap():
+    ctrl = _warm_ctrl(prefill_rate=1000.0, decode_rate=100.0, safety=1.0,
+                      retry_floor_s=0.5, retry_cap_s=2.0)
+    barely = ctrl.feasible(100, 10, (0, 0), deadline_s=0.19)
+    assert not barely.feasible and barely.retry_after_s == 0.5   # floor
+    hopeless = ctrl.feasible(100_000, 10_000, (0, 0), deadline_s=0.1)
+    assert not hopeless.feasible and hopeless.retry_after_s == 2.0  # cap
+
+
+# --------------------------------------------------------- service integration
+def test_submit_sheds_infeasible_at_submit(setup):
+    cfg, params = setup
+    eng = Engine(params, cfg, n_slots=2, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=8))
+    ctrl = _warm_ctrl(prefill_rate=1000.0, decode_rate=100.0, safety=1.0)
+    now, clock = _fake_clock()
+    svc = Service(eng, ServiceConfig(queue_depth=4), clock=clock,
+                  admission=ctrl)
+    rng = np.random.RandomState(0)
+    prompt = rng.randint(0, cfg.vocab_size, 10).tolist()
+
+    # 10 decode tokens need ~0.1 s — a 1 ms deadline is impossible, and
+    # the shed happens NOW, with nothing ever entering the engine
+    t = svc.submit(Request(prompt=prompt, max_new_tokens=10),
+                   deadline_s=0.001)
+    assert t is None
+    assert svc.stats["shed"] == 1 and svc.stats["shed_infeasible"] == 1
+    assert svc.stats["submitted"] == 0 and not eng.has_work
+    assert svc.last_shed["reason"] == "infeasible"
+    assert svc.last_shed["retry_after_s"] > 0
+    assert svc.last_shed["predicted_s"] > 0.001
+
+    # a generous deadline on the same request sails through and completes
+    t = svc.submit(Request(prompt=prompt, max_new_tokens=10),
+                   deadline_s=60.0)
+    assert t is not None
+    while svc.has_work:
+        svc.step()
+    assert t.finish_reason == "length"
+    assert svc.stats["expired"] == 0 and svc.stats["completed"] == 1
+
+
+def test_feasibility_prices_backlog_of_admitted_work(setup):
+    cfg, params = setup
+    eng = Engine(params, cfg, n_slots=1, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=8))
+    ctrl = _warm_ctrl(prefill_rate=1000.0, decode_rate=100.0, safety=1.0)
+    now, clock = _fake_clock()
+    svc = Service(eng, ServiceConfig(queue_depth=4), clock=clock,
+                  admission=ctrl)
+    rng = np.random.RandomState(1)
+    prompt = rng.randint(0, cfg.vocab_size, 10).tolist()
+    # alone, this deadline is fine (~0.31 s predicted vs 1 s)...
+    assert ctrl.feasible(10, 30, (0, 0), 1.0).feasible
+    a = svc.submit(Request(prompt=prompt, max_new_tokens=30),
+                   deadline_s=10.0)
+    b = svc.submit(Request(prompt=prompt, max_new_tokens=30),
+                   deadline_s=10.0)
+    assert a is not None and b is not None
+    # ...but behind two 30-token requests the backlog prices at
+    # (20+10)/1000 + (60+30)/100 = 0.93 s — a 0.8 s ask is infeasible
+    t = svc.submit(Request(prompt=prompt, max_new_tokens=30),
+                   deadline_s=0.8)
+    assert t is None and svc.last_shed["reason"] == "infeasible"
+    # deadline-free requests are NEVER feasibility-checked
+    t = svc.submit(Request(prompt=prompt, max_new_tokens=30))
+    assert t is not None
+    while svc.has_work:
+        svc.step()
+    assert svc.stats["expired"] == 0 and svc.stats["completed"] == 3
+
+
+def test_static_cap_still_hard_even_when_feasible(setup):
+    cfg, params = setup
+    eng = Engine(params, cfg, n_slots=1, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=8))
+    # absurdly fast rates: everything looks feasible to the predictor
+    ctrl = _warm_ctrl(prefill_rate=1e9, decode_rate=1e9)
+    svc = Service(eng, ServiceConfig(queue_depth=1), admission=ctrl)
+    rng = np.random.RandomState(2)
+    reqs = [Request(prompt=rng.randint(0, cfg.vocab_size, 6).tolist(),
+                    max_new_tokens=2) for _ in range(3)]
+    assert svc.submit(reqs[0], deadline_s=60.0) is not None
+    assert svc.submit(reqs[1], deadline_s=60.0) is not None
+    assert svc.submit(reqs[2], deadline_s=60.0) is None   # capacity == 2
+    assert svc.last_shed["reason"] == "saturated"
+    assert svc.stats["shed"] == 1 and svc.stats["shed_infeasible"] == 0
+    svc.drain()
+
+
+def test_saturation_retry_after_uses_backlog_when_warm(setup):
+    cfg, params = setup
+    eng = Engine(params, cfg, n_slots=1, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=8))
+    ctrl = _warm_ctrl(prefill_rate=1000.0, decode_rate=100.0, safety=1.0,
+                      retry_floor_s=0.01, retry_cap_s=30.0)
+    svc = Service(eng, ServiceConfig(queue_depth=0, retry_after_s=0.25),
+                  admission=ctrl)
+    rng = np.random.RandomState(3)
+    prompt = rng.randint(0, cfg.vocab_size, 10).tolist()
+    assert svc.submit(Request(prompt=prompt, max_new_tokens=30)) is not None
+    assert svc.submit(Request(prompt=prompt, max_new_tokens=30)) is None
+    # one live request owing 10 prefill + 30 decode tokens: ~0.31 s — the
+    # advertised Retry-After is that computed drain time, not the static
+    # 0.25 s configured fallback
+    assert svc.last_shed["reason"] == "saturated"
+    assert svc.last_shed["retry_after_s"] == pytest.approx(0.31, rel=1e-6)
+    svc.drain()
+
+
+# ----------------------------------------------------------- check_bench gates
+def _chaos_variant(**kw):
+    v = _variant(faults=4, leaked_pages=0, survivors=4,
+                 survivors_identical=1, pump_survived=1, p95_ratio=0.9,
+                 fault_free_p95_ms=40.0)
+    v.update(kw)
+    return v
+
+
+def _adm_variant(**kw):
+    v = _variant(shed_infeasible=4, expired=0, completed=4,
+                 retry_after_s_sample=0.05)
+    v.update(kw)
+    return v
+
+
+def test_check_bench_names_missing_chaos_variant(tmp_path, capsys):
+    cb = _load_check_bench()
+    path = _bench_doc(tmp_path, {"chaos": _chaos_variant()}, ["chaos"])
+    with pytest.raises(SystemExit):
+        cb.main([str(path)])
+    assert "needs variant 'admission_feasible'" in capsys.readouterr().out
+
+
+def test_check_bench_gates_chaos_invariants(tmp_path, capsys):
+    cb = _load_check_bench()
+    for bad, needle in [
+        (dict(faults=0), "injectors never fired"),
+        (dict(leaked_pages=3), "leaked_pages = 3"),
+        (dict(pump_survived=0), "killed the serving loop"),
+        (dict(survivors_identical=0), "perturbed a surviving stream"),
+        (dict(p95_ratio=5.0), "stalling the batch"),
+    ]:
+        path = _bench_doc(tmp_path, {
+            "chaos": _chaos_variant(**bad),
+            "admission_feasible": _adm_variant()}, [])
+        with pytest.raises(SystemExit):
+            cb.main([str(path)])
+        out = capsys.readouterr().out
+        assert needle in out, f"{bad} -> {out}"
+
+
+def test_check_bench_gates_admission_invariants(tmp_path, capsys):
+    cb = _load_check_bench()
+    for bad, needle in [
+        (dict(shed_infeasible=0), "impossible deadlines were admitted"),
+        (dict(expired=2), "blew its deadline"),
+        (dict(completed=0), "starved"),
+        (dict(retry_after_s_sample=0.0), "honest computed Retry-After"),
+    ]:
+        path = _bench_doc(tmp_path, {
+            "chaos": _chaos_variant(),
+            "admission_feasible": _adm_variant(**bad)}, [])
+        with pytest.raises(SystemExit):
+            cb.main([str(path)])
+        out = capsys.readouterr().out
+        assert needle in out, f"{bad} -> {out}"
+
+
+def test_check_bench_accepts_healthy_chaos(tmp_path):
+    cb = _load_check_bench()
+    path = _bench_doc(tmp_path, {
+        "chaos": _chaos_variant(),
+        "admission_feasible": _adm_variant()},
+        ["chaos", "admission_feasible"])
+    assert cb.main([str(path)]) == 0

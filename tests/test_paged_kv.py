@@ -279,6 +279,62 @@ def test_page_table_roundtrip_property(ops):
     alloc.check()
 
 
+@settings(deadline=None, max_examples=60)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 3)),
+                max_size=30))
+def test_prefix_cache_refcount_property(ops):
+    """Random insert/lookup/release/evict interleavings of slots against
+    the prefix cache — the host-side shape of a cancel/evict storm over
+    shared prefixes. Invariants: the allocator's refcount bookkeeping
+    stays coherent at every step, a hit always returns a prefix of the
+    inserting slot's pages, and releasing every slot ref plus clearing
+    the cache returns the arena to empty (cache refs and slot refs never
+    get conflated)."""
+    ps = 4
+    alloc = sp.PageAllocator(12)
+    cache = sp.PrefixCache(alloc, page_size=ps)
+    inserted = []                            # (prompt_core, pages)
+    held = []                                # page lists we hold refs on
+    base = 0
+    for op, n in ops:
+        if op == 0:                          # prefill a fresh prompt + insert
+            while True:                      # engine's evict-then-retry loop
+                try:
+                    pages = alloc.alloc(n)
+                    break
+                except MemoryError:
+                    if not cache.evict_lru():
+                        pages = None
+                        break
+            if pages is None:
+                continue
+            prompt = np.arange(base, base + n * ps, dtype=np.int32)
+            base += n * ps                   # unique tokens => unique keys
+            shared = cache.insert(prompt, pages, n * ps)
+            assert shared == n * ps
+            inserted.append((prompt, pages))
+            held.append(pages)               # the slot keeps its own refs
+        elif op == 1 and inserted:           # a later request shares a head
+            prompt, pages = inserted[n % len(inserted)]
+            probe = np.concatenate(
+                [prompt, np.full(2, -1, dtype=np.int32)])
+            hit_n, hit_pages = cache.lookup(probe)
+            if hit_n:                        # LRU may have dropped it
+                assert hit_n % ps == 0
+                assert hit_pages == list(pages[:hit_n // ps])
+                held.append(hit_pages)       # lookup ref'd them for us
+        elif op == 2 and held:               # slot finishes / is cancelled
+            alloc.unref(held.pop(n % len(held)))
+        elif op == 3:                        # arena pressure
+            cache.evict_lru()
+        alloc.check()
+    for pages in held:                       # every slot drains
+        alloc.unref(pages)
+    cache.clear()
+    assert alloc.pages_in_use == 0 and alloc.free_pages == 11
+    alloc.check()
+
+
 # ------------------------------------------------------------- reset_slot
 def test_reset_slot_paged_leaves_kv_arena_alone(setup):
     """Admission reset must not write the shared arena: KV leaves come

@@ -1,6 +1,6 @@
 """Service layer: bounded admission, deadlines, shed, drain, SSE transport.
 
-The load-bearing guarantees (DESIGN.md §13):
+The load-bearing guarantees (DESIGN.md §13, §14):
   * shed fires EXACTLY at queue+slot saturation (load == n_slots +
     queue_depth) and releases as soon as a request finishes;
   * a deadline expiry evicts the request wherever it lives — queued or
@@ -10,19 +10,33 @@ The load-bearing guarantees (DESIGN.md §13):
   * tokens streamed through the service are IDENTICAL to ``Engine.run`` on
     the same requests, and the sink sees them one at a time, in order;
   * the HTTP loopback speaks well-formed SSE (token events then exactly one
-    done event), answers /healthz, and 400s malformed bodies.
+    done event), answers /healthz, and 400s malformed bodies;
+  * an injected per-request fault (``serving.faults``) errors exactly the
+    requests it hit — pages freed, ``event: error`` on their streams —
+    while the pump keeps serving, post-fault tokens stay identical, and a
+    wedged pump escalates through the watchdog;
+  * the front door hardens the socket edge: non-POST generate -> 400,
+    oversized body -> 413 (body never read), slow-loris -> 408;
+  * random admit/cancel/deadline-expiry storms (hypothesis) always return
+    the page allocator to baseline.
 """
 import asyncio
 import json
+import threading
+import time
 
 import jax
 import numpy as np
 import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # bare container: skip property tests
+    from _hypothesis_stub import given, settings, st
 
 from repro import configs
 from repro.models import lm
 from repro.serving import (Engine, HttpFrontDoor, Request, SchedulerConfig,
-                           Service, ServiceConfig)
+                           Service, ServiceConfig, faults)
 
 ARCH = "qwen3-0.6b"
 
@@ -208,3 +222,254 @@ def test_http_sse_loopback(setup):
 
     asyncio.run(scenario())
     assert svc.stats["completed"] == 1 and not svc.has_work
+
+
+# ------------------------------------------------------------ fault isolation
+def test_decode_fault_errors_requests_pump_survives(setup):
+    """A decode-dispatch fault errors exactly the in-flight batch: pages
+    freed, ``faults`` counted, streams finished with ``error`` — and the
+    very next submit on the SAME service completes with identical tokens
+    (the blast radius never reaches the pump or the pools)."""
+    cfg, params = setup
+    eng = Engine(params, cfg, n_slots=2, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=8),
+                 page_size=8, prefix_cache=False)
+    prompts = _prompts(cfg, [7, 9, 11], seed=11)
+    ref = eng.run([Request(prompt=prompts[2], max_new_tokens=4)])[0].tokens
+    svc = Service(eng, ServiceConfig(queue_depth=4))
+    events = []
+    h = faults.inject_decode_fault(eng, at=1)
+    try:
+        a = svc.submit(Request(prompt=prompts[0], max_new_tokens=4),
+                       sink=events.append)
+        b = svc.submit(Request(prompt=prompts[1], max_new_tokens=4))
+        while svc.has_work:        # must terminate: the pump absorbs it
+            svc.step()
+    finally:
+        h.restore()
+    assert h.fired == 1
+    assert a.finish_reason == "error" and b.finish_reason == "error"
+    assert events[-1][0] == "done"
+    assert events[-1][1]["finish_reason"] == "error"
+    assert svc.stats["faults"] == 2 and eng.stats["faults"] == 2
+    assert eng.alloc.pages_in_use == 0     # no page outlives its request
+    eng.alloc.check()
+
+    c = svc.submit(Request(prompt=prompts[2], max_new_tokens=4))
+    while svc.has_work:
+        svc.step()
+    assert c.finish_reason == "length" and c.tokens == ref
+    assert eng.alloc.pages_in_use == 0
+    eng.alloc.check()
+
+
+def test_alloc_fault_fails_only_that_admission(setup):
+    """Page-allocator exhaustion at admit errors the request being mapped
+    — and ONLY it; a request admitted after the fault window completes."""
+    cfg, params = setup
+    eng = Engine(params, cfg, n_slots=2, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=8),
+                 page_size=8, prefix_cache=False)
+    prompts = _prompts(cfg, [9, 9], seed=13)
+    svc = Service(eng, ServiceConfig(queue_depth=4))
+    h = faults.inject_alloc_failure(eng, at=1)
+    try:
+        a = svc.submit(Request(prompt=prompts[0], max_new_tokens=3))
+        while svc.has_work:
+            svc.step()
+    finally:
+        h.restore()
+    assert h.fired == 1 and a.finish_reason == "error"
+    assert svc.stats["faults"] == 1
+    b = svc.submit(Request(prompt=prompts[1], max_new_tokens=3))
+    while svc.has_work:
+        svc.step()
+    assert b.finish_reason == "length" and len(b.tokens) == 3
+    assert eng.alloc.pages_in_use == 0
+    eng.alloc.check()
+
+
+def test_http_stream_gets_error_event(setup):
+    """A faulted request's SSE stream terminates with ``event: error``
+    (same payload shape as ``done``) — a 200 stream never just drops."""
+    cfg, params = setup
+    eng = Engine(params, cfg, n_slots=1, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=8),
+                 page_size=8, prefix_cache=False)
+    prompt = _prompts(cfg, [7], seed=15)[0]
+    svc = Service(eng, ServiceConfig(queue_depth=2))
+    door = HttpFrontDoor(svc, host="127.0.0.1", port=0)
+    h = faults.inject_decode_fault(eng, at=1)
+
+    async def scenario():
+        await door.start()
+        body = json.dumps({"prompt": prompt, "max_new_tokens": 4}).encode()
+        raw = await asyncio.wait_for(
+            _http(door.port, "POST", "/v1/generate", body), timeout=120)
+        head, events = _parse_sse(raw)
+        assert head.startswith("HTTP/1.1 200")
+        assert events[-1][0] == "error"
+        assert events[-1][1]["finish_reason"] == "error"
+        await asyncio.wait_for(door.stop(drain=True), timeout=60)
+
+    try:
+        asyncio.run(scenario())
+    finally:
+        h.restore()
+    assert svc.stats["faults"] == 1 and eng.alloc.pages_in_use == 0
+    eng.alloc.check()
+
+
+# -------------------------------------------------------------- HTTP hardening
+def test_http_front_door_hardening(setup):
+    """Socket-edge attacks each get their own clean status without ever
+    touching the pump: non-POST generate -> 400, oversized body -> 413
+    (judged from Content-Length, body never read), invalid prompt shapes
+    -> 400, slow-loris -> 408."""
+    cfg, params = setup
+    eng = Engine(params, cfg, n_slots=1, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=8))
+    svc = Service(eng, ServiceConfig(queue_depth=2))
+    door = HttpFrontDoor(svc, host="127.0.0.1", port=0,
+                         max_body_bytes=256, request_timeout_s=0.3)
+
+    async def scenario():
+        await door.start()
+        raw = await _http(door.port, "GET", "/v1/generate")
+        assert raw.startswith(b"HTTP/1.1 400")
+        assert b"use POST" in raw
+
+        # content-length over the cap: refused before any body bytes move
+        reader, writer = await asyncio.open_connection("127.0.0.1",
+                                                       door.port)
+        writer.write(b"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                     b"Content-Length: 999999\r\n\r\n")
+        await writer.drain()
+        raw = await reader.read()
+        writer.close()
+        assert raw.startswith(b"HTTP/1.1 413")
+
+        for bad in ({"prompt": "not a list"},
+                    {"prompt": [1, "x"]},
+                    {"prompt": []},
+                    {"prompt": [1, 2], "max_new_tokens": 0},
+                    {"prompt": [1] * 60, "max_new_tokens": 60}):  # > max_seq
+            raw = await _http(door.port, "POST", "/v1/generate",
+                              json.dumps(bad).encode())
+            assert raw.startswith(b"HTTP/1.1 400"), bad
+
+        # slow-loris: a partial request line, then silence
+        reader, writer = await asyncio.open_connection("127.0.0.1",
+                                                       door.port)
+        writer.write(b"POST /v1/gen")
+        await writer.drain()
+        raw = await asyncio.wait_for(reader.read(), timeout=10)
+        writer.close()
+        assert raw.startswith(b"HTTP/1.1 408")
+
+        await asyncio.wait_for(door.stop(drain=True), timeout=60)
+
+    asyncio.run(scenario())
+    assert svc.stats["submitted"] == 0     # nothing ever reached admission
+
+
+# ------------------------------------------------------------------- watchdog
+def test_watchdog_fires_on_stale_heartbeat(setup):
+    """The watchdog judges only the pump heartbeat: a stale ``_beat``
+    fires ``on_wedged`` (injected recorder here; the default logs and
+    ``os._exit(2)``s) and the thread returns."""
+    cfg, params = setup
+    eng = Engine(params, cfg, n_slots=1, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=8))
+    svc = Service(eng, ServiceConfig(queue_depth=1))
+    rec = []
+    door = HttpFrontDoor(svc, host="127.0.0.1", port=0, watchdog_s=0.05,
+                         on_wedged=rec.append)
+    door._beat = time.monotonic() - 10.0   # simulate a wedged engine step
+    t = threading.Thread(target=door._watch)
+    t.start()
+    t.join(timeout=5)
+    assert not t.is_alive()
+    assert len(rec) == 1 and "WATCHDOG" in rec[0]
+    # a fresh beat never fires (generous threshold: no scheduler jitter
+    # can make this flake), and stop terminates the thread cleanly
+    rec.clear()
+    door.watchdog_s = 5.0
+    door._beat = time.monotonic()
+    stopper = threading.Thread(target=door._watch)
+    stopper.start()
+    time.sleep(0.05)
+    door._stop_pump.set()
+    stopper.join(timeout=10)
+    assert not stopper.is_alive() and not rec
+
+
+def test_watchdog_default_escalation_is_exit(setup):
+    cfg, params = setup
+    eng = Engine(params, cfg, n_slots=1, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=8))
+    svc = Service(eng, ServiceConfig(queue_depth=1))
+    door = HttpFrontDoor(svc, host="127.0.0.1", port=0, watchdog_s=60.0)
+    assert door.on_wedged == door._exit_wedged
+
+
+# ------------------------------------------------------------ allocator storms
+_STORM = {}
+
+
+def _storm_engine():
+    """One compiled engine shared across hypothesis examples (fresh
+    Service per example; every example drains fully, so examples are
+    independent given the leak assertions hold — which is the property)."""
+    if not _STORM:
+        cfg = configs.get_smoke_config(ARCH)
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        _STORM["cfg"] = cfg
+        _STORM["eng"] = Engine(params, cfg, n_slots=2, max_seq=64,
+                               sched=SchedulerConfig(prefill_chunk=8),
+                               page_size=8, prefix_cache=False)
+    return _STORM["cfg"], _STORM["eng"]
+
+
+@settings(deadline=None, max_examples=12)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 6)),
+                max_size=16))
+def test_service_storm_pages_return_to_baseline(ops):
+    """Random interleavings of admit / deadline-admit / clock-jump
+    (expiry) / cancel (disconnect), stepping between ops: whatever the
+    sequence, draining returns the allocator to zero pages in use with
+    intact refcount invariants, and every ticket reaches a terminal
+    state. This is the host-side shape of a client storm — the property
+    the HTTP chaos smoke asserts over real sockets."""
+    cfg, eng = _storm_engine()
+    now = [0.0]
+    svc = Service(eng, ServiceConfig(queue_depth=3), clock=lambda: now[0])
+    rng = np.random.RandomState(17)
+    tickets = []
+    for op, n in ops:
+        if op == 0:                        # plain admit
+            t = svc.submit(Request(
+                prompt=rng.randint(0, cfg.vocab_size, 5 + n).tolist(),
+                max_new_tokens=1 + n % 4))
+            if t is not None:
+                tickets.append(t)
+        elif op == 1:                      # deadlined admit
+            t = svc.submit(Request(
+                prompt=rng.randint(0, cfg.vocab_size, 5 + n).tolist(),
+                max_new_tokens=1 + n % 4), deadline_s=0.5 * (n + 1))
+            if t is not None:
+                tickets.append(t)
+        elif op == 2:                      # clock jump: deadlines blow
+            now[0] += 0.6 * (n + 1)
+        elif op == 3 and svc.tickets:      # disconnect a live request
+            uid = sorted(svc.tickets)[n % len(svc.tickets)]
+            svc.cancel(uid)
+        svc.step()
+    svc.drain()
+    assert not svc.tickets
+    assert all(t.finish_reason is not None for t in tickets)
+    assert eng.alloc.pages_in_use == 0
+    eng.alloc.check()
+    st_ = svc.stats
+    assert st_["submitted"] == (st_["completed"] + st_["expired"]
+                                + st_["cancelled"] + st_["faults"])

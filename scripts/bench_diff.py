@@ -45,6 +45,16 @@ def main(argv) -> int:
 
     nv = (new.get("serving") or {}).get("variants") or {}
     bv = (base.get("serving") or {}).get("variants") or {}
+    # one-sided variants are population changes, not regressions: annotate
+    # them (notice-level — they are usually the PR's whole point) instead
+    # of KeyError-ing or silently skipping them in the intersection walks
+    for name in sorted(set(nv) - set(bv)):
+        print(f"::notice::serving/{name}: new variant (no baseline to "
+              f"diff against; first committed numbers land with this PR)")
+    for name in sorted(set(bv) - set(nv)):
+        print(f"::notice::serving/{name}: variant removed (present in "
+              f"baseline, absent from this run — intentional retirement "
+              f"or a bench that silently stopped running?)")
     for name in sorted(set(nv) & set(bv)):
         n_tok = nv[name].get("tokens_per_s")
         b_tok = bv[name].get("tokens_per_s")
@@ -126,6 +136,11 @@ def main(argv) -> int:
               if isinstance(r.get("us_per_call"), (int, float))}
     b_rows = {r["name"]: r for r in base.get("rows") or []
               if isinstance(r.get("us_per_call"), (int, float))}
+    for name in sorted(set(n_rows) - set(b_rows)):
+        print(f"::notice::{name}: new row (no baseline us_per_call)")
+    for name in sorted(set(b_rows) - set(n_rows)):
+        print(f"::notice::{name}: row removed (was "
+              f"{b_rows[name]['us_per_call']:.1f}us in baseline)")
     for name in sorted(set(n_rows) & set(b_rows)):
         b_us = b_rows[name]["us_per_call"]
         n_us = n_rows[name]["us_per_call"]

@@ -1,0 +1,60 @@
+#!/usr/bin/env python
+"""Static-analysis gate: compiled-HLO invariants + serving-discipline lint.
+
+Runs both analysis planes (DESIGN.md §15) and exits nonzero on any
+violation — CI runs this (the ``static-analysis`` job) before the bench
+jobs, so an invariant regression fails fast with a named rule instead of
+showing up as an unexplained bench slowdown three jobs later.
+
+  plane "hlo"   builds small live engines across the KV matrix
+                ({bf16, INT8} x {contiguous, paged} + speculative),
+                lowers every hot path that carries a
+                ``declare_invariants`` spec, and walks the optimized HLO:
+                no f32 round-trip on bf16 cache stores (§12), donated
+                pools actually aliased, host-sync budget honored,
+                retrace count within the window-bucketing bound.
+  plane "ast"   lints ``src/repro/serving/*.py`` + ``scripts/
+                check_bench.py`` against the five repo-specific rules in
+                ``repro.analysis.astlint``.
+
+Usage:
+    PYTHONPATH=src python scripts/check_static.py            # both planes
+    PYTHONPATH=src python scripts/check_static.py --plane ast
+    PYTHONPATH=src python scripts/check_static.py --plane hlo
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+from repro.analysis import render                        # noqa: E402
+from repro.analysis import astlint                       # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--plane", choices=("hlo", "ast", "all"), default="all")
+    ap.add_argument("--root", default=str(
+        pathlib.Path(__file__).resolve().parent.parent))
+    args = ap.parse_args()
+
+    violations = []
+    if args.plane in ("ast", "all"):
+        print(f"[ast] linting {args.root}")
+        violations += astlint.lint_tree(args.root)
+    if args.plane in ("hlo", "all"):
+        # imported lazily: the AST plane must stay runnable on a box
+        # without a working jax device
+        from repro.analysis import hlo_checks
+        violations += hlo_checks.run_hlo_plane(log=print)
+
+    print(render(violations))
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,20 @@
+"""Static analysis over the serving stack (DESIGN.md §15).
+
+Two planes, one driver (``scripts/check_static.py``), CI-gated:
+
+  * plane 1 — compiled artifact: ``invariants.declare_invariants`` lets a
+    jitted hot path declare what its optimized HLO must look like
+    (host-sync budget, donated-pool aliasing, no f32 round-trip on bf16
+    cache stores, retrace budget); ``hlo_checks`` lowers each declared
+    path with representative shapes and enforces the claims against
+    ``compiled.as_text()``. ``hlo_core`` is the shared HLO text parser
+    (also the roofline analyzer's).
+  * plane 2 — source: ``astlint`` checks serving-discipline rules the
+    type system can't express (injectable clocks, single-owner pump,
+    no host syncs inside jit, bench-gate messages, deduped helpers).
+"""
+from .invariants import REGISTRY, InvariantSpec, declare_invariants, spec_of
+from .report import Violation, render
+
+__all__ = ["REGISTRY", "InvariantSpec", "declare_invariants", "spec_of",
+           "Violation", "render"]

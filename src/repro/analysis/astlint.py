@@ -1,0 +1,271 @@
+"""Repo-specific AST lint (analysis plane 2). stdlib ``ast`` only.
+
+Five rules, each encoding a serving-stack discipline that an ordinary
+linter cannot know about:
+
+  no-raw-clock              a ``serving/`` module that declares an
+                            injectable ``clock`` parameter must not call
+                            ``time.time()``/``time.monotonic()`` — raw
+                            clock reads bypass the injection point that
+                            makes deadline tests deterministic.
+  pump-single-owner         ``service.py`` HTTP handler scope (``async
+                            def``) must not CALL methods through
+                            ``self.service...``/``...engine...`` — the
+                            pump thread is the single owner of engine and
+                            service state; handlers talk to it via the
+                            inbox (``self._ask``/``self._inbox.append``).
+                            Attribute READS stay allowed.
+  no-host-sync-in-hot-path  functions handed to ``jax.jit`` must not call
+                            ``np.asarray``/``int()``/``float()``/
+                            ``.item()`` — each is a device sync that
+                            breaks the one-host-sync-per-dispatch budget.
+  bench-gate-message        ``scripts/check_bench.py`` gates must not use
+                            bare ``assert`` without a measured-vs-
+                            threshold message (a bare assert fails CI
+                            with no number to debug from).
+  duplicate-hot-path-helper the host-side greedy-argmax fallback
+                            ``int(np.argmax(np.asarray(...)))`` may
+                            appear in at most one function per module —
+                            the copy-paste that let two emission paths
+                            drift apart.
+
+Escape hatch: append ``# repro-lint: disable=<rule>[,<rule>...]`` (or
+``disable=all``) to the flagged line. Every disable is deliberate and
+greppable — the watchdog heartbeat in ``service.py`` legitimately reads
+the wall clock and carries exactly this comment.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .report import Violation
+
+RULES = ("no-raw-clock", "pump-single-owner", "no-host-sync-in-hot-path",
+         "bench-gate-message", "duplicate-hot-path-helper")
+
+_DISABLE_RE = re.compile(r"#\s*repro-lint:\s*disable=([\w\-,\s]+)")
+
+# pump-single-owner: attribute segments that mark pump-owned state, and
+# self-rooted call chains handlers may use (the inbox protocol)
+_OWNED_SEGMENTS = ("service", "engine")
+_INBOX_WHITELIST = (("self", "_ask"), ("self", "_inbox", "append"))
+
+_RAW_CLOCK_CALLS = (("time", "time"), ("time", "monotonic"))
+
+
+def _disabled_rules(source: str) -> Dict[int, Set[str]]:
+    out: Dict[int, Set[str]] = {}
+    for lineno, line in enumerate(source.splitlines(), 1):
+        m = _DISABLE_RE.search(line)
+        if m:
+            out[lineno] = {r.strip() for r in m.group(1).split(",")
+                           if r.strip()}
+    return out
+
+
+def _attr_chain(node: ast.AST) -> Tuple[str, ...]:
+    """x.a.b.c -> ("x", "a", "b", "c"); non-name roots yield ("?", ...)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    parts.append(node.id if isinstance(node, ast.Name) else "?")
+    return tuple(reversed(parts))
+
+
+def _functions(tree: ast.AST):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _declares_clock_param(tree: ast.AST) -> bool:
+    for fn in _functions(tree):
+        args = fn.args
+        for a in (args.posonlyargs + args.args + args.kwonlyargs
+                  + ([args.vararg] if args.vararg else [])
+                  + ([args.kwarg] if args.kwarg else [])):
+            if a.arg == "clock":
+                return True
+    return False
+
+
+# ----------------------------------------------------------------- rules
+def _rule_no_raw_clock(tree: ast.AST) -> List[Tuple[int, str]]:
+    if not _declares_clock_param(tree):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) \
+                and _attr_chain(node.func) in _RAW_CLOCK_CALLS:
+            out.append((node.lineno,
+                        f"raw {'.'.join(_attr_chain(node.func))}() in a "
+                        f"module that declares an injectable clock — "
+                        f"thread the clock parameter through instead"))
+    return out
+
+
+def _rule_pump_single_owner(tree: ast.AST) -> List[Tuple[int, str]]:
+    out = []
+    for fn in _functions(tree):
+        if not isinstance(fn, ast.AsyncFunctionDef):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            if chain in _INBOX_WHITELIST:
+                continue
+            if chain[0] == "self" and any(s in chain[1:-1]
+                                          for s in _OWNED_SEGMENTS):
+                out.append((
+                    node.lineno,
+                    f"handler scope calls {'.'.join(chain)}() — engine/"
+                    f"service state is pump-owned; post to the inbox "
+                    f"(self._ask / self._inbox.append) instead"))
+    return out
+
+
+def _jitted_function_names(tree: ast.AST) -> Set[str]:
+    """Names of local functions passed to jax.jit(<name>, ...)."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and node.args \
+                and _attr_chain(node.func)[-1] == "jit" \
+                and _attr_chain(node.func)[0] in ("jax", "jit"):
+            if isinstance(node.args[0], ast.Name):
+                names.add(node.args[0].id)
+    return names
+
+
+def _rule_no_host_sync(tree: ast.AST) -> List[Tuple[int, str]]:
+    hot = _jitted_function_names(tree)
+    if not hot:
+        return []
+    out = []
+    for fn in _functions(tree):
+        if fn.name not in hot:
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            sync = None
+            if chain in (("np", "asarray"), ("numpy", "asarray")):
+                sync = "np.asarray"
+            elif chain in (("int",), ("float",)):
+                sync = f"{chain[0]}()"
+            elif chain[-1] == "item" and len(chain) > 1:
+                sync = ".item()"
+            if sync:
+                out.append((
+                    node.lineno,
+                    f"{sync} inside jitted hot path {fn.name!r} forces a "
+                    f"device sync — keep host conversions outside the "
+                    f"jit boundary"))
+    return out
+
+
+def _rule_bench_gate_message(tree: ast.AST) -> List[Tuple[int, str]]:
+    return [
+        (node.lineno,
+         "bare assert in a bench gate — include the measured value and "
+         "threshold in the message (or raise via fail())")
+        for node in ast.walk(tree)
+        if isinstance(node, ast.Assert) and node.msg is None]
+
+
+def _is_argmax_fallback(node: ast.AST) -> bool:
+    """int(np.argmax(np.asarray(...)))"""
+    if not (isinstance(node, ast.Call) and _attr_chain(node.func) == ("int",)
+            and node.args):
+        return False
+    inner = node.args[0]
+    if not (isinstance(inner, ast.Call)
+            and _attr_chain(inner.func)[-1] == "argmax" and inner.args):
+        return False
+    arg = inner.args[0]
+    return (isinstance(arg, ast.Call)
+            and _attr_chain(arg.func)[-1] == "asarray")
+
+
+def _rule_duplicate_helper(tree: ast.AST) -> List[Tuple[int, str]]:
+    sites: List[Tuple[str, int]] = []
+    for fn in _functions(tree):
+        for node in ast.walk(fn):
+            if _is_argmax_fallback(node):
+                sites.append((fn.name, node.lineno))
+                break           # one hit per function is enough
+    if len({name for name, _ in sites}) <= 1:
+        return []
+    return [
+        (line,
+         f"greedy-argmax fallback duplicated in {fn!r} — "
+         f"{len(sites)} functions in this module carry the same "
+         f"int(np.argmax(np.asarray(...))) pattern; share one helper")
+        for fn, line in sites]
+
+
+# ----------------------------------------------------------------- driver
+def rules_for(filename: str) -> Tuple[str, ...]:
+    """Which rules apply to a file, by its repo-relative path."""
+    p = pathlib.PurePosixPath(str(filename).replace("\\", "/"))
+    out: List[str] = []
+    if "serving" in p.parts:
+        out += ["no-raw-clock", "no-host-sync-in-hot-path",
+                "duplicate-hot-path-helper"]
+        if p.name == "service.py":
+            out.append("pump-single-owner")
+    if p.name == "check_bench.py":
+        out.append("bench-gate-message")
+    return tuple(out)
+
+
+_RULE_FNS = {
+    "no-raw-clock": _rule_no_raw_clock,
+    "pump-single-owner": _rule_pump_single_owner,
+    "no-host-sync-in-hot-path": _rule_no_host_sync,
+    "bench-gate-message": _rule_bench_gate_message,
+    "duplicate-hot-path-helper": _rule_duplicate_helper,
+}
+
+
+def lint_source(source: str, filename: str,
+                rules: Optional[Iterable[str]] = None) -> List[Violation]:
+    """Lint one module's source. ``rules=None`` selects by filename
+    (``rules_for``); tests pass explicit rules against fixture snippets."""
+    selected = tuple(rules) if rules is not None else rules_for(filename)
+    if not selected:
+        return []
+    tree = ast.parse(source, filename=str(filename))
+    disabled = _disabled_rules(source)
+    out: List[Violation] = []
+    for rule in selected:
+        for lineno, msg in _RULE_FNS[rule](tree):
+            d = disabled.get(lineno, ())
+            if rule in d or "all" in d:
+                continue
+            out.append(Violation("ast", rule, str(filename), msg,
+                                 line=lineno))
+    return sorted(out, key=lambda v: (v.where, v.line or 0, v.rule))
+
+
+def default_targets(root) -> List[pathlib.Path]:
+    root = pathlib.Path(root)
+    targets = sorted((root / "src/repro/serving").glob("*.py"))
+    bench = root / "scripts/check_bench.py"
+    if bench.exists():
+        targets.append(bench)
+    return targets
+
+
+def lint_tree(root) -> List[Violation]:
+    root = pathlib.Path(root)
+    out: List[Violation] = []
+    for path in default_targets(root):
+        rel = path.relative_to(root).as_posix()
+        out += lint_source(path.read_text(), rel)
+    return out

@@ -1,0 +1,173 @@
+"""Shared parser over optimized HLO text (``compiled.as_text()``).
+
+Two consumers read the compiled artifact today and must agree on how it
+parses: ``roofline.hlo_analysis`` (collective result bytes per device) and
+``analysis.hlo_checks`` (the compiled-plane invariant checker). Both walk
+the same line-oriented HLO dump, so the instruction grammar lives here
+once: per-instruction records across EVERY computation — XLA's fusion pass
+hides the interesting ops (the bf16 ``dynamic-update-slice`` f32 sandwich,
+callback custom-calls) inside ``%fused_computation`` bodies, so an
+ENTRY-only walk misses exactly the instructions the checks exist to find.
+
+The text format is stable enough for this: one instruction per line,
+``[ROOT] %name = shape opcode(operands), attrs``, with computations opened
+by ``comp_name (params) -> result {`` headers. Lines that do not parse are
+skipped, never fatal — the checks are written so a parse miss can only
+produce a false PASS on an op we failed to see, and the seeded-violation
+tests in ``tests/test_static_analysis.py`` pin that the ops we care about
+do parse on the jax version in CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+# `%name = shape opcode(` — shape is a single `dtype[dims]{layout}` or a
+# tuple `(shape, shape, ...)`; opcode is the token just before the operand
+# paren. Tuples never nest parens in practice for the ops we inspect.
+_INSTR_RE = re.compile(
+    r"^(ROOT\s+)?%?([\w.\-]+)\s+=\s+"
+    r"(\([^)]*\)|[\w\[\],{}:]+)\s+"
+    r"([\w\-]+)\(")
+
+# computation headers: `%name (args) -> result {` (ENTRY has its own form)
+_COMP_RE = re.compile(r"^%?([\w.\-]+)\s+\([^)]*\)\s*->")
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class Instruction:
+    name: str                    # result name, no leading %
+    dtype: str                   # result element type ("" for tuples)
+    dims: Tuple[int, ...]        # result dims (() for scalars and tuples)
+    opcode: str
+    operands: Tuple[str, ...]    # operand instruction names, no leading %
+    computation: str             # enclosing computation ("entry" for ENTRY)
+    raw: str                     # the stripped source line
+
+
+def _result_shape(shape_text: str) -> Tuple[str, Tuple[int, ...]]:
+    """First (dtype, dims) of the result spec; tuples report ("", ())."""
+    if shape_text.startswith("("):
+        return "", ()
+    m = SHAPE_RE.match(shape_text)
+    if not m:
+        return shape_text, ()        # scalar like `pred[]` misses dims only
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return m.group(1), dims
+
+
+def parse_instructions(hlo_text: str) -> List[Instruction]:
+    """Every instruction in every computation, fusion bodies included."""
+    out: List[Instruction] = []
+    comp = "entry"
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("ENTRY"):
+            comp = "entry"
+            continue
+        cm = _COMP_RE.match(s)
+        if cm and "=" not in s.split("(")[0]:
+            comp = cm.group(1)
+            continue
+        im = _INSTR_RE.match(s)
+        if not im:
+            continue
+        _, name, shape_text, opcode = im.groups()
+        dtype, dims = _result_shape(shape_text)
+        # operand region: from the opcode's '(' to the attr tail; operand
+        # refs always carry '%' in as_text, attrs (metadata, calls) may too
+        # — cut at "), " which closes the operand list in practice
+        args = s[im.end():]
+        cut = args.find("), ")
+        if cut != -1:
+            args = args[:cut]
+        operands = tuple(_OPERAND_RE.findall(args))
+        out.append(Instruction(name=name, dtype=dtype, dims=dims,
+                               opcode=opcode, operands=operands,
+                               computation=comp, raw=s))
+    return out
+
+
+_ALIAS_BLOCK_RE = re.compile(r"input_output_alias=\{(.*?)\}(?:,|\s|$)")
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([\d,\s]*)\}:\s*\((\d+),\s*\{([\d,\s]*)\},\s*([\w\-]+)\)")
+
+
+def parse_io_aliases(hlo_text: str) -> List[Tuple[Tuple[int, ...], int]]:
+    """(output_index, param_number) pairs from the HloModule header's
+    ``input_output_alias={ {0}: (1, {}, may-alias), ... }`` block. Under
+    jit every pytree leaf is its own flat parameter, so ``param_index``
+    is always ``{}`` and the param_number alone identifies the donated
+    leaf."""
+    header = hlo_text.splitlines()[0] if hlo_text else ""
+    start = header.find("input_output_alias={")
+    if start == -1:
+        return []
+    # the block nests braces ({ {0}: (0, {}, ...) }) — scan to its close
+    i = start + len("input_output_alias=")
+    depth, j = 0, i
+    for j, ch in enumerate(header[i:], i):
+        depth += (ch == "{") - (ch == "}")
+        if depth == 0:
+            break
+    block = header[i:j + 1]
+    out = []
+    for om, pnum, _pidx, _kind in _ALIAS_ENTRY_RE.findall(block):
+        oidx = tuple(int(x) for x in om.replace(" ", "").split(",") if x)
+        out.append((oidx, int(pnum)))
+    return out
+
+
+def aliased_param_numbers(hlo_text: str) -> set:
+    return {p for _, p in parse_io_aliases(hlo_text)}
+
+
+def parse_entry_params(hlo_text: str) -> List[str]:
+    """Canonical ``dtype[d0,d1,...]`` strings for the executable's entry
+    parameters, in param-number order, from the HloModule header's
+    ``entry_computation_layout={(p0, p1, ...)->(...)}``. This is the
+    ground truth for which python-level leaves survived into the
+    executable — jit's ``keep_unused=False`` default PRUNES arguments XLA
+    proves unused, so positional prefix sums over the python args do not
+    index this list safely; match by shape instead."""
+    header = hlo_text.splitlines()[0] if hlo_text else ""
+    start = header.find("entry_computation_layout={(")
+    if start == -1:
+        return []
+    i = start + len("entry_computation_layout={")
+    arrow = header.find(")->", i)
+    if arrow == -1:
+        return []
+    return [f"{dt}[{dims}]"
+            for dt, dims in SHAPE_RE.findall(header[i:arrow + 1])]
+
+
+def count_opcode(instrs: List[Instruction], opcode: str) -> int:
+    return sum(1 for i in instrs if i.opcode == opcode)
+
+
+def index_by_name(instrs: List[Instruction]) -> Dict[str, Instruction]:
+    """name -> instruction. Names repeat across computations in some
+    dumps; the checks only chase operands within one computation, so
+    later computations overwriting earlier entries is acceptable — we
+    index per-computation where it matters."""
+    return {i.name: i for i in instrs}

@@ -1,0 +1,108 @@
+"""Declared invariants for jitted hot paths.
+
+The serving stack's hardest-won properties — one host sync per decode
+dispatch, donated pools updated in place, bf16 KV stored as raw uint16
+words, bounded retracing under window bucketing — are invisible to unit
+tests: they live in the *compiled* artifact, not in token output. The
+``declare_invariants`` decorator lets the code that builds a jitted hot
+path say, next to the ``jax.jit`` call, what the compiled artifact must
+look like; ``analysis.hlo_checks`` later lowers the callable with
+representative shapes and walks the optimized HLO to enforce each claim.
+
+Usage (engine.py)::
+
+    self._decode_fn = declare_invariants(
+        "engine.decode", host_syncs=1, donated=("pool",),
+        forbid_f32_roundtrip_on=("kv",),
+        max_lowerings=max_seq // window_block,
+    )(jax.jit(_decode, donate_argnums=(1,), static_argnums=(7,)))
+
+Spec fields (all optional):
+
+  host_syncs            total host round-trips one dispatch may cost. The
+                        result fetch is always one, so the compiled HLO
+                        must contain exactly ``host_syncs - 1`` host
+                        boundary ops (infeed/outfeed/send/recv/host
+                        callback custom-calls).
+  donated               names of python-level arguments whose every leaf
+                        must show up in the executable's
+                        ``input_output_alias`` map (no full-arena copy).
+  forbid_f32_roundtrip_on  names of cache families (today: "kv") whose
+                        storage writes must never lower to an f32
+                        ``dynamic-update-slice``/``scatter`` — the §12
+                        bug class (XLA CPU float-normalization rewrites
+                        bf16 stores through f32 converts, copying the
+                        whole buffer per write).
+  max_lowerings         cap on distinct compiled variants after a
+                        scripted workload (the window-bucketing bound).
+
+The decorator records the spec in a module-level registry (name -> spec;
+specs only — never the callable, which would pin a whole engine's pools
+live) and, where the callable object allows it, mirrors the spec onto the
+function as ``__repro_invariants__`` so a debugger can see it in place.
+Re-registration under the same name overwrites: every Engine constructs
+fresh jitted closures, and the last-built engine's declaration is the one
+a checker run against that engine must see.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class InvariantSpec:
+    name: str
+    host_syncs: Optional[int] = None
+    donated: Tuple[str, ...] = ()
+    forbid_f32_roundtrip_on: Tuple[str, ...] = ()
+    max_lowerings: Optional[int] = None
+    arg_names: Tuple[str, ...] = ()
+    static_argnums: Tuple[int, ...] = ()
+
+    def donated_positions(self) -> Tuple[int, ...]:
+        """Positional indices (python signature order) of donated args."""
+        return tuple(self.arg_names.index(n) for n in self.donated)
+
+
+REGISTRY: Dict[str, InvariantSpec] = {}
+
+
+def declare_invariants(name: str, *, host_syncs: Optional[int] = None,
+                       donated: Tuple[str, ...] = (),
+                       forbid_f32_roundtrip_on: Tuple[str, ...] = (),
+                       max_lowerings: Optional[int] = None,
+                       static_argnums: Tuple[int, ...] = ()):
+    """Attach an :class:`InvariantSpec` to a jitted callable and record it
+    under ``name`` in the module registry. Returns the callable unchanged —
+    zero runtime cost on the hot path."""
+    def wrap(fn):
+        inner = getattr(fn, "__wrapped__", fn)
+        try:
+            arg_names = tuple(inspect.signature(inner).parameters)
+        except (TypeError, ValueError):
+            arg_names = ()
+        for n in donated:
+            if arg_names and n not in arg_names:
+                raise ValueError(
+                    f"declare_invariants({name!r}): donated arg {n!r} not "
+                    f"in signature {arg_names}")
+        spec = InvariantSpec(name=name, host_syncs=host_syncs,
+                             donated=tuple(donated),
+                             forbid_f32_roundtrip_on=tuple(
+                                 forbid_f32_roundtrip_on),
+                             max_lowerings=max_lowerings,
+                             arg_names=arg_names,
+                             static_argnums=tuple(static_argnums))
+        REGISTRY[name] = spec
+        try:
+            fn.__repro_invariants__ = spec
+        except (AttributeError, TypeError):
+            pass    # C-implemented callables without a __dict__ still work
+        return fn
+    return wrap
+
+
+def spec_of(fn) -> Optional[InvariantSpec]:
+    return getattr(fn, "__repro_invariants__", None)

@@ -11,6 +11,9 @@ collective-permute ops (a slight overcount for reduce-scatter, undercount for
 multi-hop all-gathers — consistent across variants, which is what the
 hillclimb needs). Ops inside loops are multiplied by the trip count when the
 while-loop bound is statically recoverable from scan structure.
+
+The HLO text grammar (shape regex, dtype widths) is shared with the
+compiled-plane invariant checker — ``analysis.hlo_core`` owns it.
 """
 from __future__ import annotations
 
@@ -18,24 +21,11 @@ import dataclasses
 import re
 from typing import Dict
 
-DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
-    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
-}
+from ..analysis.hlo_core import (DTYPE_BYTES, SHAPE_RE as _SHAPE_RE,
+                                 shape_bytes as _shape_bytes)
 
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def _shape_bytes(dtype: str, dims: str) -> int:
-    n = 1
-    for d in dims.split(","):
-        if d:
-            n *= int(d)
-    return n * DTYPE_BYTES.get(dtype, 4)
 
 
 def _result_bytes(line: str) -> int:

@@ -72,6 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.invariants import declare_invariants
 from repro.kernels.kv_layout import page_count
 from repro.models import lm
 from repro.serving import sampling as smp
@@ -140,6 +141,18 @@ def _kv_bytes(pool) -> int:
     return sum(leaf.nbytes
                for entry in pool["caches"] if sp.is_kv_entry(entry)
                for leaf in jax.tree_util.tree_leaves(entry))
+
+
+def _pick_token(logits_row, pos: int, sampler) -> int:
+    """Host-side token pick shared by every single-row emission surface
+    (engine prefill tails, serial_decode). ``sampler=None`` is greedy:
+    host ``np.argmax``, the pre-sampling bitwise path. A non-None sampler
+    is the jitted position-keyed draw — ``pos`` is the absolute position
+    the token's KV will be written at, the key-derivation rule every
+    sampling surface shares."""
+    if sampler is None:
+        return int(np.argmax(np.asarray(logits_row)))
+    return int(sampler(logits_row, jnp.int32(pos)))
 
 
 class Engine:
@@ -376,26 +389,48 @@ class Engine:
                 return {"caches": caches, "pos": pool["pos"]}
             return one(pool), (None if dpool is None else one(dpool))
 
-        self._reset_fn = jax.jit(_reset, donate_argnums=(0,))
-        self._prefill_fn = jax.jit(_prefill, donate_argnums=(1,),
-                                   static_argnums=(5,))
-        self._decode_fn = jax.jit(_decode, donate_argnums=(1,),
-                                  static_argnums=(7,))
-        self._spec_prefill_fn = jax.jit(_spec_prefill, donate_argnums=(2, 3),
-                                        static_argnums=(7,))
-        self._copy_page_fn = jax.jit(_copy_page, donate_argnums=(0, 1))
+        # every hot path declares its compiled-artifact invariants next to
+        # its jit (DESIGN.md §15): scripts/check_static.py lowers these with
+        # representative shapes and walks the optimized HLO to enforce the
+        # claims. n_windows is the window-bucketing retrace bound: static
+        # windows are window_block multiples, so steady-state serving
+        # compiles at most max_seq/window_block decode variants (prefill
+        # additionally varies over the <= prefill_chunk tail-chunk widths).
+        n_windows = -(-max_seq // self.scheduler.cfg.window_block)
+        n_chunks = self.scheduler.cfg.prefill_chunk
+        self._reset_fn = declare_invariants(
+            "engine.reset", host_syncs=1, donated=("pool",),
+            forbid_f32_roundtrip_on=("kv",),
+            max_lowerings=2 if self.spec is not None else 1,
+        )(jax.jit(_reset, donate_argnums=(0,)))
+        self._prefill_fn = declare_invariants(
+            "engine.prefill", host_syncs=1, donated=("pool",),
+            forbid_f32_roundtrip_on=("kv",),
+            max_lowerings=n_windows * n_chunks, static_argnums=(5,),
+        )(jax.jit(_prefill, donate_argnums=(1,), static_argnums=(5,)))
+        self._decode_fn = declare_invariants(
+            "engine.decode", host_syncs=1, donated=("pool",),
+            forbid_f32_roundtrip_on=("kv",),
+            max_lowerings=n_windows, static_argnums=(7,),
+        )(jax.jit(_decode, donate_argnums=(1,), static_argnums=(7,)))
+        self._spec_prefill_fn = declare_invariants(
+            "engine.spec_prefill", host_syncs=1, donated=("dpool", "vpool"),
+            forbid_f32_roundtrip_on=("kv",),
+            max_lowerings=n_windows * n_chunks, static_argnums=(7,),
+        )(jax.jit(_spec_prefill, donate_argnums=(2, 3), static_argnums=(7,)))
+        self._copy_page_fn = declare_invariants(
+            "engine.copy_page", host_syncs=1, donated=("pool", "dpool"),
+            forbid_f32_roundtrip_on=("kv",),
+        )(jax.jit(_copy_page, donate_argnums=(0, 1)))
         self._sample_fn = jax.jit(lambda lg, p: smp.sample(
             lg, scfg, smp.token_key(base_key, p)))
 
     def _first_token(self, logits_row, pos: int) -> int:
         """Token emitted from a prefill tail chunk's last-position logits.
-        ``pos`` is the prompt length — the position the token's KV will be
-        written at, the key-derivation rule every sampling surface shares.
-        Greedy stays on host ``np.argmax`` (the pre-sampling bitwise
-        path)."""
-        if self.sampling.is_greedy:
-            return int(np.argmax(np.asarray(logits_row)))
-        return int(self._sample_fn(logits_row, jnp.int32(pos)))
+        ``pos`` is the prompt length; see ``_pick_token`` for the key rule."""
+        return _pick_token(logits_row, pos,
+                           None if self.sampling.is_greedy
+                           else self._sample_fn)
 
     # ------------------------------------------------------------ paged KV
     def _note_pages(self) -> None:
@@ -1042,9 +1077,7 @@ def serial_decode(params, cfg, prompt: Sequence[int], max_new_tokens: int,
     sampler = None if scfg.is_greedy else _serial_sampler(scfg)
 
     def pick(logits_row, pos: int) -> int:
-        if sampler is None:
-            return int(np.argmax(np.asarray(logits_row)))
-        return int(sampler(logits_row, jnp.int32(pos)))
+        return _pick_token(logits_row, pos, sampler)
 
     logits, state = step(params, state, jnp.asarray(prompt[None]))
     out: List[int] = []

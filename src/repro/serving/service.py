@@ -434,7 +434,10 @@ class HttpFrontDoor:
         self.request_timeout_s = request_timeout_s
         self.watchdog_s = watchdog_s
         self.on_wedged = on_wedged or self._exit_wedged
-        self._beat = time.monotonic()        # pump heartbeat (watchdog)
+        # the heartbeat measures REAL wall time even under an injected test
+        # clock: the watchdog exists to catch a wedged pump thread, and a
+        # frozen fake clock must not mask one
+        self._beat = time.monotonic()   # repro-lint: disable=no-raw-clock
         self.lock = threading.Lock()
         self._stop_pump = threading.Event()
         self._kick = threading.Event()       # wakes an idle-parked pump
@@ -480,7 +483,8 @@ class HttpFrontDoor:
         hand. Each iteration flushes everything it staged (token events +
         operation replies) to the event loop in one batch."""
         while not self._stop_pump.is_set():
-            self._beat = time.monotonic()
+            # wall time on purpose — see _beat in __init__
+            self._beat = time.monotonic()  # repro-lint: disable=no-raw-clock
             with self.lock:
                 self._serve_inbox()
                 busy = self.service.has_work
@@ -508,7 +512,9 @@ class HttpFrontDoor:
         engine step / inbox op has been stuck for ``watchdog_s``."""
         period = min(max(self.watchdog_s / 4.0, 0.01), 1.0)
         while not self._stop_pump.wait(period):
-            stale = time.monotonic() - self._beat
+            # wall time on purpose — see _beat in __init__
+            stale = (time.monotonic()      # repro-lint: disable=no-raw-clock
+                     - self._beat)
             if stale > self.watchdog_s:
                 self.on_wedged(
                     f"[http] WATCHDOG: pump made no progress for "

@@ -46,6 +46,7 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.invariants import declare_invariants
 from repro.models import lm
 from repro.serving import sampling as smp
 from repro.serving import state_pool as sp
@@ -124,9 +125,16 @@ class SpecDecoder:
         self.draft_ctx = draft_ctx or self.ctx
         self.sampling = sampling or smp.GREEDY
         self.paged = paged
-        self.spec_fn = jax.jit(self._build_spec(),
-                               static_argnums=(10, 11, 12),
-                               donate_argnums=(2, 3))
+        # §15: one host sync per speculative dispatch, both pools updated
+        # in place, bf16 KV never round-trips through f32 (the drafter's
+        # INT8 arena and the verifier's uint16 arena alike)
+        self.spec_fn = declare_invariants(
+            "engine.spec", host_syncs=1, donated=("dpool", "vpool"),
+            forbid_f32_roundtrip_on=("kv",),
+            static_argnums=(10, 11, 12),
+        )(jax.jit(self._build_spec(),
+                  static_argnums=(10, 11, 12),
+                  donate_argnums=(2, 3)))
 
     def plan(self, max_pos: int, max_seq: int,
              max_budget: int) -> Tuple[int, int]:

@@ -1,0 +1,95 @@
+"""bench_diff.py one-sided population changes must annotate, not crash.
+
+The diff script walks the intersection of baseline and new bench data for
+regressions; names present on only ONE side used to vanish silently. A
+removed variant is exactly the failure mode the trajectory view exists to
+surface (a bench that quietly stopped running), so both directions now
+print notice-level annotations — and always exit 0, because population
+changes are usually the PR's whole point.
+"""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def bench_diff():
+    spec = importlib.util.spec_from_file_location(
+        "bench_diff", ROOT / "scripts" / "bench_diff.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _bench(rows=(), variants=None):
+    return {"rows": list(rows),
+            "serving": {"variants": dict(variants or {})}}
+
+
+def _run(bench_diff, tmp_path, new, base):
+    n, b = tmp_path / "new.json", tmp_path / "base.json"
+    n.write_text(json.dumps(new))
+    b.write_text(json.dumps(base))
+    return bench_diff.main([str(n), str(b)])
+
+
+def test_new_variant_annotated(bench_diff, tmp_path, capsys):
+    new = _bench(variants={"batched": {"tokens_per_s": 100.0},
+                           "paged": {"tokens_per_s": 90.0}})
+    base = _bench(variants={"batched": {"tokens_per_s": 100.0}})
+    assert _run(bench_diff, tmp_path, new, base) == 0
+    out = capsys.readouterr().out
+    assert "::notice::serving/paged: new variant" in out
+    assert "::warning::" not in out
+
+
+def test_removed_variant_annotated(bench_diff, tmp_path, capsys):
+    new = _bench(variants={"batched": {"tokens_per_s": 100.0}})
+    base = _bench(variants={"batched": {"tokens_per_s": 100.0},
+                            "speculative": {"tokens_per_s": 140.0}})
+    assert _run(bench_diff, tmp_path, new, base) == 0
+    out = capsys.readouterr().out
+    assert "::notice::serving/speculative: variant removed" in out
+    assert "::warning::" not in out
+
+
+def test_new_and_removed_rows_annotated(bench_diff, tmp_path, capsys):
+    new = _bench(rows=[{"name": "decode_bf16", "us_per_call": 10.0},
+                       {"name": "decode_int8", "us_per_call": 8.0}])
+    base = _bench(rows=[{"name": "decode_bf16", "us_per_call": 10.0},
+                        {"name": "prefill_bf16", "us_per_call": 55.0}])
+    assert _run(bench_diff, tmp_path, new, base) == 0
+    out = capsys.readouterr().out
+    assert "::notice::decode_int8: new row" in out
+    assert "::notice::prefill_bf16: row removed (was 55.0us" in out
+    assert "::warning::" not in out
+
+
+def test_shared_names_still_diffed_alongside_one_sided(
+        bench_diff, tmp_path, capsys):
+    # a one-sided entry must not mask a genuine regression on shared names
+    new = _bench(rows=[{"name": "decode", "us_per_call": 20.0},
+                       {"name": "fresh", "us_per_call": 1.0}],
+                 variants={"batched": {"tokens_per_s": 50.0}})
+    base = _bench(rows=[{"name": "decode", "us_per_call": 10.0}],
+                  variants={"batched": {"tokens_per_s": 100.0},
+                            "gone": {"tokens_per_s": 1.0}})
+    assert _run(bench_diff, tmp_path, new, base) == 0
+    out = capsys.readouterr().out
+    assert "::warning::decode slowed: 10.0us -> 20.0us" in out
+    assert "::warning::serving/batched tokens/s regressed" in out
+    assert "::notice::fresh: new row" in out
+    assert "::notice::serving/gone: variant removed" in out
+
+
+def test_identical_benches_quiet(bench_diff, tmp_path, capsys):
+    b = _bench(rows=[{"name": "decode", "us_per_call": 10.0}],
+               variants={"batched": {"tokens_per_s": 100.0}})
+    assert _run(bench_diff, tmp_path, b, b) == 0
+    out = capsys.readouterr().out
+    assert "::notice::" not in out and "::warning::" not in out
+    assert "no regressions" in out

@@ -122,6 +122,29 @@ def test_engine_matches_decode_step_on_artifact(setup):
         assert res[uid].tokens == ref
 
 
+def test_xlstm_engine_matches_serial_token_identical():
+    """Fully recurrent config (xLSTM mLSTM/sLSTM blocks, zero attention
+    layers): every pool entry keeps its slot axis and routes through the
+    ``is_kv_entry == False`` branch of the slot gather/scatter — the
+    discriminator path that KV-centric configs never touch. Engine output
+    must still equal serial decode token-for-token, with staggered
+    arrivals and chunked prefill interleaving decode."""
+    cfg = configs.get_smoke_config("xlstm-1.3b")
+    params = lm.init_params(jax.random.PRNGKey(1), cfg)
+    # the whole pool must be recurrent state: no entry may look like KV
+    pool = sp.init_pool(cfg, 2, 64, default_ctx(), params=params)
+    assert pool["caches"] and all(not sp.is_kv_entry(e)
+                                  for e in pool["caches"])
+    prompts = _prompts(cfg, [11, 6, 17], seed=5)
+    eng = Engine(params, cfg, n_slots=2, max_seq=64,
+                 sched=SchedulerConfig(prefill_chunk=5))
+    res = eng.run([Request(prompt=p, max_new_tokens=6) for p in prompts],
+                  arrival_ticks=[0, 2, 4])
+    for idx, prompt in enumerate(prompts):
+        ref = serial_decode(params, cfg, prompt, 6, max_seq=64)
+        assert res[idx].tokens == ref, (idx, res[idx].tokens, ref)
+
+
 # ------------------------------------------------------------------ pool ops
 def test_state_pool_gather_scatter_roundtrip(setup):
     cfg, params = setup

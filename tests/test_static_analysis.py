@@ -1,0 +1,323 @@
+"""Static-analysis subsystem: both planes, seeded violations first.
+
+The acceptance bar for ``repro.analysis`` is NOT "the real tree passes" —
+a checker that cannot fail is decoration. Every compiled-plane check is
+exercised against a fixture callable seeded with the exact historical bug
+class it exists to catch (the §12 f32 DUS sandwich, a dropped donation,
+a hidden host callback, an unbounded retrace), and every AST rule against
+a known-bad and a known-good snippet plus the inline disable escape
+hatch. The real tree passing ``check_static.py`` is then the LAST
+assertion, not the only one.
+"""
+import dataclasses
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import astlint, hlo_core, hlo_checks
+from repro.analysis.invariants import (REGISTRY, declare_invariants,
+                                       spec_of)
+from repro.analysis.report import Violation, render
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+# ------------------------------------------------------------- hlo_core
+def _dus_fn(cache, upd, i):
+    return jax.lax.dynamic_update_slice(cache, upd, (i, jnp.int32(0)))
+
+
+def test_hlo_core_parses_instructions_across_computations():
+    jf = jax.jit(_dus_fn, donate_argnums=(0,))
+    text = jf.lower(jnp.zeros((16, 32), jnp.float32),
+                    jnp.zeros((1, 32), jnp.float32),
+                    jnp.int32(0)).compile().as_text()
+    instrs = hlo_core.parse_instructions(text)
+    assert instrs, "parser produced nothing from a real compiled dump"
+    dus = [i for i in instrs if i.opcode == "dynamic-update-slice"]
+    assert dus, "dynamic-update-slice not found (fusion bodies walked?)"
+    assert any(i.dims == (16, 32) and i.dtype == "f32" for i in dus)
+    # operand linkage: every instruction's operands name other results
+    by_name = hlo_core.index_by_name(instrs)
+    assert any(o in by_name for i in instrs for o in i.operands)
+
+
+def test_hlo_core_alias_map_roundtrip():
+    donating = jax.jit(_dus_fn, donate_argnums=(0,))
+    plain = jax.jit(_dus_fn)
+    args = (jnp.zeros((8, 4), jnp.float32), jnp.zeros((1, 4), jnp.float32),
+            jnp.int32(0))
+    t_d = donating.lower(*args).compile().as_text()
+    t_p = plain.lower(*args).compile().as_text()
+    assert hlo_core.aliased_param_numbers(t_d)
+    assert not hlo_core.aliased_param_numbers(t_p)
+    params = hlo_core.parse_entry_params(t_d)
+    assert "f32[8,4]" in params and "f32[1,4]" in params
+
+
+# ------------------------------ seeded violations, one per check (§15)
+def test_f32_roundtrip_detector_fires_on_bf16_store():
+    """The §12 bug class as a fixture: a plain bf16 cache DUS lowers on
+    XLA CPU through float-normalization f32 converts — the checker must
+    flag it against the declared cache size."""
+    cache = jnp.zeros((16, 32), jnp.bfloat16)
+    fn = declare_invariants(
+        "fixture.bf16_store", host_syncs=1,
+        forbid_f32_roundtrip_on=("kv",))(
+        jax.jit(_dus_fn, donate_argnums=(0,)))
+    v = hlo_checks.check_callable(
+        fn, (cache, jnp.zeros((1, 32), jnp.bfloat16), jnp.int32(0)),
+        where="fixture.bf16_store", protected_counts=[cache.size])
+    assert [x.rule for x in v] == ["f32-roundtrip"], render(v)
+
+
+def test_f32_roundtrip_passes_uint16_store():
+    """The PR 6/8 fix pattern — bf16 bit patterns stored as raw uint16
+    words (kernels.kv_layout.to_store) — must pass the same check."""
+    def store(cache, upd, i):
+        raw = jax.lax.bitcast_convert_type(upd, jnp.uint16)
+        return jax.lax.dynamic_update_slice(cache, raw, (i, jnp.int32(0)))
+    cache = jnp.zeros((16, 32), jnp.uint16)
+    fn = declare_invariants(
+        "fixture.u16_store", host_syncs=1,
+        forbid_f32_roundtrip_on=("kv",))(
+        jax.jit(store, donate_argnums=(0,)))
+    v = hlo_checks.check_callable(
+        fn, (cache, jnp.zeros((1, 32), jnp.bfloat16), jnp.int32(0)),
+        where="fixture.u16_store", protected_counts=[cache.size])
+    assert v == [], render(v)
+
+
+def test_donation_check_fires_when_donation_removed():
+    def bump(pool, x):
+        return {k: v + x for k, v in pool.items()}
+    pool = {"a": jnp.zeros((4,), jnp.float32),
+            "b": jnp.zeros((2, 3), jnp.float32)}
+    x = jnp.ones((), jnp.float32)
+    # donation declared but the jit forgot donate_argnums: both leaves flag
+    broken = declare_invariants("fixture.nodonate", donated=("pool",))(
+        jax.jit(bump))
+    v = hlo_checks.check_callable(broken, (pool, x),
+                                  where="fixture.nodonate")
+    assert {x_.rule for x_ in v} == {"donation"} and len(v) == 2, render(v)
+    # with donate_argnums present the same declaration passes
+    ok = declare_invariants("fixture.donate", donated=("pool",))(
+        jax.jit(bump, donate_argnums=(0,)))
+    assert hlo_checks.check_callable(ok, (pool, x),
+                                     where="fixture.donate") == []
+
+
+def test_host_sync_check_fires_on_hidden_callback():
+    def leaky(x):
+        jax.debug.callback(lambda v: None, x)
+        return x * 2
+    fn = declare_invariants("fixture.sync", host_syncs=1)(jax.jit(leaky))
+    v = hlo_checks.check_callable(fn, (jnp.zeros((4,), jnp.float32),),
+                                  where="fixture.sync")
+    assert [x.rule for x in v] == ["host-syncs"], render(v)
+    clean = declare_invariants("fixture.nosync", host_syncs=1)(
+        jax.jit(lambda x: x * 2))
+    assert hlo_checks.check_callable(
+        clean, (jnp.zeros((4,), jnp.float32),), where="fixture.nosync") == []
+
+
+# ----------------------------------------------- live-engine scenarios
+@pytest.fixture(scope="module")
+def engine():
+    return hlo_checks.build_scenario(quantized_kv=False, paged=False)
+
+
+def test_real_engine_hot_paths_pass_all_checks(engine):
+    v = hlo_checks.check_engine(engine, "bf16+contig")
+    assert v == [], render(v)
+
+
+def test_retrace_budget_fires_on_seeded_bound(engine):
+    """Drive the scripted workload, then shrink the decode path's declared
+    budget to 0 on the live callable — the check must fire; restoring the
+    real window-bucketing bound must pass."""
+    real = spec_of(engine._decode_fn)
+    assert real is not None and real.max_lowerings is not None
+    v = hlo_checks.check_retrace(engine, "bf16+contig")
+    assert v == [], render(v)        # real bound holds after the workload
+    engine._decode_fn.__repro_invariants__ = dataclasses.replace(
+        real, max_lowerings=0)
+    try:
+        v = hlo_checks.check_retrace(engine, "bf16+contig")
+        assert [x.rule for x in v] == ["retrace-budget"], render(v)
+    finally:
+        engine._decode_fn.__repro_invariants__ = real
+
+
+def test_registry_records_engine_declarations(engine):
+    for name in ("engine.reset", "engine.prefill", "engine.decode"):
+        assert name in REGISTRY, sorted(REGISTRY)
+        assert REGISTRY[name].host_syncs == 1
+        assert "pool" in REGISTRY[name].donated
+    assert spec_of(engine._decode_fn).donated_positions() == (1,)
+
+
+def test_declare_invariants_rejects_unknown_arg():
+    with pytest.raises(ValueError):
+        declare_invariants("fixture.bad", donated=("nope",))(
+            lambda pool: pool)
+
+
+# ------------------------------------------------------------ AST lint
+_SERVING = "src/repro/serving/service.py"
+
+_CLOCK_BAD = """
+import time
+
+class Service:
+    def __init__(self, clock=time.monotonic):
+        self.clock = clock
+
+    def step(self):
+        return time.time()
+"""
+
+_CLOCK_GOOD = _CLOCK_BAD.replace("time.time()", "self.clock()")
+
+_CLOCK_DISABLED = _CLOCK_BAD.replace(
+    "time.time()", "time.time()  # repro-lint: disable=no-raw-clock")
+
+
+def test_no_raw_clock_fires_in_service_fixture():
+    """The seeded AST violation from the issue: time.time() in a
+    service.py that declares an injectable clock."""
+    v = astlint.lint_source(_CLOCK_BAD, _SERVING)
+    assert [x.rule for x in v] == ["no-raw-clock"]
+    assert astlint.lint_source(_CLOCK_GOOD, _SERVING) == []
+
+
+def test_no_raw_clock_inline_disable():
+    assert astlint.lint_source(_CLOCK_DISABLED, _SERVING) == []
+
+
+def test_no_raw_clock_skips_modules_without_clock_param():
+    src = "import time\n\ndef tick():\n    return time.monotonic()\n"
+    assert astlint.lint_source(src, _SERVING) == []
+
+
+_PUMP_BAD = """
+class Door:
+    async def _handle(self, req):
+        n = self.service.engine.max_seq          # read: allowed
+        self.service.engine.submit(req)          # call: pump-owned!
+
+    def _pump(self):
+        self.service.step()                      # sync pump thread: fine
+"""
+
+_PUMP_GOOD = """
+class Door:
+    async def _handle(self, req):
+        n = self.service.engine.max_seq
+        self._inbox.append(("submit", req))
+        return await self._ask("stats")
+"""
+
+
+def test_pump_single_owner_rule():
+    v = astlint.lint_source(_PUMP_BAD, _SERVING)
+    assert [x.rule for x in v] == ["pump-single-owner"]
+    assert "submit" in v[0].message
+    assert astlint.lint_source(_PUMP_GOOD, _SERVING) == []
+
+
+_HOT_BAD = """
+import jax
+import numpy as np
+
+def _decode(pool, tok):
+    n = int(tok.sum())                 # host sync inside the hot path
+    return np.asarray(pool), n
+
+_decode_fn = jax.jit(_decode, donate_argnums=(0,))
+"""
+
+_HOT_GOOD = """
+import jax
+import numpy as np
+
+def _decode(pool, tok):
+    return pool, tok * 2
+
+_decode_fn = jax.jit(_decode, donate_argnums=(0,))
+
+def harvest(out):
+    return int(np.asarray(out).sum())  # outside jit: fine
+"""
+
+
+def test_no_host_sync_in_hot_path_rule():
+    v = astlint.lint_source(_HOT_BAD, "src/repro/serving/engine.py")
+    assert {x.rule for x in v} == {"no-host-sync-in-hot-path"}
+    assert len(v) == 2                 # int() and np.asarray
+    assert astlint.lint_source(_HOT_GOOD,
+                               "src/repro/serving/engine.py") == []
+
+
+_BENCH_BAD = "def gate(x):\n    assert x < 2.0\n"
+_BENCH_GOOD = ("def gate(x):\n"
+               "    assert x < 2.0, f'flat ratio {x:.2f} above 2.0'\n")
+
+
+def test_bench_gate_message_rule():
+    v = astlint.lint_source(_BENCH_BAD, "scripts/check_bench.py")
+    assert [x.rule for x in v] == ["bench-gate-message"]
+    assert astlint.lint_source(_BENCH_GOOD, "scripts/check_bench.py") == []
+    # the rule is scoped to check_bench.py — test files keep bare asserts
+    assert astlint.lint_source(_BENCH_BAD, "tests/test_foo.py") == []
+
+
+_DUP_BAD = """
+import numpy as np
+
+def first_token(row):
+    return int(np.argmax(np.asarray(row)))
+
+def pick(row):
+    return int(np.argmax(np.asarray(row)))
+"""
+
+_DUP_GOOD = """
+import numpy as np
+
+def _pick_token(row):
+    return int(np.argmax(np.asarray(row)))
+
+def first_token(row):
+    return _pick_token(row)
+"""
+
+
+def test_duplicate_hot_path_helper_rule():
+    v = astlint.lint_source(_DUP_BAD, "src/repro/serving/engine.py")
+    assert {x.rule for x in v} == {"duplicate-hot-path-helper"}
+    assert len(v) == 2                 # flagged at both sites
+    assert astlint.lint_source(_DUP_GOOD,
+                               "src/repro/serving/engine.py") == []
+
+
+# -------------------------------------------------- real tree + driver
+def test_astlint_real_tree_clean():
+    v = astlint.lint_tree(ROOT)
+    assert v == [], render(v)
+
+
+def test_check_static_driver_ast_plane(monkeypatch, capsys):
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "check_static", ROOT / "scripts" / "check_static.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    monkeypatch.setattr(sys, "argv", ["check_static.py", "--plane", "ast"])
+    assert mod.main() == 0
+    out = capsys.readouterr().out
+    assert "OK (0 violations)" in out

@@ -24,6 +24,28 @@ import sys
 
 TOK_S_WARN = 0.85   # serving variant tokens/s below this fraction of base
 US_WARN = 1.25      # row us_per_call above this multiple of base
+HIST_DRIFT_WARN = 0.25   # fraction of bucket mass that moved between the
+                         # baseline and new latency/TTFT histograms (L1/2)
+
+
+def _hist_drift(n_h, b_h):
+    """Shape drift between two BENCH histogram dicts ({"le", "counts",
+    ...}, the telemetry.Histogram.to_dict form): half the L1 distance
+    between normalized bucket masses — 0 when shapes match, 1 when all
+    mass moved. None when either side is missing, empty, or the bucket
+    edges differ (not comparable)."""
+    if not (isinstance(n_h, dict) and isinstance(b_h, dict)):
+        return None
+    if n_h.get("le") != b_h.get("le"):
+        return None
+    nc, bc = n_h.get("counts"), b_h.get("counts")
+    if not (isinstance(nc, list) and isinstance(bc, list)
+            and len(nc) == len(bc)):
+        return None
+    nt, bt = sum(nc), sum(bc)
+    if not nt or not bt:
+        return None
+    return 0.5 * sum(abs(a / nt - b / bt) for a, b in zip(nc, bc))
 
 
 def _load(path: str):
@@ -66,6 +88,15 @@ def main(argv) -> int:
             print(f"::warning::serving/{name} tokens/s regressed: "
                   f"{b_tok:.1f} -> {n_tok:.1f} ({frac:.2f}x baseline)")
             warned += 1
+        # distribution-shape trajectory: percentile gates can hold while
+        # the whole latency/TTFT distribution quietly shifts buckets
+        for key in ("latency_hist", "ttft_hist"):
+            drift = _hist_drift(nv[name].get(key), bv[name].get(key))
+            if drift is not None and drift > HIST_DRIFT_WARN:
+                print(f"::notice::serving/{name} {key} shape drifted: "
+                      f"{drift:.0%} of bucket mass moved vs baseline "
+                      f"(> {HIST_DRIFT_WARN:.0%}; same log-spaced edges "
+                      f"— compare the two runs' histograms)")
 
     # http variants carry trajectory signals beyond raw tokens/s: transport
     # efficiency (goodput as a fraction of the same engine in-process) and

@@ -37,7 +37,10 @@ sys.path.insert(0, "src")
 
 from repro.serving import faults  # noqa: E402
 
-from http_smoke import http_exchange, parse_sse  # noqa: E402
+# importing http_smoke also installs its atexit child-reaper + SIGTERM
+# handler; registering our server in _children means no fail() path (or
+# external timeout kill) can leak it to poison later benches
+from http_smoke import _children, http_exchange, parse_sse  # noqa: E402
 
 BOOT_TIMEOUT_S = 420
 STREAM_TIMEOUT_S = 120
@@ -103,6 +106,7 @@ def main() -> int:
            "--watchdog-s", "120"]
     proc = subprocess.Popen(cmd, stdout=subprocess.PIPE,
                             stderr=subprocess.STDOUT, text=True)
+    _children.append(proc)
     port, t0 = None, time.monotonic()
     for line in proc.stdout:
         print(f"[server] {line.rstrip()}")

@@ -70,6 +70,9 @@ PAGED_MIN_RATIO = 0.90     # was 0.95 while the contiguous baseline paid a
 PAGED_BYTES_MAX = 0.6
 HTTP_MIN_RATIO = 0.9        # http_stream goodput vs in-process tokens/s
 HTTP_LOW_SHED_MAX = 0.25    # shed-rate ceiling at the below-knee sweep point
+TELEMETRY_MAX_OVERHEAD = 0.03   # metrics/histogram plane may cost at most
+                                # 3% of http_stream tokens/s vs the
+                                # telemetry-off control phase
 CHAOS_P95_MAX = 2.0         # survivor p95 vs fault-free p95; survivors
                             # usually run FASTER (faulted slots free early),
                             # so this only catches a fault-handling stall
@@ -250,6 +253,21 @@ def check_http(variants: dict) -> None:
         fail(f"http_stream had {v['deadline_violations']} deadline "
              f"violations, threshold 0 — no deadlines are set on this "
              f"workload")
+    # telemetry-overhead gate: the registry-reads-live-dicts design means
+    # the metrics plane must be ~free on the hot path; the bench times a
+    # telemetry-off control interleaved with the instrumented phase
+    if "telemetry_overhead_ratio" in v:
+        r = v["telemetry_overhead_ratio"]
+        if not isinstance(r, (int, float)):
+            fail(f"http_stream: telemetry_overhead_ratio must be numeric, "
+                 f"got {r!r}")
+        if r < 1.0 - TELEMETRY_MAX_OVERHEAD:
+            fail(f"http_stream with telemetry runs at {r:.3f}x the "
+                 f"telemetry-off goodput "
+                 f"({v['tokens_per_s']:.1f} vs "
+                 f"{v.get('tokens_per_s_telemetry_off', 0):.1f} tok/s; "
+                 f"floor {1.0 - TELEMETRY_MAX_OVERHEAD:.2f}x) — the "
+                 f"metrics/span plane leaked into the hot path")
     o = variants["http_overload"]
     sweep = o.get("sweep") or []
     if len(sweep) < 2:
@@ -280,11 +298,15 @@ def check_http(variants: dict) -> None:
         fail(f"http_overload never shed (sheds="
              f"{[p['shed'] for p in sweep]}) — the sweep must cross the "
              f"knee to prove the admission bound engages")
+    tele = ""
+    if "telemetry_overhead_ratio" in v:
+        tele = (f", telemetry {v['telemetry_overhead_ratio']:.3f}x off >= "
+                f"{1.0 - TELEMETRY_MAX_OVERHEAD:.2f}")
     print(f"check_bench: http OK (stream goodput "
           f"{v['goodput_ratio']:.2f}x inproc >= {HTTP_MIN_RATIO}, "
           f"overload sheds={[p['shed'] for p in sweep]} "
           f"violations={[p['deadline_violations'] for p in sweep]} over "
-          f"{len(sweep)} points)")
+          f"{len(sweep)} points{tele})")
 
 
 def check_chaos(variants: dict) -> None:

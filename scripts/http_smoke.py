@@ -10,18 +10,43 @@ path):
   * the server comes up and prints its bound port (``--port 0``);
   * POST /v1/generate answers 200 text/event-stream with N ``token``
     events (indices 0..N-1) followed by exactly one ``done`` event;
+  * GET /metrics scraped MID-STREAM (after the first token, before done)
+    serves valid Prometheus text exposition covering every metric family
+    the telemetry schema declares — the observability contract of §16;
   * /healthz reports the completed request;
   * SIGTERM drains and the process exits 0 with the drain log line.
 """
 from __future__ import annotations
 
+import atexit
 import json
+import pathlib
 import re
 import signal
 import socket
 import subprocess
 import sys
 import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+from repro.telemetry import parse_exposition, schema  # noqa: E402
+
+# the server child must NEVER outlive this script: a leaked `serve` process
+# steals CPU from everything that runs after it (it once polluted hours of
+# bench numbers). atexit covers every fail() path; the SIGTERM handler
+# turns an external timeout kill into a normal exit so atexit still runs.
+_children: list = []
+
+
+def _reap() -> None:
+    for p in _children:
+        if p.poll() is None:
+            p.kill()
+            p.wait()
+
+
+atexit.register(_reap)
+signal.signal(signal.SIGTERM, lambda *_a: sys.exit(143))
 
 NEW_TOKENS = 6
 BOOT_TIMEOUT_S = 420          # model init + warmup jit compile on cold CPU
@@ -51,6 +76,51 @@ def http_exchange(port: int, request: bytes, timeout_s: float) -> bytes:
     return b"".join(chunks)
 
 
+def stream_and_scrape(port: int, request: bytes, timeout_s: float):
+    """Send the generate request, and as soon as the first ``event:
+    token`` frame lands — i.e. while the stream is live and the request
+    is mid-flight — scrape ``GET /metrics`` over a second connection.
+    Returns (full SSE bytes, exposition text scraped mid-stream)."""
+    scraped = None
+    with socket.create_connection(("127.0.0.1", port),
+                                  timeout=timeout_s) as s:
+        s.sendall(request)
+        buf = bytearray()
+        while True:
+            b = s.recv(65536)
+            if not b:
+                break
+            buf += b
+            if scraped is None and b"event: token" in buf:
+                raw = http_exchange(
+                    port, b"GET /metrics HTTP/1.1\r\nHost: s\r\n\r\n", 30)
+                head, _, body = raw.partition(b"\r\n\r\n")
+                if not head.startswith(b"HTTP/1.1 200"):
+                    fail(f"/metrics status: {head.splitlines()[0]!r}")
+                if b"text/plain" not in head or b"version=0.0.4" not in head:
+                    fail(f"/metrics content type missing exposition tag: "
+                         f"{head!r}")
+                scraped = body.decode()
+    return bytes(buf), scraped
+
+
+def check_exposition(text: str) -> int:
+    """Strict-parse the scrape and assert every declared metric family is
+    present with a TYPE line (parse_exposition raises on malformed
+    lines — that IS the format validation)."""
+    parsed = parse_exposition(text)
+    missing = [n for n in schema.metric_names()
+               if n not in parsed["types"]]
+    if missing:
+        fail(f"/metrics missing declared families: {missing}")
+    submitted = parsed["samples"].get(
+        (schema.SERVICE_PREFIX + "submitted", ()))
+    if not submitted or submitted < 1:
+        fail(f"/metrics mid-stream shows submitted={submitted!r}, "
+             f"expected >= 1 (the streaming request itself)")
+    return len(parsed["types"])
+
+
 def parse_sse(raw: bytes):
     head, _, payload = raw.partition(b"\r\n\r\n")
     events = []
@@ -66,6 +136,7 @@ def main() -> int:
            "--port", "0", "--queue-depth", "4"]
     proc = subprocess.Popen(cmd, stdout=subprocess.PIPE,
                             stderr=subprocess.STDOUT, text=True)
+    _children.append(proc)
     port, t0 = None, time.monotonic()
     for line in proc.stdout:
         print(f"[server] {line.rstrip()}")
@@ -84,10 +155,15 @@ def main() -> int:
 
     body = json.dumps({"prompt_len": 12,
                        "max_new_tokens": NEW_TOKENS}).encode()
-    raw = http_exchange(port, (
+    raw, exposition = stream_and_scrape(port, (
         f"POST /v1/generate HTTP/1.1\r\nHost: s\r\n"
         f"Content-Length: {len(body)}\r\n\r\n").encode() + body,
         STREAM_TIMEOUT_S)
+    if exposition is None:
+        fail("stream finished without a mid-stream /metrics scrape", proc)
+    n_families = check_exposition(exposition)
+    print(f"http_smoke: mid-stream /metrics OK ({n_families} families, "
+          f"all {len(schema.metric_names())} declared present)")
     head, events = parse_sse(raw)
     if not head.startswith("HTTP/1.1 200"):
         fail(f"status line: {head.splitlines()[0]!r}", proc)

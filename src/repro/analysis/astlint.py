@@ -1,6 +1,6 @@
 """Repo-specific AST lint (analysis plane 2). stdlib ``ast`` only.
 
-Five rules, each encoding a serving-stack discipline that an ordinary
+Six rules, each encoding a serving-stack discipline that an ordinary
 linter cannot know about:
 
   no-raw-clock              a ``serving/`` module that declares an
@@ -28,11 +28,21 @@ linter cannot know about:
                             appear in at most one function per module —
                             the copy-paste that let two emission paths
                             drift apart.
+  stats-schema              any ``stats["key"]`` written in ``serving/``
+                            (subscript assignment or a ``self.stats =
+                            {...}`` dict literal) must be declared in
+                            ``repro.telemetry.schema`` — ``GET /metrics``
+                            renders every stats key, so an undeclared key
+                            would silently fall off the exposition (the
+                            registry raises at Service construction, but
+                            only on the code path that runs; the lint
+                            catches every write site statically).
 
 Escape hatch: append ``# repro-lint: disable=<rule>[,<rule>...]`` (or
 ``disable=all``) to the flagged line. Every disable is deliberate and
-greppable — the watchdog heartbeat in ``service.py`` legitimately reads
-the wall clock and carries exactly this comment.
+greppable. (The watchdog heartbeat's wall-clock reads no longer need
+one: they go through ``repro.telemetry.clock.wall_clock``, the single
+sanctioned raw-clock helper, instead of per-site escapes.)
 """
 from __future__ import annotations
 
@@ -44,7 +54,7 @@ from typing import Dict, Iterable, List, Optional, Set, Tuple
 from .report import Violation
 
 RULES = ("no-raw-clock", "pump-single-owner", "no-host-sync-in-hot-path",
-         "bench-gate-message", "duplicate-hot-path-helper")
+         "bench-gate-message", "duplicate-hot-path-helper", "stats-schema")
 
 _DISABLE_RE = re.compile(r"#\s*repro-lint:\s*disable=([\w\-,\s]+)")
 
@@ -209,6 +219,56 @@ def _rule_duplicate_helper(tree: ast.AST) -> List[Tuple[int, str]]:
         for fn, line in sites]
 
 
+def _declared_stat_keys() -> Optional[frozenset]:
+    """The telemetry schema's declared stats keys, or None when the
+    schema is unimportable (a bare checkout linting fixture snippets —
+    the rule then reports nothing rather than everything)."""
+    try:
+        from repro.telemetry.schema import DECLARED_STAT_KEYS
+        return DECLARED_STAT_KEYS
+    except Exception:
+        return None
+
+
+def _rule_stats_schema(tree: ast.AST) -> List[Tuple[int, str]]:
+    declared = _declared_stat_keys()
+    if declared is None:
+        return []
+    out = []
+
+    def flag(lineno: int, key: str) -> None:
+        out.append((
+            lineno,
+            f"stats key {key!r} is not declared in repro.telemetry.schema "
+            f"— GET /metrics renders every stats key, so declare it "
+            f"(kind + help) in ENGINE_STATS/SERVICE_STATS or it falls off "
+            f"the exposition"))
+
+    for node in ast.walk(tree):
+        targets = (node.targets if isinstance(node, ast.Assign)
+                   else [node.target] if isinstance(node, ast.AugAssign)
+                   else [])
+        for t in targets:
+            # stats["key"] = / += writes with a literal key
+            if (isinstance(t, ast.Subscript)
+                    and _attr_chain(t.value)[-1] == "stats"
+                    and isinstance(t.slice, ast.Constant)
+                    and isinstance(t.slice.value, str)
+                    and t.slice.value not in declared):
+                flag(t.lineno, t.slice.value)
+            # self.stats = {...} dict-literal initializers
+            if (isinstance(node, ast.Assign)
+                    and isinstance(node.value, ast.Dict)
+                    and isinstance(t, (ast.Attribute, ast.Name))
+                    and _attr_chain(t)[-1] == "stats"):
+                for k in node.value.keys:
+                    if (isinstance(k, ast.Constant)
+                            and isinstance(k.value, str)
+                            and k.value not in declared):
+                        flag(k.lineno, k.value)
+    return out
+
+
 # ----------------------------------------------------------------- driver
 def rules_for(filename: str) -> Tuple[str, ...]:
     """Which rules apply to a file, by its repo-relative path."""
@@ -216,7 +276,7 @@ def rules_for(filename: str) -> Tuple[str, ...]:
     out: List[str] = []
     if "serving" in p.parts:
         out += ["no-raw-clock", "no-host-sync-in-hot-path",
-                "duplicate-hot-path-helper"]
+                "duplicate-hot-path-helper", "stats-schema"]
         if p.name == "service.py":
             out.append("pump-single-owner")
     if p.name == "check_bench.py":
@@ -230,6 +290,7 @@ _RULE_FNS = {
     "no-host-sync-in-hot-path": _rule_no_host_sync,
     "bench-gate-message": _rule_bench_gate_message,
     "duplicate-hot-path-helper": _rule_duplicate_helper,
+    "stats-schema": _rule_stats_schema,
 }
 
 

@@ -107,6 +107,52 @@ def acquire_params(args, cfg, ctx, log=print):
 
 
 # ------------------------------------------------------------------ engine
+def _attach_tracer(eng, trace_dir):
+    """Hang a span recorder off the engine when ``--trace-dir`` asks for
+    one. The recorder is a passive sink — the engine stamps every event
+    with its own injectable clock, so attaching it costs nothing until
+    events actually flow."""
+    if not trace_dir:
+        return None
+    from repro import telemetry
+    tracer = telemetry.SpanRecorder()
+    eng.tracer = tracer
+    return tracer
+
+
+def _write_tracer(tracer, trace_dir, log):
+    if tracer is None:
+        return
+    from repro import telemetry
+    trace_path, jsonl_path = telemetry.write_trace(trace_dir, tracer)
+    log(f"[trace] wrote {trace_path} (Perfetto/chrome://tracing) and "
+        f"{jsonl_path}")
+
+
+def _start_profiler(profile_dir, log) -> bool:
+    """``--profile-dir``: wrap the engine run in ``jax.profiler.trace``.
+    Gated — some backends ship without profiler support, and a missing
+    profiler must degrade to a log line, not kill the serve."""
+    if not profile_dir:
+        return False
+    try:
+        jax.profiler.start_trace(profile_dir)
+        return True
+    except Exception as e:                          # noqa: BLE001
+        log(f"[profile] jax.profiler unavailable ({e}); continuing without")
+        return False
+
+
+def _stop_profiler(started: bool, profile_dir, log) -> None:
+    if not started:
+        return
+    try:
+        jax.profiler.stop_trace()
+        log(f"[profile] device profile written under {profile_dir}")
+    except Exception as e:                          # noqa: BLE001
+        log(f"[profile] stop_trace failed ({e})")
+
+
 def load_trace(path: str, cfg, seed: int = 0):
     """JSONL request trace: one object per line with ``arrival_s`` (float,
     offset from replay start) and either ``prompt`` (token ids) or
@@ -189,8 +235,14 @@ def serve_http(params, cfg, ctx, args, log=print, sampling=None, draft=None):
     svc = Service(eng, ServiceConfig(queue_depth=args.queue_depth,
                                      default_deadline_s=args.deadline_s),
                   admission=admission)
+    # attach AFTER the warmup request so the trace starts at the first
+    # client-visible submit
+    tracer = _attach_tracer(eng, args.trace_dir)
+    prof = _start_profiler(args.profile_dir, log)
     run_http(svc, host=args.host, port=args.port, log=log,
              watchdog_s=args.watchdog_s or None)
+    _stop_profiler(prof, args.profile_dir, log)
+    _write_tracer(tracer, args.trace_dir, log)
     return svc
 
 
@@ -215,9 +267,13 @@ def run_engine(params, cfg, ctx, args, log=print, sampling=None, draft=None):
         raise SystemExit(f"trace needs max-seq >= {need}, got {args.max_seq}")
 
     eng = build_engine(params, cfg, ctx, args, sampling=sampling, draft=draft)
+    tracer = _attach_tracer(eng, args.trace_dir)
+    prof = _start_profiler(args.profile_dir, log)
     t0 = time.monotonic()
     results = eng.run(reqs, arrivals_s=arrivals)
     wall = time.monotonic() - t0
+    _stop_profiler(prof, args.profile_dir, log)
+    _write_tracer(tracer, args.trace_dir, log)
 
     stats = {
         **summarize_results(results, wall),
@@ -318,6 +374,16 @@ def main(argv=None):
                          "chaos testing / memory-capped deployments")
     ap.add_argument("--trace", default=None,
                     help="JSONL request trace to replay (engine mode)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="write per-request span traces here after the run: "
+                         "trace.json (Chrome trace-event JSON, loadable in "
+                         "Perfetto or chrome://tracing) plus spans.jsonl "
+                         "(engine mode, trace replay or --http)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="wrap the engine run in jax.profiler.trace and "
+                         "write the device profile here (engine mode; "
+                         "degrades to a log line if the backend has no "
+                         "profiler)")
     ap.add_argument("--http", action="store_true",
                     help="serve over HTTP with SSE token streaming instead "
                          "of replaying a trace (implies --engine; blocks "
@@ -362,6 +428,9 @@ def main(argv=None):
     if args.page_size and not args.engine:
         ap.error("--page-size needs --engine (the lockstep loop has no "
                  "slot pool to page)")
+    if (args.trace_dir or args.profile_dir) and not args.engine:
+        ap.error("--trace-dir/--profile-dir need --engine (spans and phase "
+                 "attribution are engine-step concepts)")
     use_hqp = args.hqp or args.load_artifact is not None
     if args.spec_k:
         if not args.engine:

@@ -8,8 +8,10 @@ sweep.  ``AdmissionController`` closes that loop with the measurements
 the engine already produces:
 
   * ``observe(prefill_tokens, decode_tokens, wall_s)`` — fed one engine
-    step at a time (the service wraps ``Engine.step`` and passes the
-    stats deltas), it maintains two EWMAs: aggregate prefill throughput
+    step at a time via ``observe_step(Engine.last_step)`` (the engine's
+    own phase-time attribution; the service no longer re-times the step
+    with a parallel clock read), it maintains two EWMAs: aggregate
+    prefill throughput
     and aggregate decode throughput, in tokens/second.  Separate rates
     because the two phases have very different cost per token (a prefill
     chunk amortizes weights over many tokens; decode is one token per
@@ -113,6 +115,20 @@ class AdmissionController:
             self.decode_tok_s = (r if self.decode_tok_s is None
                                  else (1 - a) * self.decode_tok_s + a * r)
             self._n_decode += 1
+
+    def observe_step(self, last_step) -> None:
+        """Fold ``Engine.last_step`` (the engine's own phase-time
+        attribution, measured on the engine's injectable clock around the
+        step it describes) into the EWMAs. This is the ONLY measurement
+        path in serving: the service hands the engine's record straight
+        here instead of re-timing ``step()`` with a second clock read and
+        re-deriving token deltas from stats — one measurement, two
+        consumers (these EWMAs and the phase histograms)."""
+        if not last_step:
+            return
+        self.observe(int(last_step.get("prefill_tokens", 0)),
+                     int(last_step.get("decode_tokens", 0)),
+                     float(last_step.get("wall_s", 0.0)))
 
     @property
     def warm(self) -> bool:

@@ -72,6 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.analysis.invariants import declare_invariants
 from repro.kernels.kv_layout import page_count
 from repro.models import lm
@@ -167,9 +168,16 @@ class Engine:
                  draft_ctx: Optional[RunContext] = None,
                  draft_manifest=None, page_size: Optional[int] = None,
                  total_pages: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 clock=telemetry.default_clock):
         """``sampling``: temperature/top-k/seeded sampling for every decode
         surface (None = greedy, the bit-identical-to-serial default).
+
+        ``clock``: the injectable monotonic clock behind every timestamp
+        the engine takes — request lifecycle times, per-step phase
+        attribution (``last_step``), and span recording. The service
+        layer re-points it at its own clock on attach so one fake clock
+        drives the whole plane in tests.
 
         ``draft_params`` switches on SPECULATIVE mode: ``params`` becomes
         the verifier (bf16 parent), ``draft_params`` the drafter (the HQP
@@ -267,6 +275,16 @@ class Engine:
         self.waiting: List[Request] = []
         self._uid = itertools.count()
         self.ticks = 0
+        self.clock = clock
+        # optional telemetry.SpanRecorder — a passive sink fed engine
+        # timestamps; None costs nothing on the hot path
+        self.tracer: Optional[telemetry.SpanRecorder] = None
+        # per-step measurement surface: {"wall_s", "phases",
+        # "prefill_tokens", "decode_tokens"} — the service feeds the
+        # admission EWMA and the phase histograms from this instead of
+        # re-measuring around step()
+        self.last_step: Optional[dict] = None
+        self._ph: Dict[str, float] = {}
         # optional per-token sink (the service layer's streaming hook):
         # called as on_token(uid, token) from _emit for EVERY emitted token,
         # before finish bookkeeping — so a streaming front door sees tokens
@@ -575,7 +593,9 @@ class Engine:
         # could collide with the internal counter and alias two requests
         uid = next(self._uid)
         req = dataclasses.replace(request, uid=uid, prompt=prompt)
-        req._t_submit = time.monotonic()   # type: ignore[attr-defined]
+        req._t_submit = self.clock()       # type: ignore[attr-defined]
+        if self.tracer is not None:
+            self.tracer.submit(uid, req._t_submit, int(prompt.size))
         self.waiting.append(req)
         return uid
 
@@ -593,10 +613,16 @@ class Engine:
             if req.uid == uid:
                 del self.waiting[i]
                 self.stats["cancelled"] += 1
+                if self.tracer is not None:
+                    self.tracer.finish(uid, self.clock(), "cancelled")
                 return True
         for slot in self.slots:
             if slot.stage != FREE and slot.result is not None \
                     and slot.result.uid == uid:
+                if self.tracer is not None:
+                    self.tracer.finish(uid, self.clock(), "cancelled",
+                                       n_tokens=len(slot.result.tokens),
+                                       pages_held=len(slot.pages))
                 slot.stage = FREE
                 slot.result = None
                 slot.prompt = None
@@ -635,17 +661,22 @@ class Engine:
             slot.prefill_done = pos0
             slot.eos_id = req.eos_id
             slot.max_new_tokens = req.max_new_tokens
+            t_admit = self.clock()
             slot.result = RequestResult(
                 uid=req.uid, prompt_len=int(req.prompt.size), tokens=[],
                 finish_reason="", t_submit=req._t_submit,
-                t_admit=time.monotonic())
+                t_admit=t_admit)
+            if self.tracer is not None:
+                self.tracer.admit(req.uid, t_admit, slot.idx)
             self._fault_phase = None
 
     def _emit(self, slot: _Slot, tok: int,
               finished: List[RequestResult]) -> None:
         res = slot.result
         if not res.tokens:
-            res.t_first_token = time.monotonic()
+            res.t_first_token = self.clock()
+            if self.tracer is not None:
+                self.tracer.first_token(res.uid, res.t_first_token)
         res.tokens.append(tok)
         if self.on_token is not None:
             self.on_token(res.uid, tok)
@@ -653,7 +684,11 @@ class Engine:
         done_len = len(res.tokens) >= slot.max_new_tokens
         if done_eos or done_len:
             res.finish_reason = "eos" if done_eos else "length"
-            res.t_finish = time.monotonic()
+            res.t_finish = self.clock()
+            if self.tracer is not None:
+                self.tracer.finish(res.uid, res.t_finish, res.finish_reason,
+                                   n_tokens=len(res.tokens),
+                                   pages_held=len(slot.pages))
             finished.append(res)
             slot.stage = FREE          # eviction: slot reusable next tick
             slot.result = None
@@ -704,17 +739,45 @@ class Engine:
         REPRO_DEBUG_WINDOW guard or allocator refcount asserts — those
         are engine bugs, and blaming the request they happened to fire
         on would hide them), and any fault the engine cannot attribute
-        to requests (``_fault_phase`` unset)."""
+        to requests (``_fault_phase`` unset).
+
+        Every step leaves its measurement behind in ``last_step``:
+        wall time, the per-phase breakdown (admit / prefill dispatch /
+        decode scan / host sync / token fanout), and the step's
+        prefill/decode token deltas — the single source the service
+        layer feeds to both the admission EWMA and the phase
+        histograms."""
         self._fault_phase = None
+        self._ph = {}
+        p0 = self.stats["prefill_tokens"]
+        a0 = self.stats["accepted_tokens"]
+        t0 = self.clock()
         try:
-            return self._step_inner()
+            out = self._step_inner()
         except AssertionError:
             raise
         except Exception:
-            return self._absorb_fault()
+            out = self._absorb_fault()
+        wall = self.clock() - t0
+        self._ph["total"] = wall
+        self.last_step = {
+            "wall_s": wall,
+            "phases": self._ph,
+            "prefill_tokens": self.stats["prefill_tokens"] - p0,
+            "decode_tokens": self.stats["accepted_tokens"] - a0,
+        }
+        if self.tracer is not None:
+            self.tracer.span("step", None, t0, t0 + wall,
+                             **{k: round(v, 9)
+                                for k, v in self._ph.items()})
+        return out
 
     def _step_inner(self) -> List[RequestResult]:
+        clk = self.clock
+        ph = self._ph
+        t_in = clk()
         self._admit()
+        ph["admit"] = clk() - t_in
         prefilling = [s.idx for s in self.slots if s.stage == PREFILL]
         decoding = [s.idx for s in self.slots if s.stage == DECODE]
         action = self.scheduler.next_action(prefilling, decoding)
@@ -722,6 +785,7 @@ class Engine:
 
         if action.kind == PREFILL:
             slot = self.slots[action.slot]
+            uid = slot.result.uid
             self._fault_phase = ("slots", [action.slot])
             lo, hi = self.scheduler.chunk_bounds(slot.prompt.size,
                                                  slot.prefill_done)
@@ -730,6 +794,7 @@ class Engine:
             # the chunk's last query sits at absolute position hi-1
             self._debug_check_window(window, hi, "prefill")
             table = self._dispatch_table()
+            t_d0 = clk()
             if self.spec is not None:
                 last_logits, self.draft_pool, self.pool = \
                     self._spec_prefill_fn(
@@ -739,9 +804,12 @@ class Engine:
                 last_logits, self.pool = self._prefill_fn(
                     self.params, self.pool, table, jnp.int32(slot.idx),
                     chunk, window)
+            t_d1 = clk()
+            ph["prefill_dispatch"] = t_d1 - t_d0
             slot.prefill_done = hi
             self.stats["prefill_ticks"] += 1
             self.stats["prefill_tokens"] += hi - lo
+            emitted_tail = 0
             if hi == slot.prompt.size:
                 if self.paged and self.prefix is not None:
                     # the prompt's KV is complete: register every page-
@@ -753,15 +821,29 @@ class Engine:
                                         ins // self.page_size)
                     self._note_pages()
                 tok = self._first_token(last_logits[0], hi)
+                t_s1 = clk()
+                ph["host_sync"] = t_s1 - t_d1
                 self.stats["host_syncs"] += 1
                 # the speculative healing chunk re-feeds [prev, last]: after
                 # prefill, pos-1 holds the last prompt token
                 slot.prev_token = int(slot.prompt[-1])
+                emitted_tail = 1
+                # span before the tail _emit: a max_new_tokens=1 request
+                # finishes inside it, and its finish instant must account
+                # for this chunk's token
+                if self.tracer is not None:
+                    self.tracer.span("prefill", uid, t_d0, t_s1,
+                                     lo=lo, hi=hi, tokens=emitted_tail)
                 self._emit(slot, tok, finished)
+                ph["token_fanout"] = clk() - t_s1
+            elif self.tracer is not None:
+                self.tracer.span("prefill", uid, t_d0, clk(),
+                                 lo=lo, hi=hi, tokens=emitted_tail)
         elif action.kind == DECODE and self.spec is not None:
             finished = self._spec_decode(action, finished)
         elif action.kind == DECODE:
             k_steps = self.scheduler.cfg.decode_steps
+            t_d0 = clk()
             tokens = np.zeros((self.n_slots, 1), np.int32)
             active = np.zeros((self.n_slots,), bool)
             eos = np.full((self.n_slots,), -1, np.int32)
@@ -796,7 +878,11 @@ class Engine:
                 self.params, self.pool, self._dispatch_table(active),
                 jnp.asarray(tokens), jnp.asarray(active), jnp.asarray(eos),
                 jnp.asarray(budget), window)
+            t_d1 = clk()
+            ph["decode_scan"] = t_d1 - t_d0
             toks, emitted = np.asarray(toks), np.asarray(emitted)
+            t_s1 = clk()
+            ph["host_sync"] = t_s1 - t_d1
             self.stats["host_syncs"] += 1
             self.stats["device_steps"] += k_steps
             # every slot live at dispatch burns all k_steps device steps —
@@ -804,10 +890,23 @@ class Engine:
             # under-counted device work); emitted is what actually landed
             self.stats["drafted_tokens"] += k_steps * len(action.slots)
             self.stats["accepted_tokens"] += int(emitted.sum())
+            # scan spans are recorded BEFORE fanout: _emit fires terminal
+            # finish instants, and the finish must account for every token
+            # its work spans carry (the trace smoke asserts this). The span
+            # therefore covers dispatch..host-sync; fanout is engine-side
+            # bookkeeping attributed to the step track.
+            if self.tracer is not None:
+                per_slot = emitted.sum(axis=0)
+                for i in action.slots:
+                    self.tracer.span("decode", self.slots[i].result.uid,
+                                     t_d0, t_s1, tokens=int(per_slot[i]),
+                                     k_steps=k_steps)
             for t in range(k_steps):
                 for i in action.slots:
                     if emitted[t, i]:
                         self._emit(self.slots[i], int(toks[t, i]), finished)
+            t_f1 = clk()
+            ph["token_fanout"] = t_f1 - t_s1
             self.stats["decode_ticks"] += 1
             self.stats["decode_slot_steps"] += int(emitted.sum())
 
@@ -826,6 +925,10 @@ class Engine:
             if not res.t_first_token:
                 res.t_first_token = now
             res.t_finish = now
+            if self.tracer is not None:
+                self.tracer.finish(res.uid, now, "error",
+                                   n_tokens=len(res.tokens),
+                                   pages_held=len(slot.pages))
             finished.append(res)
         slot.stage = FREE
         slot.result = None
@@ -879,7 +982,7 @@ class Engine:
         self._fault_phase = None
         if phase is None:
             raise          # no request to blame: let the caller see it
-        now = time.monotonic()
+        now = self.clock()
         finished: List[RequestResult] = []
         kind, who = phase
         pool_dead = self._pool_deleted()
@@ -888,6 +991,8 @@ class Engine:
             # live — synthesize its error result directly
             req = who
             self.stats["faults"] += 1
+            if self.tracer is not None:
+                self.tracer.finish(req.uid, now, "error")
             finished.append(RequestResult(
                 uid=req.uid, prompt_len=int(req.prompt.size), tokens=[],
                 finish_reason="error", t_submit=req._t_submit, t_admit=now,
@@ -915,6 +1020,9 @@ class Engine:
         deepest slot's verify writes stay inside the cache (the vmapped KV
         scatter clamps out-of-range starts, which would corrupt valid
         history)."""
+        clk = self.clock
+        ph = self._ph
+        t_d0 = clk()
         prev = np.zeros((self.n_slots, 1), np.int32)
         tokens = np.zeros((self.n_slots, 1), np.int32)
         active = np.zeros((self.n_slots,), bool)
@@ -952,19 +1060,37 @@ class Engine:
                 self.pool, self._dispatch_table(active), jnp.asarray(prev),
                 jnp.asarray(tokens), jnp.asarray(active), jnp.asarray(eos),
                 jnp.asarray(budget), k_eff, c_eff, window)
+        t_d1 = clk()
+        ph["decode_scan"] = t_d1 - t_d0
         toks, emitted = np.asarray(toks), np.asarray(emitted)
+        n_acc, n_drafted = np.asarray(n_acc), np.asarray(n_drafted)
+        t_s1 = clk()
+        ph["host_sync"] = t_s1 - t_d1
         self.stats["host_syncs"] += 1
         # k_eff drafter invocations (healing chunk included) + 1 verify
         # per cycle
         self.stats["device_steps"] += c_eff * (k_eff + 1)
-        self.stats["drafted_tokens"] += int(np.asarray(n_drafted).sum())
-        self.stats["accepted_tokens"] += int(np.asarray(n_acc).sum())
+        self.stats["drafted_tokens"] += int(n_drafted.sum())
+        self.stats["accepted_tokens"] += int(n_acc.sum())
+        # span before fanout: _emit fires terminal finish instants, and the
+        # finish must account for every token its work spans carry (span
+        # covers dispatch..host-sync; fanout is the step track's phase)
+        if self.tracer is not None:
+            per_slot = emitted.sum(axis=0)
+            for i in action.slots:
+                self.tracer.span("spec", self.slots[i].result.uid,
+                                 t_d0, t_s1, tokens=int(per_slot[i]),
+                                 drafted=int(n_drafted[i]),
+                                 accepted=int(n_acc[i]),
+                                 k=k_eff, cycles=c_eff)
         # nonzero is row-major (t ascending), so per-slot emission order is
         # preserved without scanning all c*(k+1) x n_slots cells in Python
         for t, i in zip(*np.nonzero(emitted)):
             slot = self.slots[i]
             slot.prev_token = slot.last_token
             self._emit(slot, int(toks[t, i]), finished)
+        t_f1 = clk()
+        ph["token_fanout"] = t_f1 - t_s1
         self.stats["decode_ticks"] += 1
         self.stats["decode_slot_steps"] += int(emitted.sum())
         return finished
@@ -991,12 +1117,12 @@ class Engine:
                    if arrival_ticks is not None else [0] * len(requests))
         pending = sorted(zip(offsets, range(len(requests))), key=lambda p: p[0])
         by_wall = arrivals_s is not None
-        t0 = time.monotonic()
+        t0 = self.clock()
         tick0 = self.ticks          # offsets are relative to THIS run's start
         uid_to_index: Dict[int, int] = {}
         results: Dict[int, RequestResult] = {}
         while pending or self.has_work:
-            now = (time.monotonic() - t0) if by_wall else self.ticks - tick0
+            now = (self.clock() - t0) if by_wall else self.ticks - tick0
             while pending and pending[0][0] <= now:
                 _, i = pending.pop(0)
                 uid_to_index[self.submit(requests[i])] = i
@@ -1014,17 +1140,31 @@ class Engine:
 
 
 # ------------------------------------------------------------------- stats
+def latency_histogram(values_s: Sequence[float]) -> Dict[str, Any]:
+    """Seconds -> the shared fixed-bucket latency histogram (JSON form);
+    every latency/TTFT distribution in BENCH_serving.json uses these
+    buckets so bench_diff can compare shapes across baselines."""
+    h = telemetry.Histogram("latency_s",
+                            buckets=telemetry.schema.LATENCY_BUCKETS_S)
+    for v in values_s:
+        h.observe(v)
+    return h.to_dict()
+
+
 def summarize_results(results: Dict[int, RequestResult],
-                      wall_s: float) -> Dict[str, float]:
+                      wall_s: float) -> Dict[str, Any]:
     """Throughput + nearest-rank latency/TTFT percentiles over a finished
-    result set (shared by `serve --engine` and the serving bench). An empty
-    result set (a bench variant whose requests all failed admission, or a
-    zero-request trace) yields a zeroed summary instead of an IndexError
-    from the nearest-rank lookup."""
+    result set (shared by `serve --engine` and the serving bench), plus
+    the full latency/TTFT distributions as fixed-bucket histograms. An
+    empty result set (a bench variant whose requests all failed admission,
+    or a zero-request trace) yields a zeroed summary instead of an
+    IndexError from the nearest-rank lookup."""
     if not results:
         return {"n_requests": 0, "out_tokens": 0, "tokens_per_s": 0.0,
                 "latency_p50_ms": 0.0, "latency_p95_ms": 0.0,
-                "ttft_p50_ms": 0.0, "ttft_p95_ms": 0.0}
+                "ttft_p50_ms": 0.0, "ttft_p95_ms": 0.0,
+                "latency_hist": latency_histogram(()),
+                "ttft_hist": latency_histogram(())}
     lat = sorted(r.latency_s for r in results.values())
     ttft = sorted(r.ttft_s for r in results.values())
 
@@ -1040,6 +1180,8 @@ def summarize_results(results: Dict[int, RequestResult],
         "latency_p95_ms": pct(lat, 95) * 1e3,
         "ttft_p50_ms": pct(ttft, 50) * 1e3,
         "ttft_p95_ms": pct(ttft, 95) * 1e3,
+        "latency_hist": latency_histogram(lat),
+        "ttft_hist": latency_histogram(ttft),
     }
 
 

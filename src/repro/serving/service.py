@@ -50,6 +50,12 @@ events:
   GET /healthz | /stats
       200  {"status": "ok|draining", "slots_active": ..., "queued": ...,
             "service": {...}, "engine": {...}}
+  GET /metrics
+      200  text/plain Prometheus exposition: every Engine.stats /
+           Service.stats key (declared in repro.telemetry.schema) plus
+           the per-step phase histograms and request TTFT/latency
+           histograms — rendered on the pump thread via a ("metrics",
+           fut) inbox op like every other service touch.
 
 The engine is not thread-safe and JAX dispatch must stay on one thread, so
 ALL service work runs on a dedicated pump thread (``Service.step`` in a
@@ -81,6 +87,7 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import telemetry
 from repro.serving.admission import AdmissionController
 from repro.serving.engine import FREE, Engine, Request
 
@@ -93,6 +100,9 @@ class ServiceConfig:
                                     # in-flight bound = n_slots + queue_depth
     default_deadline_s: Optional[float] = None   # per-request override wins
     retry_after_s: float = 0.25     # advertised on 429 responses
+    telemetry: bool = True          # metrics registry + phase/latency
+                                    # histograms (GET /metrics); off for the
+                                    # bench overhead-control phase
 
 
 class Ticket:
@@ -166,6 +176,43 @@ class Service:
         # for its status code and (honest) Retry-After
         self.last_shed: Dict[str, Any] = {}
         engine.on_token = self._on_token
+        # ONE clock drives the whole plane: lifecycle timestamps, span
+        # recording, and phase attribution all read the service's
+        # injectable clock once the engine is attached (tests inject a
+        # fake clock here and everything downstream stays deterministic)
+        engine.clock = self.clock
+        self.registry: Optional[telemetry.MetricsRegistry] = None
+        self._phase_hists: Dict[str, telemetry.Histogram] = {}
+        self._ttft_hist: Optional[telemetry.Histogram] = None
+        self._latency_hist: Optional[telemetry.Histogram] = None
+        if self.cfg.telemetry:
+            sch = telemetry.schema
+            reg = self.registry = telemetry.MetricsRegistry()
+            reg.register_stats(sch.SERVICE_PREFIX, self.stats,
+                               sch.SERVICE_STATS)
+            reg.register_stats(sch.ENGINE_PREFIX, engine.stats,
+                               sch.ENGINE_STATS)
+            for phase in sch.PHASES:
+                self._phase_hists[phase] = reg.histogram(
+                    sch.PHASE_HISTOGRAM,
+                    "per-engine-step wall time by phase (seconds)",
+                    buckets=sch.PHASE_BUCKETS_S, phase=phase)
+            self._ttft_hist = reg.histogram(
+                sch.TTFT_HISTOGRAM,
+                "submit-to-first-token latency (seconds)",
+                buckets=sch.LATENCY_BUCKETS_S)
+            self._latency_hist = reg.histogram(
+                sch.LATENCY_HISTOGRAM,
+                "submit-to-finish latency (seconds)",
+                buckets=sch.LATENCY_BUCKETS_S)
+
+    def render_metrics(self) -> str:
+        """Prometheus text exposition of every stat + histogram. Called
+        on whatever thread owns the service (the pump, for the HTTP
+        front door) — rendering reads the live dicts directly."""
+        if self.registry is None:
+            return "# telemetry disabled (ServiceConfig.telemetry=False)\n"
+        return self.registry.render()
 
     # ------------------------------------------------------------- admission
     @property
@@ -219,11 +266,13 @@ class Service:
         if self.draining:
             self.stats["shed"] += 1
             self.last_shed = {"reason": "draining", "retry_after_s": None}
+            self._trace_shed("draining")
             return None
         if self.saturated:
             self.stats["shed"] += 1
             self.last_shed = {"reason": "saturated",
                               "retry_after_s": self._retry_after()}
+            self._trace_shed("saturated")
             return None
         if deadline_s is None:
             deadline_s = self.cfg.default_deadline_s
@@ -241,6 +290,7 @@ class Service:
                 self.last_shed = {"reason": "infeasible",
                                   "retry_after_s": verdict.retry_after_s,
                                   "predicted_s": verdict.predicted_s}
+                self._trace_shed("infeasible")
                 return None
         now = self.clock()
         uid = self.engine.submit(request)
@@ -253,6 +303,13 @@ class Service:
         self.stats["queue_peak"] = max(self.stats["queue_peak"],
                                        len(self.engine.waiting))
         return ticket
+
+    def _trace_shed(self, reason: str) -> None:
+        """Record a shed on the engine's span recorder, if one is
+        attached — sheds never reach the engine, so only the service can
+        put them on the trace timeline."""
+        if self.engine.tracer is not None:
+            self.engine.tracer.shed(self.clock(), reason)
 
     # ------------------------------------------------------------- lifecycle
     def _on_token(self, uid: int, tok: int) -> None:
@@ -270,6 +327,10 @@ class Service:
         ticket.t_finish = self.clock()
         self.tickets.pop(ticket.uid, None)
         self.stats[counter] += 1
+        if self._latency_hist is not None:
+            self._latency_hist.observe(ticket.latency_s)
+            if ticket.ttft_s is not None:
+                self._ttft_hist.observe(ticket.ttft_s)
         if ticket.sink is not None:
             lat = ticket.latency_s
             ttft = ticket.ttft_s
@@ -323,24 +384,28 @@ class Service:
         results arrive with ``finish_reason="error"``); anything that
         still escapes ``Engine.step`` is absorbed here by failing every
         live request — one poisoned tick must never kill the owner
-        thread. Throughput observations feed the admission controller."""
+        thread. The engine's own per-step measurement
+        (``Engine.last_step``) feeds BOTH the admission controller's
+        EWMAs and the phase histograms — one clock read per step, two
+        consumers, no service-side re-timing."""
         self.expire_deadlines()
         if not self.engine.has_work:
             return 0
         n = 0
-        estats = self.engine.stats
-        p0, d0 = estats["prefill_tokens"], estats["accepted_tokens"]
-        t0 = self.clock()
         try:
             results = self.engine.step()
         except Exception:
             self.stats["faults"] += 1
             self._fail_all()
             return 0
+        last = self.engine.last_step
         if self.admission is not None:
-            self.admission.observe(estats["prefill_tokens"] - p0,
-                                   estats["accepted_tokens"] - d0,
-                                   self.clock() - t0)
+            self.admission.observe_step(last)
+        if self._phase_hists and last:
+            for phase, dt in last["phases"].items():
+                h = self._phase_hists.get(phase)
+                if h is not None:
+                    h.observe(dt)
         for res in results:
             ticket = self.tickets.get(res.uid)
             if ticket is not None:
@@ -394,6 +459,19 @@ def _plain_response(status: str, body: dict,
     return ("\r\n".join(head) + "\r\n\r\n").encode() + payload
 
 
+def _text_response(status: str, text: str, content_type: str) -> bytes:
+    payload = text.encode()
+    head = [f"HTTP/1.1 {status}",
+            f"Content-Type: {content_type}",
+            f"Content-Length: {len(payload)}",
+            "Connection: close"]
+    return ("\r\n".join(head) + "\r\n\r\n").encode() + payload
+
+
+# what GET /metrics advertises — the version-tagged Prometheus text format
+_EXPOSITION_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+
 class HttpFrontDoor:
     """asyncio HTTP/1.1 + SSE transport over a ``Service``.
 
@@ -436,8 +514,9 @@ class HttpFrontDoor:
         self.on_wedged = on_wedged or self._exit_wedged
         # the heartbeat measures REAL wall time even under an injected test
         # clock: the watchdog exists to catch a wedged pump thread, and a
-        # frozen fake clock must not mask one
-        self._beat = time.monotonic()   # repro-lint: disable=no-raw-clock
+        # frozen fake clock must not mask one. telemetry.wall_clock is the
+        # one sanctioned raw-clock read in serving (see its docstring).
+        self._beat = telemetry.wall_clock()
         self.lock = threading.Lock()
         self._stop_pump = threading.Event()
         self._kick = threading.Event()       # wakes an idle-parked pump
@@ -484,7 +563,7 @@ class HttpFrontDoor:
         operation replies) to the event loop in one batch."""
         while not self._stop_pump.is_set():
             # wall time on purpose — see _beat in __init__
-            self._beat = time.monotonic()  # repro-lint: disable=no-raw-clock
+            self._beat = telemetry.wall_clock()
             with self.lock:
                 self._serve_inbox()
                 busy = self.service.has_work
@@ -513,8 +592,7 @@ class HttpFrontDoor:
         period = min(max(self.watchdog_s / 4.0, 0.01), 1.0)
         while not self._stop_pump.wait(period):
             # wall time on purpose — see _beat in __init__
-            stale = (time.monotonic()      # repro-lint: disable=no-raw-clock
-                     - self._beat)
+            stale = telemetry.wall_clock() - self._beat
             if stale > self.watchdog_s:
                 self.on_wedged(
                     f"[http] WATCHDOG: pump made no progress for "
@@ -541,6 +619,10 @@ class HttpFrontDoor:
                 svc.cancel(op[1])
             elif op[0] == "health":
                 self._replies.append((op[1], self._snapshot()))
+            elif op[0] == "metrics":
+                # rendered HERE so the exposition is a consistent
+                # between-steps snapshot — handlers never read live dicts
+                self._replies.append((op[1], svc.render_metrics()))
             elif op[0] == "drain":
                 svc.begin_drain()
                 self._replies.append((op[1], True))
@@ -618,6 +700,9 @@ class HttpFrontDoor:
                 return
             if method == "GET" and path in ("/healthz", "/stats"):
                 writer.write(_plain_response("200 OK", await self._health()))
+            elif method == "GET" and path == "/metrics":
+                writer.write(_text_response("200 OK", await self._metrics(),
+                                            _EXPOSITION_CONTENT_TYPE))
             elif path in ("/v1/generate", "/generate"):
                 if method != "POST":
                     writer.write(_plain_response(
@@ -671,6 +756,9 @@ class HttpFrontDoor:
 
     async def _health(self) -> dict:
         return await self._ask(("health", self._loop.create_future()))
+
+    async def _metrics(self) -> str:
+        return await self._ask(("metrics", self._loop.create_future()))
 
     def _parse_request(self, body: bytes) -> Tuple[Request, Optional[float]]:
         """Parse + validate a generate body; every rejection raises here,

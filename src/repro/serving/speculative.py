@@ -119,6 +119,8 @@ class SpecDecoder:
         self.cfg = cfg
         self.k = k
         self.cycles = cycles
+        self.last_plan = None          # (k_eff, cycles_eff) of the newest
+                                       # plan() call — see plan()
         self.draft_params = draft_params
         self.verify_params = verify_params
         self.ctx = ctx or default_ctx()
@@ -150,12 +152,18 @@ class SpecDecoder:
           dispatch shrinks instead of drafting tokens nobody can emit.
 
         ``k_eff`` is always >= 1: a live slot has budget >= 1, and
-        ``submit`` bounds prompt+budget by ``max_seq``."""
+        ``submit`` bounds prompt+budget by ``max_seq``.
+
+        The chosen plan is recorded as ``last_plan`` so telemetry (the
+        engine's spec-cycle span annotations, an operator poking at a
+        live decoder) reads the plan the dispatch actually ran rather
+        than re-deriving it."""
         avail = max_seq - 1 - max_pos
         k_eff = max(1, min(self.k, avail, max_budget))
         cyc = max(1, min(self.cycles,
                          (avail + 1) // (k_eff + 1),
                          -(-max_budget // (k_eff + 1))))
+        self.last_plan = (k_eff, cyc)
         return k_eff, cyc
 
     def _build_spec(self):

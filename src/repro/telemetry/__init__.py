@@ -1,0 +1,20 @@
+"""Serving telemetry plane: metrics registry, span recorder, clocks.
+
+Zero third-party dependencies (importable from lint rules and bare
+smoke subprocesses). See DESIGN.md §16 for the plane's invariants:
+stats dicts stay the writable source of truth, the registry reads them
+at render time, and span recording happens only on the pump thread
+through the injectable clock.
+"""
+from . import schema
+from .clock import default_clock, wall_clock
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      escape_label, hist_from_json, parse_exposition)
+from .spans import SpanRecorder, write_trace
+
+__all__ = [
+    "schema", "default_clock", "wall_clock",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "escape_label", "hist_from_json", "parse_exposition",
+    "SpanRecorder", "write_trace",
+]

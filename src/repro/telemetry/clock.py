@@ -1,0 +1,30 @@
+"""The two clocks of the serving plane, named.
+
+``default_clock`` is the injectable monotonic clock every serving
+component takes as a constructor parameter — tests replace it with a
+fake, and the ``no-raw-clock`` AST rule keeps serving modules from
+reading ``time.*`` directly once they declare the parameter.
+
+``wall_clock`` is the deliberate exception: watchdog heartbeats. A
+watchdog that beats on the injectable clock is useless — a frozen fake
+clock (or a wedged pump that stops advancing its own clock) would mask
+the exact hang the watchdog exists to catch. Routing all heartbeat
+reads through this ONE helper replaces the per-site
+``# repro-lint: disable=no-raw-clock`` escapes that used to annotate
+each read in ``serving/service.py``; this module declares no ``clock``
+parameter, so the rule does not apply here, and the escape hatch count
+in serving/ drops to zero.
+"""
+from __future__ import annotations
+
+import time
+
+__all__ = ["default_clock", "wall_clock"]
+
+default_clock = time.monotonic
+
+
+def wall_clock() -> float:
+    """Raw wall-clock read for watchdog heartbeats ONLY (see module
+    docstring); everything else must use an injected clock."""
+    return time.monotonic()

@@ -21,7 +21,7 @@ import pytest
 from repro.analysis import astlint, hlo_core, hlo_checks
 from repro.analysis.invariants import (REGISTRY, declare_invariants,
                                        spec_of)
-from repro.analysis.report import Violation, render
+from repro.analysis.report import render
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
@@ -303,6 +303,51 @@ def test_duplicate_hot_path_helper_rule():
     assert len(v) == 2                 # flagged at both sites
     assert astlint.lint_source(_DUP_GOOD,
                                "src/repro/serving/engine.py") == []
+
+
+_STATS_BAD = """
+class Service:
+    def __init__(self):
+        self.stats = {"submitted": 0, "not_a_real_key": 0}
+
+    def step(self):
+        self.stats["another_rogue"] += 1
+"""
+
+_STATS_GOOD = """
+class Service:
+    def __init__(self):
+        self.stats = {"submitted": 0, "completed": 0}
+
+    def step(self):
+        self.stats["completed"] += 1
+        for k in self.stats:          # variable keys: bench-style resets
+            self.stats[k] = 0
+"""
+
+_STATS_DISABLED = _STATS_BAD.replace(
+    'self.stats["another_rogue"] += 1',
+    'self.stats["another_rogue"] += 1'
+    '  # repro-lint: disable=stats-schema')
+
+
+def test_stats_schema_fires_on_undeclared_key():
+    """The seeded violation: a serving stats key that never made it into
+    repro.telemetry.schema would silently fall off GET /metrics."""
+    v = astlint.lint_source(_STATS_BAD, _SERVING)
+    assert [x.rule for x in v] == ["stats-schema", "stats-schema"]
+    assert "not_a_real_key" in v[0].message
+    assert "another_rogue" in v[1].message
+    assert astlint.lint_source(_STATS_GOOD, _SERVING) == []
+
+
+def test_stats_schema_inline_disable_and_scope():
+    v = astlint.lint_source(_STATS_DISABLED, _SERVING)
+    # the dict-literal rogue key still fires; the disabled line does not
+    assert [x.rule for x in v] == ["stats-schema"]
+    assert "not_a_real_key" in v[0].message
+    # scoped to serving/: bench code keeps ad-hoc result dicts
+    assert astlint.lint_source(_STATS_BAD, "benchmarks/run.py") == []
 
 
 # -------------------------------------------------- real tree + driver
